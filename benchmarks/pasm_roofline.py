@@ -1,0 +1,74 @@
+"""Beyond-paper: PASM weight-byte accounting + matmul formulation timings.
+
+The TPU-relevant win of PASM is the HBM weight-traffic reduction in
+bandwidth-bound regimes (DESIGN.md §2).  This benchmark reports, per layer
+shape, the bytes a decode step must move under dense-bf16 vs PASM-uint8 vs
+PASM-int4 storage, the implied v5e memory-roofline time, and measured
+wall-times of the dequant (weight-shared) and PAS (paper-faithful)
+formulations on this host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pas, pasm
+from repro.kernels import ops
+from repro.roofline import HBM_BW
+
+from benchmarks.common import emit, time_us
+
+SHAPES = [
+    ("qwen3.ffn", 5120, 25_600),
+    ("kimi.expert", 7168, 2048),
+    ("stablelm.attn", 2560, 2560),
+]
+
+
+def weight_bytes_table():
+    for name, K, N in SHAPES:
+        dense = K * N * 2
+        u8 = K * N + 16 * 4
+        i4 = K * N // 2 + 16 * 4
+        emit(
+            f"pasm_bytes.{name}",
+            0.0,
+            f"dense={dense} uint8={u8} int4={i4} "
+            f"roofline_us dense={dense / HBM_BW * 1e6:.1f} int4={i4 / HBM_BW * 1e6:.1f} "
+            f"(4.0x memory-term reduction)",
+        )
+
+
+def matmul_formulations():
+    """Measured: dense vs dequant(weight-shared) vs PAS-histogram (M=8 decode-ish)."""
+    K, N, M = 1024, 1024, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    t16 = pasm.quantize(w, bins=16)
+    dense = jax.jit(lambda x: x @ w)
+    dequant = jax.jit(lambda x: pas.weight_shared_matmul(x, t16))
+    pas_form = jax.jit(lambda x: pas.pasm_matmul(x, t16))
+    t_d = time_us(dense, x)
+    t_q = time_us(dequant, x)
+    t_p = time_us(pas_form, x, iters=5)
+    emit("pasm_matmul.dense", t_d)
+    emit("pasm_matmul.dequant", t_q, f"vs dense {t_q / t_d:.2f}x")
+    emit(
+        "pasm_matmul.pas_histogram",
+        t_p,
+        f"vs dense {t_p / t_d:.2f}x (B x FLOPs — the measured DESIGN.md trade-off)",
+    )
+
+
+def kernel_oracle_check():
+    """The fused kernel (interpret) agrees with its oracle at bench shapes."""
+    from repro.kernels import ref
+
+    K, N, M = 512, 256, 16
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    t = pasm.quantize(w, bins=16)
+    got = ops.pasm_matmul(x, t, interpret=True)
+    want = ref.pasm_matmul_ref(x, t.idx, t.codebook, packed=t.packed)
+    err = float(jnp.abs(got - want).max())
+    emit("pasm_kernel.allclose", 0.0, f"max_err={err:.2e}")

@@ -1,0 +1,40 @@
+"""Render the 40-cell roofline table from saved dry-run artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_FINAL = Path("experiments/dryrun_final")
+DRYRUN_DIR = _FINAL if _FINAL.exists() else Path("experiments/dryrun")
+
+
+def roofline_summary():
+    if not DRYRUN_DIR.exists():
+        emit("roofline.table", 0.0, "no dry-run artifacts (run repro.launch.dryrun --all)")
+        return
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "skipped":
+            emit(f"roofline.{f.stem}", 0.0, f"SKIP ({d['reason'][:40]})")
+            continue
+        if d.get("status") == "error" or "compute_s" not in d:
+            emit(f"roofline.{f.stem}", 0.0, "ERROR")
+            continue
+        terms = {
+            "compute": d["compute_s"],
+            "memory": d["memory_s"],
+            "collective": d["collective_s"],
+        }
+        bound = max(terms, key=terms.get)
+        step = max(terms.values())
+        ideal = d["model_flops"] / d["n_devices"] / 197e12
+        frac = ideal / max(step, 1e-30)
+        emit(
+            f"roofline.{f.stem}",
+            step * 1e6,
+            f"bound={bound} frac={frac:.3f} c={d['compute_s']*1e3:.1f}ms "
+            f"m={d['memory_s']*1e3:.1f}ms x={d['collective_s']*1e3:.1f}ms",
+        )

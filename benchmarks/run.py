@@ -1,0 +1,44 @@
+"""Benchmark runner: one function per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV rows (0.0 µs = analytical artifact).
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks import conv_bench, paper_figures, pasm_roofline, roofline_table  # noqa: E402
+
+BENCHES = [
+    ("fig7_8", paper_figures.fig7_8_standalone_pasm),
+    ("fig9_10", paper_figures.fig9_10_bins_sweep),
+    ("fig14", paper_figures.fig14_latency),
+    ("fig15_18", paper_figures.fig15_18_asic_accel),
+    ("fig19_22", paper_figures.fig19_22_fpga_accel),
+    ("table2", paper_figures.table2_macops),
+    ("conv_latency", conv_bench.conv_variants_latency),
+    ("pasm_bytes", pasm_roofline.weight_bytes_table),
+    ("pasm_matmul", pasm_roofline.matmul_formulations),
+    ("pasm_kernel", pasm_roofline.kernel_oracle_check),
+    ("roofline", roofline_table.roofline_summary),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the PASM identity end to end in 60 lines.
+
+1. Reproduce the paper's Fig 4 / Fig 6 worked example.
+2. Weight-share a real weight matrix (k-means dictionary, Han et al. style).
+3. Run the fused Pallas PASM kernel against the weight-shared baseline.
+4. Show the HBM weight-byte reduction that motivates PASM on TPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import pas, pasm
+from repro.kernels import ops, ref
+
+# -- 1. the paper's worked example (Figures 4 and 6) ------------------------
+x = jnp.array([26.7, 3.4, 4.8, 17.7, 6.1])
+bin_index = jnp.array([0, 1, 2, 3, 0], dtype=jnp.uint8)
+codebook = jnp.array([1.7, 0.4, 1.3, 2.0])  # the shared "pretrained weights"
+
+ws = pas.weight_shared_dot(x, bin_index, codebook)  # Fig 4: deref + MAC
+bins = pas.pas_accumulate(x, bin_index, 4)  # Fig 6a: PAS phase (adds only)
+out = pas.pas_postpass(bins, codebook)  # Fig 6b: B multiplies
+
+print(f"weight-shared MAC : {ws:.2f}   (paper: 98.8)")
+print(f"PAS bins          : {bins}     (paper: [32.8, 3.4, 4.8, 17.7])")
+print(f"PASM post-pass    : {out:.2f}   — identical result, 4 multiplies not 5")
+
+# -- 2. weight-share a layer -------------------------------------------------
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (1024, 512))
+t = pasm.quantize(w, bins=16)  # 16 shared values → 4-bit indices, packed
+print(
+    f"\nquantized 1024x512 f32 layer → {t.bins} bins, "
+    f"{t.compression_ratio:.1f}x smaller than bf16 in HBM"
+)
+print(f"  reconstruction |err| = {jnp.abs(w - pasm.dequantize(t)).mean():.4f}")
+
+# -- 3. the fused kernel vs the oracle ---------------------------------------
+xb = jax.random.normal(jax.random.PRNGKey(1), (8, 1024), jnp.bfloat16)
+y_kernel = ops.pasm_matmul(xb, t)  # Pallas: dequant in VMEM, never in HBM
+y_oracle = ref.pasm_matmul_ref(xb, t.idx, t.codebook, packed=t.packed)
+print(f"\nfused-kernel max err vs oracle: {jnp.abs(y_kernel - y_oracle).max():.2e}")
+
+# -- 4. why this matters on TPU ----------------------------------------------
+dense_bytes = w.size * 2
+pasm_bytes = t.nbytes_weights
+print(
+    f"\ndecode-step weight traffic: {dense_bytes} B (bf16) → {pasm_bytes} B (PASM)"
+    f" = {dense_bytes / pasm_bytes:.1f}x less HBM traffic in the bandwidth-bound regime"
+)

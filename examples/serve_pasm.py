@@ -1,0 +1,55 @@
+"""Serve a weight-shared model with batched requests (the paper's use case).
+
+Trains nothing: initializes a small qwen3-family model, applies the paper's
+k-means weight sharing, and serves a batch of requests through the
+continuous-batching engine — verifying PASM serving matches dense serving
+token-for-token (§5.3: "the results ... are identical").
+
+    PYTHONPATH=src python examples/serve_pasm.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.common import quantize_params, weight_bytes
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+
+    # paper pipeline: quantize the trained weights into a 256-entry dictionary
+    # (large B → near-lossless; B=16 trades accuracy for 4x compression)
+    qcfg = cfg.with_quant(enabled=True, bins=256, impl="dequant", min_weight_elems=1024)
+    qparams = quantize_params(params, qcfg)
+    wb = weight_bytes(qparams)
+    print(f"[serve] weight bytes: {wb['dense']} dense → {wb['stored']} stored ({wb['ratio']:.2f}x)")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 10)) for _ in range(6)]
+
+    results = {}
+    for tag, c, p in (("dense", cfg, params), ("pasm", qcfg, qparams)):
+        eng = Engine(c, p, batch_slots=3, max_seq=64)
+        reqs = [eng.submit(pr, max_new=8) for pr in prompts]
+        t0 = time.time()
+        ticks = eng.run_until_drained()
+        print(f"[serve] {tag}: {len(reqs)} reqs in {ticks} ticks ({time.time()-t0:.2f}s)")
+        results[tag] = [tuple(r.out) for r in reqs]
+
+    agree = sum(a == b for a, b in zip(results["dense"], results["pasm"]))
+    print(f"[serve] greedy outputs identical on {agree}/{len(prompts)} requests "
+          f"(256-bin dictionary ≈ lossless)")
+
+
+if __name__ == "__main__":
+    main()

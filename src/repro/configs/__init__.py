@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ArchConfig, PASMQuant, ShapeSpec  # noqa: F401
+
+_MODULES = {
+    "qwen3-32b": "qwen3_32b",
+    "nemotron-4-340b": "nemotron4_340b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "stablelm-3b": "stablelm_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-130m": "mamba2_130m",
+    "whisper-tiny": "whisper_tiny",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ArchConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+# cells skipped by design (sub-quadratic requirement / no decoder):
+# full-attention archs skip long_500k (assignment sheet; DESIGN.md §5).
+_SUBQUADRATIC = {"mamba2-130m", "recurrentgemma-2b"}
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in _SUBQUADRATIC:
+        return False, "full-attention arch: O(s²) at 524k ctx — skipped by design"
+    return True, ""
+
+
+def all_cells():
+    """The 40 assigned (arch × shape) cells, with supported flag + reason."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            ok, why = cell_supported(a, s)
+            out.append((a, s, ok, why))
+    return out

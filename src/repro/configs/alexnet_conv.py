@@ -1,0 +1,10 @@
+"""The paper's own accelerator configuration (§4): one AlexNet-style conv
+layer — 5×5 image, 15 channels, 3×3 kernel, 2 output channels, stride 1 —
+with B ∈ {4, 8, 16} weight bins.  This is the faithful-reproduction target
+for Figs 14–22; see benchmarks/ and tests/test_conv.py.
+"""
+from repro.core.conv import ConvSpec
+
+PAPER_SPEC = ConvSpec(IH=5, IW=5, C=15, KY=3, KX=3, M=2, stride=1)
+PAPER_BINS = (4, 8, 16)
+PAPER_BITWIDTHS = (8, 32)  # kernel bit-widths evaluated in the paper

@@ -1,0 +1,22 @@
+"""Core PASM library: the paper's contribution as composable JAX modules."""
+from repro.core.pasm import (  # noqa: F401
+    PASMTensor,
+    bits_for_bins,
+    dequantize,
+    kmeans_codebook,
+    logical_idx,
+    pack_int4,
+    quantize,
+    quantize_like,
+    unpack_int4,
+)
+from repro.core.pas import (  # noqa: F401
+    mac_cycles,
+    pas_accumulate,
+    pas_postpass,
+    pasm_cycles,
+    pasm_dot,
+    pasm_matmul,
+    weight_shared_dot,
+    weight_shared_matmul,
+)

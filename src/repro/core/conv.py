@@ -1,0 +1,153 @@
+"""Weight-shared convolution layer — JAX port of the paper's accelerator.
+
+The paper evaluates three accelerator variants of one AlexNet-style conv
+layer (§4, Fig 13): non-weight-shared, weight-shared, and
+weight-shared-with-PASM, each with stride, bias and ReLU (bias/activation are
+*not* shared — §4).  This module implements all three with identical
+semantics:
+
+* :func:`conv2d_direct`        — the Fig 1 pseudo-code (plain MACs)
+* :func:`conv2d_weight_shared` — Fig 3/4: dictionary lookup then MAC
+* :func:`conv2d_pasm`          — Fig 13: PAS bin-accumulate per output pixel,
+                                 then post-pass multiply with the codebook
+
+All three produce identical results on identical weights (the paper's §5.3
+claim), property-tested in ``tests/test_conv.py``.  "VALID"-style windowing
+follows the paper's loop bounds: output spans kernel-centred positions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pas as _pas
+from repro.core import pasm as _pasm
+
+__all__ = [
+    "ConvSpec",
+    "out_hw",
+    "conv2d_direct",
+    "conv2d_weight_shared",
+    "conv2d_pasm",
+    "quantize_conv_weights",
+]
+
+
+class ConvSpec(NamedTuple):
+    """Paper's accelerator dims (§4: IH=IW=5, C=15, KY=KX=3, M=2, stride=1)."""
+
+    IH: int = 5
+    IW: int = 5
+    C: int = 15
+    KY: int = 3
+    KX: int = 3
+    M: int = 2
+    stride: int = 1
+
+
+def out_hw(spec: ConvSpec) -> tuple[int, int]:
+    """Output dims under the paper's kernel-centred loop bounds (Fig 1)."""
+    oh = (spec.IH - 2 * (spec.KY // 2) + spec.stride - 1) // spec.stride
+    ow = (spec.IW - 2 * (spec.KX // 2) + spec.stride - 1) // spec.stride
+    return oh, ow
+
+
+def _im2col(image: jax.Array, spec: ConvSpec) -> jax.Array:
+    """image (C, IH, IW) → patches (OH·OW, C·KY·KX) in the paper's loop order.
+
+    Column order is (cIdx, kyIdx, kxIdx) — matching Fig 1's loop nest so that
+    index tensors flatten identically for the PASM path.
+    """
+    C, IH, IW = image.shape
+    oh, ow = out_hw(spec)
+    ky = jnp.arange(spec.KY)
+    kx = jnp.arange(spec.KX)
+    oy = jnp.arange(oh) * spec.stride
+    ox = jnp.arange(ow) * spec.stride
+    # gather indices: (oh, ow, C, KY, KX)
+    rows = oy[:, None, None, None, None] + ky[None, None, None, :, None]
+    cols = ox[None, :, None, None, None] + kx[None, None, None, None, :]
+    patches = image[
+        jnp.arange(C)[None, None, :, None, None], rows, cols
+    ]  # (oh, ow, C, KY, KX)
+    return patches.reshape(oh * ow, C * spec.KY * spec.KX)
+
+
+def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
+
+
+def conv2d_direct(
+    image: jax.Array,
+    kernel: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: ConvSpec,
+    relu: bool = False,
+) -> jax.Array:
+    """Non-weight-shared accelerator (Fig 1).  kernel: (M, C, KY, KX)."""
+    patches = _im2col(image, spec)  # (P, N)
+    w = kernel.reshape(spec.M, -1).T  # (N, M) — same (c,ky,kx) order
+    y = patches @ w  # plain MACs
+    oh, ow = out_hw(spec)
+    return _epilogue(y, bias, relu).T.reshape(spec.M, oh, ow)
+
+
+def quantize_conv_weights(
+    kernel: jax.Array, bins: int, *, iters: int = 16
+) -> tuple[jax.Array, jax.Array]:
+    """K-means weight-share a conv kernel: one dictionary per layer (paper §4).
+
+    Returns ``(codebook (B,), bin_idx (M, C, KY, KX) uint8)``.
+    """
+    flat = kernel.reshape(1, -1)  # single group = single dictionary
+    cb, idx = _pasm.kmeans_codebook(flat.T, bins, groups=1, iters=iters)
+    return cb[0], idx.reshape(kernel.shape).astype(jnp.uint8)
+
+
+def conv2d_weight_shared(
+    image: jax.Array,
+    bin_idx: jax.Array,
+    codebook: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: ConvSpec,
+    relu: bool = False,
+) -> jax.Array:
+    """Weight-shared accelerator (Figs 3/4): dereference dictionary, then MAC."""
+    kernel = codebook[bin_idx.astype(jnp.int32)]  # the extra indirection level
+    return conv2d_direct(image, kernel, bias, spec=spec, relu=relu)
+
+
+def conv2d_pasm(
+    image: jax.Array,
+    bin_idx: jax.Array,
+    codebook: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: ConvSpec,
+    relu: bool = False,
+) -> jax.Array:
+    """Weight-shared-with-PASM accelerator (Fig 13).
+
+    Per output pixel and output channel m:
+      PAS:       ``imageBin[b] += imVal`` for every (imVal, binIdx) pair
+      post-pass: ``Σ_b imageBin[b] · sk[b]``
+    Vectorized: one-hot histogram over the patch axis, then a (B,)-dot.
+    """
+    B = codebook.shape[0]
+    patches = _im2col(image, spec)  # (P, N)
+    idx = bin_idx.reshape(spec.M, -1)  # (M, N) — (c,ky,kx) flat order
+    onehot = jax.nn.one_hot(idx, B, dtype=patches.dtype)  # (M, N, B)
+    # PAS phase: imageBin[p, m, b] = Σ_n patches[p, n]·[idx[m, n] = b]
+    image_bins = jnp.einsum("pn,mnb->pmb", patches, onehot)
+    # post-pass multiply: one multiply per bin, not per element
+    y = jnp.einsum("pmb,b->pm", image_bins, codebook.astype(patches.dtype))
+    oh, ow = out_hw(spec)
+    return _epilogue(y, bias, relu).T.reshape(spec.M, oh, ow)

@@ -1,0 +1,113 @@
+"""The PASM identity: accumulate-into-bins first, multiply once per bin after.
+
+This module is the *paper-faithful algorithmic core*.  A weight-shared MAC
+computes ``result = Σ_k x[k] · codebook[idx[k]]`` directly (one multiply per
+element).  PASM (paper §2.2) re-orders it into two phases:
+
+  PAS phase   ``S[b] = Σ_{k : idx[k] = b} x[k]``      (adds only — the
+              "weighted histogram of the dictionary weight indices")
+  post-pass   ``result = Σ_b S[b] · codebook[b]``      (B multiplies total)
+
+The results are *identical* (bit-exact in integer arithmetic, equal up to
+float reassociation otherwise) — paper §5.3; property-tested in
+``tests/test_pas.py``.
+
+On TPU the PAS phase maps onto a one-hot contraction; for B bins it costs B×
+the MACs of the direct product, so it is a *compute pessimization* on a fixed
+MXU (see DESIGN.md §2 — the gate-level win does not transfer; the bandwidth
+win of carrying only indices does).  Both formulations are provided so the
+trade-off is measured rather than assumed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pasm as _pasm
+
+__all__ = [
+    "pas_accumulate",
+    "pas_postpass",
+    "pasm_dot",
+    "weight_shared_dot",
+    "pasm_matmul",
+    "weight_shared_matmul",
+    "pasm_cycles",
+    "mac_cycles",
+]
+
+
+# ---------------------------------------------------------------------------
+# 1-D (single output) — the paper's Fig 4 / Fig 6 setting
+# ---------------------------------------------------------------------------
+
+
+def pas_accumulate(x: jax.Array, idx: jax.Array, bins: int) -> jax.Array:
+    """PAS phase: bin-accumulate ``x`` keyed by weight index (paper Fig 6a).
+
+    Returns ``S`` with ``S[b] = Σ_{k : idx[k]=b} x[k]``.  Pure adds — this is
+    the circuit the paper replaces the multiplier array with.
+    """
+    return jax.ops.segment_sum(x, idx.astype(jnp.int32), num_segments=bins)
+
+
+def pas_postpass(bins_acc: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Post-pass multiply phase (paper Fig 6b): ``Σ_b S[b]·codebook[b]``."""
+    return jnp.dot(bins_acc, codebook)
+
+
+def pasm_dot(x: jax.Array, idx: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Full PASM: PAS accumulate then shared post-pass MAC."""
+    return pas_postpass(pas_accumulate(x, idx, codebook.shape[-1]), codebook)
+
+
+def weight_shared_dot(x: jax.Array, idx: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Baseline weight-shared MAC (paper Fig 3/4): dereference then MAC."""
+    return jnp.dot(x, codebook[idx.astype(jnp.int32)])
+
+
+# ---------------------------------------------------------------------------
+# 2-D (matmul) — PASM generalized to a GEMM with per-(k,n) indices
+# ---------------------------------------------------------------------------
+
+
+def pasm_matmul(x: jax.Array, t: _pasm.PASMTensor, dtype=jnp.float32) -> jax.Array:
+    """``x (M,K) @ shared-weight (K,N)`` via the PASM two-phase formulation.
+
+    ``S[m,b,n] = Σ_k x[m,k]·[idx[k,n]=b]`` then ``y[m,n] = Σ_b S[m,b,n]·cb[b]``.
+    Grouped codebooks bin-accumulate within each group independently.
+    """
+    idx = _pasm.logical_idx(t)
+    K, N = t.shape
+    G, B = t.codebook.shape
+    xg = x.astype(dtype).reshape(*x.shape[:-1], G, K // G)
+    idxg = idx.reshape(G, K // G, N)
+    # one-hot (G, Kg, N, B) contracted with x over Kg: the PAS phase.
+    onehot = jax.nn.one_hot(idxg, B, dtype=dtype)  # (G, Kg, N, B)
+    s = jnp.einsum("...gk,gknb->...gnb", xg, onehot)  # PAS bins per group
+    y = jnp.einsum("...gnb,gb->...n", s, t.codebook.astype(dtype))  # post-pass
+    return y
+
+
+def weight_shared_matmul(x: jax.Array, t: _pasm.PASMTensor, dtype=jnp.float32) -> jax.Array:
+    """Baseline: dequantize (dictionary lookup) then ordinary GEMM."""
+    w = _pasm.dequantize(t, dtype=dtype)
+    return jnp.dot(x.astype(dtype), w)
+
+
+# ---------------------------------------------------------------------------
+# cycle model (paper §2.2 / §4): N vs N + P·B
+# ---------------------------------------------------------------------------
+
+
+def mac_cycles(n_inputs: int) -> int:
+    """Fully-pipelined MAC latency: one pair per cycle → ≈ N cycles."""
+    return n_inputs
+
+
+def pasm_cycles(n_inputs: int, bins: int, pas_per_mac: int = 1) -> int:
+    """PASM latency: N-cycle PAS phase + post-pass of B per PAS sharing a MAC.
+
+    Paper example (§2.2): N=1024, B=16, 4 PAS / shared MAC → 1024 + 4·16 = 1088.
+    """
+    return n_inputs + pas_per_mac * bins

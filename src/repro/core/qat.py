@@ -1,0 +1,49 @@
+"""Quantization-aware training with weight-sharing (beyond-paper feature).
+
+The paper quantizes a *trained* network post-hoc (Han et al. k-means) and
+runs inference.  For training with PASM weights in the loop we provide a
+straight-through estimator: forward uses the codebook-snapped weight, the
+gradient flows to the dense master weight unchanged.  Codebooks can also be
+learned: gradients w.r.t. codebook entries are the sums of gradients of the
+weights assigned to each bin (the same bin-accumulate structure as PAS —
+the PASM identity applied to the backward pass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pasm as _pasm
+
+__all__ = ["ste_quantize", "codebook_grads"]
+
+
+@jax.custom_vjp
+def ste_quantize(w: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Snap each weight to its nearest codebook entry; identity gradient."""
+    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
+    return codebook[idx]
+
+
+def _ste_fwd(w, codebook):
+    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
+    return codebook[idx], (idx, codebook.shape[0])
+
+
+def _ste_bwd(res, g):
+    idx, bins = res
+    # dL/dw: straight through.  dL/dcodebook[b]: Σ of g where idx == b —
+    # a PAS bin-accumulate over the gradient tensor.
+    gcb = jax.ops.segment_sum(g.reshape(-1), idx.reshape(-1), num_segments=bins)
+    return g, gcb
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def codebook_grads(w: jax.Array, codebook: jax.Array, g: jax.Array) -> jax.Array:
+    """Explicit codebook gradient (for tests): Σ_b-binned upstream grads."""
+    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
+    return jax.ops.segment_sum(
+        g.reshape(-1), idx.reshape(-1), num_segments=codebook.shape[0]
+    )

@@ -1,0 +1,103 @@
+"""Fault tolerance: heartbeats, straggler detection, restart policy.
+
+On a real fleet every host runs the same SPMD program; coordination happens
+through (a) the distributed runtime's barrier and (b) this module's
+host-side policies.  In this single-process container the same code runs
+with n_hosts=1 and is unit-tested with synthetic timing traces.
+
+* **Heartbeat / straggler detection**: per-step wall-times are all-gathered
+  (here: recorded); hosts slower than ``k × median`` over a sliding window
+  are flagged.  The launcher's response is configurable: log, re-shard
+  around the straggler (elastic restart), or abort-and-restore.
+* **Restart policy**: exponential-backoff supervisor around the train loop;
+  any exception triggers restore-from-latest-checkpoint, preserving the
+  deterministic data stream (data pipeline is a pure function of step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+__all__ = ["StragglerDetector", "RestartPolicy", "Supervisor"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Flag hosts whose step time exceeds ``threshold ×`` the fleet median."""
+
+    n_hosts: int
+    window: int = 20
+    threshold: float = 1.5
+
+    def __post_init__(self):
+        self._times = [deque(maxlen=self.window) for _ in range(self.n_hosts)]
+
+    def record(self, host: int, step_time: float) -> None:
+        self._times[host].append(step_time)
+
+    def medians(self) -> list[float]:
+        out = []
+        for dq in self._times:
+            s = sorted(dq)
+            out.append(s[len(s) // 2] if s else 0.0)
+        return out
+
+    def stragglers(self) -> list[int]:
+        meds = [m for m in self.medians() if m > 0]
+        if not meds:
+            return []
+        fleet = sorted(meds)[len(meds) // 2]
+        return [
+            h
+            for h, m in enumerate(self.medians())
+            if m > self.threshold * fleet and m > 0
+        ]
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+
+    def delays(self):
+        d = self.backoff_s
+        for _ in range(self.max_restarts):
+            yield d
+            d *= self.backoff_mult
+
+
+class Supervisor:
+    """Run ``loop_fn(resume_step) -> last_step`` under the restart policy.
+
+    ``loop_fn`` must be restartable from a checkpoint (launch/train.py is:
+    it restores the latest manifest and the data stream is step-addressed).
+    """
+
+    def __init__(self, policy: RestartPolicy, *, sleep: Callable[[float], None] = time.sleep):
+        self.policy = policy
+        self.sleep = sleep
+        self.restarts = 0
+        self.failures: list[str] = []
+
+    def run(self, loop_fn: Callable[[Optional[int]], int], resume_step: Optional[int] = None) -> int:
+        delays = self.policy.delays()
+        while True:
+            try:
+                return loop_fn(resume_step)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa: BLE001 — supervisor boundary
+                self.failures.append(repr(e))
+                try:
+                    delay = next(delays)
+                except StopIteration:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.policy.max_restarts}; "
+                        f"failures: {self.failures}"
+                    ) from e
+                self.restarts += 1
+                self.sleep(delay)
+                resume_step = None  # loop_fn re-resolves latest checkpoint

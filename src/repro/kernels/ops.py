@@ -1,0 +1,226 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: shape padding to tile multiples, block-size selection, packed-int4
+plumbing, interpret-mode fallback on CPU, and a custom VJP so PASM layers are
+differentiable (gradient w.r.t. activations flows through the dequantized
+weight; quantized weights are leaves without gradients — QAT uses
+``repro.core.qat`` on the dense master copy instead).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pasm as _pasm
+from repro.kernels import ref as _ref
+from repro.kernels.pas_histogram import pas_matmul_kernel_call
+from repro.kernels.pasm_matmul import pasm_matmul_kernel_call
+
+__all__ = ["pasm_matmul", "pas_matmul", "matmul_flops", "pasm_hbm_bytes"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
+    bm = min(128, _round_up(M, 8))
+    bn = min(128, _round_up(N, 128))
+    bk = min(512, group_size)
+    # bk must divide group_size and be even when packed
+    while group_size % bk != 0 or (packed and bk % 2):
+        bk //= 2
+        if bk < 2:
+            raise ValueError(f"cannot tile group_size={group_size} packed={packed}")
+    return bm, bn, bk
+
+
+def _pad_operands(x, idx, bm, bn, bk, packed):
+    M, K = x.shape
+    Kp_phys, N = idx.shape
+    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    if Kp != K:
+        # padding the reduction would need codebook-aware index padding across
+        # group boundaries; block picking guarantees bk | group_size | K.
+        raise ValueError(f"K={K} must already be a multiple of bk={bk}")
+    x = jnp.pad(x, ((0, Mp - M), (0, 0))) if Mp != M else x
+    idx = jnp.pad(idx, ((0, 0), (0, Np - N))) if Np != N else idx
+    return x, idx, (M, N)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("packed", "logical_k", "gather", "interpret", "use_ref")
+)
+def _pasm_matmul_fwd_impl(
+    x, idx, codebook, *, packed, logical_k, gather, interpret, use_ref
+):
+    if use_ref:
+        return _ref.pasm_matmul_ref(x, idx, codebook, packed=packed)
+    G, B = codebook.shape
+    group_size = logical_k // G
+    bm, bn, bk = _pick_blocks(x.shape[0], logical_k, idx.shape[1], group_size, packed)
+    xp, idxp, (M, N) = _pad_operands(x, idx, bm, bn, bk, packed)
+    out = pasm_matmul_kernel_call(
+        xp,
+        idxp,
+        codebook,
+        packed=packed,
+        logical_k=logical_k,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        gather=gather,
+        interpret=interpret,
+    )
+    return out[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _pasm_matmul(x, idx, codebook, packed, gather, interpret):
+    logical_k = x.shape[-1]
+    return _pasm_matmul_fwd_impl(
+        x,
+        idx,
+        codebook,
+        packed=packed,
+        logical_k=logical_k,
+        gather=gather,
+        interpret=interpret,
+        use_ref=False,
+    )
+
+
+def _pasm_fwd(x, idx, codebook, packed, gather, interpret):
+    return _pasm_matmul(x, idx, codebook, packed, gather, interpret), (x, idx, codebook)
+
+
+def _pasm_bwd(packed, gather, interpret, res, g):
+    x, idx, codebook = res
+    w = _ref.dequant_ref(idx, codebook, packed=packed).astype(x.dtype)
+    dx = jnp.dot(g.astype(x.dtype), w.T)
+    # codebook grad: Σ of (xᵀg) entries binned by index — the PAS identity on
+    # the backward pass.  idx gets no gradient (integer).
+    xg = jnp.dot(x.T.astype(jnp.float32), g.astype(jnp.float32))  # (K, N)
+    li = _pasm.unpack_int4(idx) if packed else idx
+    K, N = li.shape
+    G, B = codebook.shape
+    seg = li.reshape(G, K // G, N).astype(jnp.int32)
+    xgg = xg.reshape(G, K // G, N)
+    dcb = jax.vmap(
+        lambda s, v: jax.ops.segment_sum(v.reshape(-1), s.reshape(-1), num_segments=B)
+    )(seg, xgg)
+    return dx, None, dcb.astype(codebook.dtype)
+
+
+_pasm_matmul.defvjp(_pasm_fwd, _pasm_bwd)
+
+
+def pasm_matmul(
+    x: jax.Array,
+    t: _pasm.PASMTensor,
+    *,
+    gather: str = "take",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x @ t`` with the fused dequant kernel.  x: (..., K) → (..., N) f32.
+
+    Differentiable in ``x`` and ``t.codebook``.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    K = t.shape[0]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    y = _pasm_matmul(x2, t.idx, t.codebook, t.packed, gather, interpret)
+    return y.reshape(*lead, t.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pas_matmul_impl(x, idx, codebook, *, interpret):
+    M, K = x.shape
+    N = idx.shape[1]
+    bm, bn, bk = _pick_blocks(M, K, N, K, packed=False)
+    xp, idxp, (M, N) = _pad_operands(x, idx, bm, bn, bk, packed=False)
+    out = pas_matmul_kernel_call(
+        xp, idxp, codebook, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:M, :N]
+
+
+def pas_matmul(
+    x: jax.Array,
+    t: _pasm.PASMTensor,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Paper-faithful PASM two-phase matmul (single dictionary, unpacked)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    idx = _pasm.logical_idx(t)
+    lead = x.shape[:-1]
+    y = _pas_matmul_impl(x.reshape(-1, t.shape[0]), idx, t.codebook, interpret=interpret)
+    return y.reshape(*lead, t.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# roofline bookkeeping helpers
+# ---------------------------------------------------------------------------
+
+
+def matmul_flops(M: int, K: int, N: int) -> int:
+    return 2 * M * K * N
+
+
+def pasm_hbm_bytes(t: _pasm.PASMTensor, M: int, act_bytes: int = 2) -> int:
+    """Bytes moved for one (M,K)@(K,N) PASM matmul: activations + idx + cb."""
+    K, N = t.shape
+    return M * K * act_bytes + t.nbytes_weights + M * N * act_bytes
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused flash attention.  q (B,Sq,H,hd); k,v (B,Sk,KV,hd) → (B,Sq,H,hd).
+
+    GQA: query heads are regrouped under their KV head so each K/V tile is
+    read once per group.  Pads Sq/Sk to tile multiples (pad keys masked).
+    """
+    from repro.kernels.flash_attention import flash_attention_kernel_call
+
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bq = min(bq, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (Sk - 1).bit_length()))
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    qg = jnp.moveaxis(q.reshape(B, Sq, KV, G, hd), 1, 3)  # (B, KV, G, Sq, hd)
+    qg = qg.reshape(B * KV, G, Sq, hd)
+    kg = jnp.moveaxis(k, 1, 2).reshape(B * KV, Sk, hd)
+    vg = jnp.moveaxis(v, 1, 2).reshape(B * KV, Sk, hd)
+    if Sqp != Sq:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        kg = jnp.pad(kg, ((0, 0), (0, Skp - Sk), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, Skp - Sk), (0, 0)))
+    o = flash_attention_kernel_call(
+        qg, kg, vg, causal=causal, sk_orig=Sk, bq=bq, bk=bk, interpret=interpret
+    )
+    o = o[:, :, :Sq].reshape(B, KV, G, Sq, hd)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: the paper-faithful PASM two-phase GEMM.
+
+This is the literal TPU mapping of the PASM circuit (paper §2.2):
+
+  PAS phase    — per k-tile, image values are accumulated into ``B`` bin
+                 accumulators that live in a VMEM scratch block
+                 (``S[m, n, b] += x[m, k]·[idx[k, n] = b]``); the bin
+                 accumulators are the VMEM analogue of the PAS register file.
+  post-pass    — at the *last* k step only, one multiply per bin folds the
+                 codebook in: ``y[m, n] = Σ_b S[m, n, b]·cb[b]`` — the
+                 "shared post-pass MAC" of the paper, amortized over the
+                 whole reduction.
+
+The PAS phase is expressed as ``x_tile @ one_hot(idx_tile)`` so it runs on
+the MXU, but the one-hot expansion makes it cost ``B×`` the MACs of a direct
+product — on a fixed systolic array the paper's gate-level win does not
+transfer (DESIGN.md §2).  This kernel exists to (a) demonstrate the faithful
+formulation end-to-end, (b) let benchmarks *measure* that trade-off against
+``pasm_matmul`` instead of assuming it.
+
+VMEM budget: scratch ``(bm, bn, B)`` f32 = 128·128·16·4 = 1 MiB at defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pas_matmul_kernel_call"]
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, s_ref, *, bins: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    idx = idx_ref[...]  # (bk, bn)
+    bm, bk = x.shape
+    bn = idx.shape[1]
+    # PAS phase: one-hot selection network. (bk, bn, B) → (bk, bn·B) so the
+    # accumulate runs as a single MXU matmul per tile.
+    onehot = (idx[:, :, None] == jax.lax.broadcasted_iota(jnp.uint8, (1, 1, bins), 2))
+    onehot = onehot.astype(x.dtype).reshape(bk, bn * bins)
+    s_ref[...] += jnp.dot(x, onehot, preferred_element_type=jnp.float32).reshape(
+        bm, bn, bins
+    )
+
+    # post-pass multiply: executed once, after all accumulation — B multiplies
+    # per output element instead of K.
+    @pl.when(k == n_k - 1)
+    def _postpass():
+        cb = cb_ref[0].astype(jnp.float32)  # (B,)
+        o_ref[...] = jnp.einsum("mnb,b->mn", s_ref[...], cb)
+
+
+def pas_matmul_kernel_call(
+    x: jax.Array,
+    idx: jax.Array,
+    codebook: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x (M,K) · idx (K,N) · codebook (1,B) → (M,N) f32`` (single dictionary).
+
+    Paper-faithful: one dictionary per layer (groups == 1).  Shape
+    preconditions as for :func:`pasm_matmul_kernel_call`.
+    """
+    M, K = x.shape
+    N = idx.shape[1]
+    G, B = codebook.shape
+    assert G == 1, "PAS-formulation kernel is paper-faithful: one dictionary"
+    n_k = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bins=B, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, B), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, idx, codebook)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: codebook-dequant-fused matmul (the production PASM path).
+
+``y = x @ W`` where ``W`` never exists in HBM: only ``log2(B)``-bit indices
+(uint8, or two 4-bit indices packed per byte) plus a ``(G, B)`` codebook are
+streamed.  Dequantization happens on the fly in VMEM, tile by tile — this is
+the TPU adaptation of the paper's insight (DESIGN.md §2): HBM weight traffic
+drops 4–8× versus bf16 weights, directly scaling the memory-roofline term in
+the bandwidth-bound regimes (decode serving) where weights dominate bytes.
+
+Tiling: grid ``(M/bm, N/bn, K/bk)`` with the reduction innermost; a VMEM
+f32 accumulator block is zeroed at ``k==0`` and written through at the last
+``k`` step.  Block shapes are MXU-aligned (multiples of 128 on N, 8/128 on
+M/K per dtype tiling).  The codebook block is ``(1, B)`` — ≤ 1 KiB, resident
+in VMEM for the whole tile loop; group selection is an index-map function of
+``k`` (requires ``group_size % bk == 0``).
+
+Weight gather strategies (``gather=``):
+  * ``"take"``    — vector gather from the VMEM codebook (default).
+  * ``"onehot"``  — ``one_hot(idx) @ codebook``: guaranteed Mosaic lowering on
+                    older toolchains, costs B extra VPU ops per element.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pasm_matmul_kernel_call"]
+
+
+def _dequant_tile(idx_tile, cb_row, gather: str, dtype):
+    """(bk, bn) uint8 indices + (B,) codebook → (bk, bn) weights."""
+    B = cb_row.shape[0]
+    if gather == "take":
+        return cb_row[idx_tile.astype(jnp.int32)].astype(dtype)
+    # one-hot contraction: Σ_b cb[b]·[idx=b] — the PAS selection network in
+    # vectorized form; guaranteed-lowerable everywhere.
+    w = jnp.zeros(idx_tile.shape, dtype=jnp.float32)
+    for b in range(B):
+        w = jnp.where(idx_tile == b, cb_row[b], w)
+    return w.astype(dtype)
+
+
+def _unpack_int4_tile(packed):
+    """(bk//2, bn) packed → (bk, bn): row 2i = lo nibble, row 2i+1 = hi."""
+    lo = packed & 0x0F
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=1)  # (bk//2, 2, bn)
+    return out.reshape(packed.shape[0] * 2, packed.shape[1])
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, packed: bool, gather: str, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx_tile = idx_ref[...]
+    if packed:
+        idx_tile = _unpack_int4_tile(idx_tile)
+    w = _dequant_tile(idx_tile, cb_ref[0], gather, x_ref.dtype)
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def pasm_matmul_kernel_call(
+    x: jax.Array,
+    idx: jax.Array,
+    codebook: jax.Array,
+    *,
+    packed: bool,
+    logical_k: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    gather: str = "take",
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call; shape plumbing/padding lives in :mod:`repro.kernels.ops`.
+
+    ``x (M, K) · idx (K or K//2, N) · codebook (G, B) → (M, N) f32``.
+    Preconditions (enforced by ops.py): M % bm == N % bn == K % bk == 0,
+    group_size % bk == 0, bk even when packed.
+    """
+    M, K = x.shape
+    N = idx.shape[1]
+    assert K == logical_k
+    G, B = codebook.shape
+    group_size = K // G
+    assert group_size % bk == 0, (group_size, bk)
+    n_k = K // bk
+
+    # index maps return BLOCK indices (scaled by block_shape internally)
+    idx_block = (bk // 2, bn) if packed else (bk, bn)
+    blocks_per_group = group_size // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, packed=packed, gather=gather, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec(idx_block, lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, B), lambda i, j, k: (k // blocks_per_group, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, idx, codebook)

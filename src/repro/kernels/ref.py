@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pasm as _pasm
+
+__all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref"]
+
+
+def dequant_ref(idx: jax.Array, codebook: jax.Array, *, packed: bool) -> jax.Array:
+    """(K, N) f32 weights from indices + (G, B) codebook."""
+    if packed:
+        idx = _pasm.unpack_int4(idx)
+    K, N = idx.shape
+    G, B = codebook.shape
+    idxg = idx.reshape(G, K // G, N)
+    w = jax.vmap(lambda cb, ix: cb[ix.astype(jnp.int32)])(codebook, idxg)
+    return w.reshape(K, N)
+
+
+def pasm_matmul_ref(
+    x: jax.Array, idx: jax.Array, codebook: jax.Array, *, packed: bool
+) -> jax.Array:
+    """Oracle for the dequant-fused kernel: dequantize then f32-accum GEMM."""
+    w = dequant_ref(idx, codebook, packed=packed).astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def pas_matmul_ref(x: jax.Array, idx: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Oracle for the PAS-formulation kernel: histogram bins then post-pass."""
+    B = codebook.shape[-1]
+    onehot = jax.nn.one_hot(idx, B, dtype=x.dtype)  # (K, N, B)
+    s = jnp.einsum(
+        "mk,knb->mnb", x, onehot, preferred_element_type=jnp.float32
+    )  # PAS bins
+    return jnp.einsum("mnb,b->mn", s, codebook.reshape(-1).astype(jnp.float32))

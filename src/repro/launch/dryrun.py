@@ -1,0 +1,345 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, prove memory fit, and extract the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 host-platform placeholder devices to build
+the 16×16 single-pod and 2×16×16 multi-pod meshes.  (Smoke tests and benches
+must NOT import this module — they want 1 device.)
+
+Scan-cost correction: XLA's cost model counts a while-loop body ONCE, so a
+scanned L-layer model under-reports FLOPs/bytes/collectives by ~L×.  Each
+cell is therefore lowered twice — the full scanned config and a small
+UNROLLED variant with 2 scan units — and the per-unit cost is solved from
+the pair:  B = unrolled₂ − scanned,  corrected = scanned + (L−1)·B.
+Memory stats come from the full scanned config (the realistic executable).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import roofline as RL
+from repro.configs import SHAPES, all_cells, cell_supported, get_config
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import axis_sizes, make_production_mesh
+from repro.models import api, sharding
+from repro.models.common import ShardCtx, quantize_params
+from repro.train import optimizer as opt
+from repro.train import step as train_step_mod
+
+DEFAULT_OUT = Path("experiments/dryrun")
+
+
+def _abstract_params(cfg: ArchConfig, dtype, quant: str, kv_bits: int = 16):
+    model = api.get_model(cfg)
+    if quant != "dense":
+        cfg_q = cfg.with_quant(enabled=True, impl="dequant", kv_bits=kv_bits)
+
+        def build(key):
+            return quantize_params(model.init_params(cfg_q, key, dtype), cfg_q)
+
+        return jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32)), cfg_q
+    return (
+        jax.eval_shape(
+            lambda k: model.init_params(cfg, k, dtype), jax.ShapeDtypeStruct((2,), jnp.uint32)
+        ),
+        cfg,
+    )
+
+
+def _unrolled_variant(cfg: ArchConfig) -> tuple[ArchConfig, int]:
+    """(2-scan-unit unrolled config, scan trip count of the full config)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_dense = min(cfg.moe.first_dense_layers, cfg.n_layers) if (cfg.moe and cfg.moe.n_experts) else 0
+        trip = cfg.n_layers - n_dense
+        small = dataclasses.replace(cfg, n_layers=n_dense + 2, scan_layers=False)
+    elif cfg.family == "ssm":
+        trip = cfg.n_layers
+        small = dataclasses.replace(cfg, n_layers=2, scan_layers=False)
+    elif cfg.family == "hybrid":
+        pat = len(cfg.hybrid.pattern)
+        trip = cfg.n_layers // pat
+        tail = cfg.n_layers - trip * pat
+        small = dataclasses.replace(cfg, n_layers=2 * pat + tail, scan_layers=False)
+    elif cfg.family == "audio":
+        assert cfg.encoder_layers == cfg.n_layers, "two-point correction assumes enc==dec depth"
+        trip = cfg.n_layers
+        small = dataclasses.replace(cfg, n_layers=2, encoder_layers=2, scan_layers=False)
+    else:
+        raise ValueError(cfg.family)
+    return small, trip
+
+
+def _lower_one(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    quant: str,
+    fsdp: bool = False,
+    microbatches: int = 1,
+    remat: bool | None = None,
+    kv_bits: int = 16,
+):
+    """Lower + compile one config.  Returns raw cost/HLO/memory artifacts."""
+    sizes = axis_sizes(mesh)
+    multi_pod = "pod" in sizes
+    batch = sharding.batch_axes(
+        multi_pod, shape.global_batch, sizes.get("data", 16), sizes.get("pod", 1)
+    )
+    model = api.get_model(cfg)
+    specs = api.input_specs(cfg, shape)
+    in_pspecs = sharding.input_pspecs(specs, batch)
+    dp = 1
+    for a in batch:
+        dp *= sizes.get(a, 1)
+    sctx = ShardCtx(batch=batch if batch else (), active=True, dp=max(dp, 1))
+    dtype = jnp.float32 if shape.kind == "train" else jnp.bfloat16
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    params_abs, cfg_used = _abstract_params(cfg, dtype, quant, kv_bits)
+    p_pspecs = sharding.param_pspecs(params_abs, sizes)
+    if fsdp:  # ZeRO-3: params also sharded over data; all-gathered per layer
+        p_pspecs = sharding.opt_state_pspecs(params_abs, p_pspecs, sizes)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            ocfg = opt.AdamWConfig()
+            opt_abs = jax.eval_shape(opt.init_opt_state, params_abs)
+            zspec = sharding.opt_state_pspecs(params_abs, p_pspecs, sizes)
+            o_pspecs = opt.OptState(step=P(), mu=zspec, nu=zspec)
+            ts = train_step_mod.make_train_step(cfg_used, ocfg, sctx, microbatches=microbatches)
+            jitted = jax.jit(
+                ts,
+                in_shardings=(p_pspecs, o_pspecs, in_pspecs),
+                out_shardings=(p_pspecs, o_pspecs, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        else:
+            caches_abs = jax.eval_shape(
+                lambda: model.init_caches(
+                    cfg_used, shape.global_batch, api.cache_len(cfg_used, shape)
+                )
+            )
+            c_pspecs = sharding.cache_pspecs(cfg_used, caches_abs, sizes, batch)
+            if shape.kind == "prefill":
+
+                def fn(params, caches, inputs):
+                    kw = {k: v for k, v in inputs.items() if k == "frontend_embeds"}
+                    return model.prefill(params, inputs["tokens"], caches, cfg_used, sctx, **kw)
+
+            else:
+
+                def fn(params, caches, inputs):
+                    return model.decode_step(params, inputs["tokens"], caches, cfg_used, sctx)
+
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_pspecs, c_pspecs, in_pspecs),
+                out_shardings=(None, c_pspecs),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_abs, caches_abs, specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    return {
+        "cost": cost,
+        "hlo": compiled.as_text(),
+        "mem": compiled.memory_analysis(),
+        "t_lower": t_lower,
+        "t_compile": t_compile,
+    }
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    quant: str = "auto",
+    mesh=None,
+    verbose: bool = True,
+    correct_scan: bool = True,
+    fsdp: bool = False,
+    microbatches: int = 1,
+    remat: bool | None = None,
+    kv_bits: int = 16,
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+    if quant == "auto":
+        # paper is inference-focused: PASM on serve cells, dense training
+        quant = "dense" if shape.kind == "train" else "pasm"
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = axis_sizes(mesh)
+    n_dev = 1
+    for v in sizes.values():
+        n_dev *= v
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    full = _lower_one(
+        cfg, shape, mesh, quant, fsdp=fsdp, microbatches=microbatches, remat=remat, kv_bits=kv_bits
+    )
+    flops = float(full["cost"].get("flops", 0.0))
+    byts = float(full["cost"].get("bytes accessed", 0.0))
+    coll = RL.parse_collective_bytes(full["hlo"]).total_bytes
+    coll_counts = RL.parse_collective_bytes(full["hlo"]).count_by_kind
+
+    if correct_scan:
+        small_cfg, trip = _unrolled_variant(cfg)
+        small = _lower_one(
+            small_cfg, shape, mesh, quant, fsdp=fsdp, microbatches=microbatches,
+            remat=remat, kv_bits=kv_bits,
+        )
+        b_flops = max(float(small["cost"].get("flops", 0.0)) - flops, 0.0)
+        b_bytes = max(float(small["cost"].get("bytes accessed", 0.0)) - byts, 0.0)
+        b_coll = max(RL.parse_collective_bytes(small["hlo"]).total_bytes - coll, 0.0)
+        flops += (trip - 1) * b_flops
+        byts += (trip - 1) * b_bytes
+        coll += (trip - 1) * b_coll
+
+    # MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D inference, per step.
+    n_params = cfg.n_active_params() if cfg.moe else cfg.n_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_params * tokens
+
+    mem = full["mem"]
+    report = RL.roofline_terms(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        n_devices=n_dev,
+        cost={"flops": flops, "bytes accessed": byts},
+        hlo_text="",  # collective bytes passed via override below
+        model_flops=model_flops,
+        extra={
+            "quant": quant,
+            "lower_s": round(full["t_lower"], 1),
+            "compile_s": round(full["t_compile"], 1),
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "scan_corrected": correct_scan,
+            "fsdp": fsdp,
+            "collective_counts_body": coll_counts,
+        },
+    )
+    # inject corrected collective bytes (roofline_terms parsed the empty string)
+    report.collective_bytes = coll
+    report.collective_s = coll / (RL.LINK_BW * RL.N_LINKS)
+    terms = {
+        "compute": report.compute_s,
+        "memory": report.memory_s,
+        "collective": report.collective_s,
+    }
+    report.bottleneck = max(terms, key=terms.get)
+
+    if verbose:
+        hbm = 16 * 2**30
+        fit = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / hbm
+        print(f"--- {arch} × {shape_name} × {mesh_name} (quant={quant}) ---")
+        print(
+            f"  args {mem.argument_size_in_bytes/2**30:.2f} GiB/dev + temp "
+            f"{mem.temp_size_in_bytes/2**30:.2f} GiB/dev = {fit*100:.0f}% of v5e HBM"
+        )
+        print(
+            f"  flops/dev {report.flops_per_device:.3e}  bytes/dev {report.bytes_per_device:.3e}  "
+            f"coll B/dev {report.collective_bytes:.3e}"
+        )
+        print(
+            f"  terms: compute {report.compute_s*1e3:.2f} ms | memory {report.memory_s*1e3:.2f} ms | "
+            f"collective {report.collective_s*1e3:.2f} ms → {report.bottleneck}-bound; "
+            f"useful-flops {report.useful_flops_frac:.2f}, roofline frac {report.roofline_fraction:.3f}"
+        )
+        print(f"  lower {full['t_lower']:.0f}s compile {full['t_compile']:.0f}s")
+    return {"arch": arch, "shape": shape_name, "status": "ok", "report": report}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", default="auto", choices=["auto", "dense", "pasm"])
+    ap.add_argument("--no-scan-correction", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="default", choices=["default", "on", "off"])
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in all_cells()]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch, shape in cells:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}_{args.quant}" + ("_fsdp" if args.fsdp else "")
+            try:
+                res = lower_cell(
+                    arch,
+                    shape,
+                    multi_pod=mp,
+                    quant=args.quant,
+                    mesh=mesh,
+                    correct_scan=not args.no_scan_correction,
+                    fsdp=args.fsdp,
+                    microbatches=args.microbatches,
+                    remat=None if args.remat == "default" else args.remat == "on",
+                    kv_bits=args.kv_bits,
+                )
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append(tag)
+                (out / f"{tag}.json").write_text(
+                    json.dumps({"arch": arch, "shape": shape, "status": "error", "error": repr(e)})
+                )
+                continue
+            if res["status"] == "ok":
+                (out / f"{tag}.json").write_text(res["report"].to_json())
+            else:
+                (out / f"{tag}.json").write_text(json.dumps(res))
+                print(f"--- {arch} × {shape}: SKIPPED ({res['reason']})")
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

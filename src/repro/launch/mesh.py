@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e pods; host-device placeholders in CI).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "axis_sizes", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)  # 256 chips
+MULTI_POD = (2, 16, 16)  # 2 pods × 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import numpy as np
+
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    return jax.make_mesh(
+        shape,
+        axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=jax.devices()[:n],
+    )
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,118 @@
+"""Training launcher: end-to-end driver with checkpoint/restart + supervision.
+
+Single-host example (the same SPMD program runs per-host on a fleet):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \\
+        --steps 200 --ckpt-dir /tmp/ckpt --resume auto
+
+Fault tolerance: the loop runs under ``ft.Supervisor`` — any failure restores
+the newest complete checkpoint and continues; the data pipeline is
+step-addressed so no batches are replayed or skipped (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import ft
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import api
+from repro.models.common import ShardCtx, quantize_params
+from repro.train import optimizer as opt
+from repro.train import step as step_mod
+
+
+def build_state(cfg, key, quant: str):
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, key)
+    if quant == "pasm" or quant == "qat":
+        qcfg = cfg.with_quant(enabled=True, impl="kernel" if quant == "pasm" else "dequant")
+        params = quantize_params(params, qcfg)
+        cfg = qcfg
+    return cfg, params
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quant", default="dense", choices=["dense", "pasm", "qat"])
+    ap.add_argument("--compress-grads", type=int, default=0, help="bins; 0=off")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ocfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+    dcfg = DataConfig(
+        seed=args.seed, vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch
+    )
+    mgr = ckpt.CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    detector = ft.StragglerDetector(n_hosts=jax.process_count())
+
+    def loop(resume_step: Optional[int]) -> int:
+        cfg_t, params = build_state(cfg, jax.random.PRNGKey(args.seed), args.quant)
+        opt_state = opt.init_opt_state(params)
+        start = 0
+        if mgr and args.resume == "auto" and ckpt.latest_step(mgr.dir) is not None:
+            (params, opt_state), manifest = mgr.restore_latest((params, opt_state))
+            start = manifest["step"]
+            print(f"[train] resumed from step {start}")
+
+        train_step = jax.jit(
+            step_mod.make_train_step(
+                cfg_t,
+                ocfg,
+                ShardCtx(),
+                microbatches=args.microbatches,
+                compress_grads_bins=args.compress_grads,
+            ),
+            donate_argnums=(0, 1),
+        )
+
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = synthetic_batch(dcfg, step)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            if (step + 1) % args.log_every == 0 or step == start:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                detector.record(0, dt)
+                tps = args.batch * args.seq / dt
+                print(
+                    f"[train] step {step+1:5d} loss {loss:.4f} "
+                    f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                    f"{dt*1e3:.0f} ms/step ({tps:,.0f} tok/s)"
+                )
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, (params, opt_state), extra={"arch": args.arch})
+        if mgr:
+            mgr.save(args.steps, (params, opt_state), extra={"arch": args.arch})
+            mgr.wait()
+        if detector.stragglers():
+            print(f"[train] stragglers detected: {detector.stragglers()}")
+        return args.steps
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=3))
+    last = sup.run(loop)
+    print(f"[train] done at step {last} (restarts: {sup.restarts})")
+    return last
+
+
+if __name__ == "__main__":
+    main()

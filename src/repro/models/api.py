@@ -1,0 +1,74 @@
+"""Model API: family dispatch, input specs, loss — one surface for all archs."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["get_model", "input_specs", "lm_loss", "frontend_spec"]
+
+
+def get_model(cfg: ArchConfig):
+    """Returns the module implementing init_params/forward/init_caches/prefill/decode_step."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+    elif cfg.family == "ssm":
+        from repro.models import ssm_lm as m
+    elif cfg.family == "hybrid":
+        from repro.models import hybrid as m
+    elif cfg.family == "audio":
+        from repro.models import encdec as m
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return m
+
+
+def cache_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """KV-cache length for a serve cell (VLM prefill also stores the patch prefix)."""
+    extra = cfg.frontend_tokens if cfg.frontend == "vit" else 0
+    return shape.seq_len + extra
+
+
+def frontend_spec(cfg: ArchConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Precomputed modality-frontend embeddings (assignment: stubs)."""
+    if cfg.frontend == "vit":
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: full-length token batch (+ frontend embeds).
+    decode: one new token; the KV/state cache specs come from
+    ``jax.eval_shape`` over ``init_caches`` (launch/dryrun.py).
+    """
+    B = shape.global_batch
+    if shape.kind == "train":
+        d = {
+            "tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+    else:  # decode: one token against a seq_len cache
+        d = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    fe = frontend_spec(cfg, B)
+    if fe is not None and shape.kind != "decode":
+        d["frontend_embeds"] = fe
+    return d
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean next-token cross-entropy (labels already shifted by the pipeline)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,197 @@
+"""Model-layer plumbing: init helpers, sharding context, PASM param surgery."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import pasm as _pasm
+
+__all__ = [
+    "ShardCtx",
+    "trunc_normal",
+    "quantize_params",
+    "param_count",
+    "Initializer",
+    "maybe_scan",
+]
+
+
+def maybe_scan(body, carry, stacked, use_scan: bool):
+    """``lax.scan`` or an unrolled python loop (same signature/results).
+
+    The unrolled form exists for the dry-run's cost-analysis correction:
+    XLA's cost model counts a while-loop body ONCE, so launch/dryrun.py
+    lowers a small unrolled variant to solve for per-layer cost (A + L·B).
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda x: x[i], stacked)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-axis naming threaded through model code for sharding constraints.
+
+    ``batch``: axes the batch dim shards over (("pod","data") multi-pod).
+    ``model``: tensor-parallel axis name.  ``active``: False → all
+    constraints are no-ops (single-device tests / examples).
+    """
+
+    batch: tuple = ("data",)
+    model: str = "model"
+    active: bool = False
+    dp: int = 1  # DP degree = local MoE-dispatch groups (keeps sorts shard-local)
+
+    def cs(self, x: jax.Array, *spec) -> jax.Array:
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    # common activation layouts
+    def act_btd(self, x):  # (batch, seq, d_model)
+        return self.cs(x, self.batch, None, None)
+
+    def act_bthd(self, x):  # (batch, seq, heads, hd) — heads TP-sharded
+        return self.cs(x, self.batch, None, self.model, None)
+
+    def act_btf(self, x):  # (batch, seq, ff) — ff TP-sharded
+        return self.cs(x, self.batch, None, self.model)
+
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(
+        dtype
+    ) * jnp.asarray(std, dtype)
+
+
+class Initializer:
+    """Sequential PRNG splitter so init code reads linearly."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def dense(self, shape, fan_in=None, dtype=jnp.float32):
+        fan_in = fan_in or shape[0]
+        return trunc_normal(self.key(), shape, fan_in ** -0.5, dtype)
+
+
+def param_count(params: Any) -> int:
+    """Logical parameter count (PASM leaves count their dense size)."""
+    n = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, _pasm.PASMTensor)
+    ):
+        if isinstance(leaf, _pasm.PASMTensor):
+            lead = leaf.idx.shape[:-2]
+            n += int(np.prod(lead, dtype=np.int64) * np.prod(leaf.shape))
+        else:
+            n += leaf.size
+    return n
+
+
+# ---------------------------------------------------------------------------
+# PASM parameter surgery: replace selected dense leaves with PASMTensor
+# ---------------------------------------------------------------------------
+
+_EXCLUDE = re.compile(
+    r"(norm|scale|bias|router|lam|A_log|ssm_D|dt_bias|conv|pos_embed)", re.IGNORECASE
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                parts.append(str(v))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_params(params: Any, cfg: ArchConfig, *, iters: int = 8) -> Any:
+    """Apply the paper's weight-sharing to a model's parameter tree.
+
+    Quantizes every ≥2-D dense leaf whose trailing-2-dim weight matrix is
+    large enough (the paper's ``B ≪ N`` efficiency rule) and which isn't an
+    excluded parameter class (norms/bias/router/... stay dense, paper §4).
+    Stacked (scan-over-layers) leaves are quantized per layer via vmap.
+    """
+    q = cfg.quant
+    if not q.enabled:
+        return params
+
+    def maybe_quantize(path, leaf):
+        name = _path_str(path)
+        if not isinstance(leaf, jax.Array) and not isinstance(leaf, jnp.ndarray):
+            return leaf
+        if leaf.ndim < 2 or _EXCLUDE.search(name):
+            return leaf
+        if "embed" in name.lower() and not q.quantize_embed:
+            return leaf
+        K, N = leaf.shape[-2], leaf.shape[-1]
+        if K * N < q.min_weight_elems:
+            return leaf
+        lead = leaf.shape[:-2]
+        flat = leaf.reshape((-1, K, N))
+
+        def quant_one(w):
+            cb, idx = _pasm.kmeans_codebook(w, q.bins, groups=q.groups, iters=iters)
+            return cb, idx
+
+        cbs, idxs = jax.vmap(quant_one)(flat)
+        bits = _pasm.bits_for_bins(q.bins)
+        packed = bits == 4
+        if packed:
+            idxs = jax.vmap(_pasm.pack_int4)(idxs)
+        kphys = idxs.shape[1]
+        return _pasm.PASMTensor(
+            idx=idxs.reshape(*lead, kphys, N),
+            codebook=cbs.reshape(*lead, q.groups, q.bins),
+            shape=(K, N),
+            bins=q.bins,
+            bits=bits,
+            packed=packed,
+        )
+
+    return jax.tree_util.tree_map_with_path(maybe_quantize, params)
+
+
+def weight_bytes(params: Any, dense_dtype_bytes: int = 2) -> dict:
+    """HBM weight bytes: dense vs PASM-stored (for the memory roofline)."""
+    dense = 0
+    stored = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, _pasm.PASMTensor)
+    ):
+        if isinstance(leaf, _pasm.PASMTensor):
+            lead = int(np.prod(leaf.idx.shape[:-2], dtype=np.int64))
+            dense += lead * int(np.prod(leaf.shape)) * dense_dtype_bytes
+            stored += leaf.idx.size + leaf.codebook.size * 4
+        else:
+            dense += leaf.size * dense_dtype_bytes
+            stored += leaf.size * dense_dtype_bytes
+    return {"dense": dense, "stored": stored, "ratio": dense / max(stored, 1)}

@@ -1,0 +1,353 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (recurrent, recurrent, attention) tiled over depth
+(recurrentgemma-2b: 26 layers = 8 scanned groups of 3 + a 2-layer recurrent
+tail).  Local attention uses a ring-buffer KV cache of ``local_window`` slots
+so the ``long_500k`` decode cell holds O(window) state, not O(S) —
+sub-quadratic end to end (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Initializer, ShardCtx, maybe_scan
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import rglru as RG
+
+__all__ = ["init_params", "forward", "init_caches", "prefill", "decode_step"]
+
+
+def _pattern(cfg: ArchConfig):
+    pat = tuple(cfg.hybrid.pattern)
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - n_groups * len(pat)
+    return pat, n_groups, tail
+
+
+def _init_recurrent(cfg: ArchConfig, ini: Initializer) -> dict:
+    D = cfg.d_model
+    W = cfg.hybrid.lru_width or D
+    return {
+        "rec_norm": jnp.zeros((D,)),
+        "rec_in": ini.dense((D, 2 * W)),  # [lru branch, gate branch]
+        "conv_w": jax.random.normal(ini.key(), (cfg.hybrid.conv_width, W)) * 0.1,
+        "conv_b": jnp.zeros((W,)),
+        "w_a": ini.dense((W, W)),
+        "b_a": jnp.zeros((W,)),
+        "w_x": ini.dense((W, W)),
+        "b_x": jnp.zeros((W,)),
+        "lam": jnp.linspace(0.5, 4.0, W),  # Λ init → decay ∈ (~0.6, ~0.999)
+        "rec_out": ini.dense((W, D), fan_in=W),
+        "ffn_norm": jnp.zeros((D,)),
+        "mlp": {
+            "w1": ini.dense((D, cfg.d_ff)),
+            "w3": ini.dense((D, cfg.d_ff)),
+            "w2": ini.dense((cfg.d_ff, D), fan_in=cfg.d_ff),
+        },
+    }
+
+
+def _init_attention(cfg: ArchConfig, ini: Initializer) -> dict:
+    D, hd = cfg.d_model, cfg.hd
+    return {
+        "attn_norm": jnp.zeros((D,)),
+        "attn": {
+            "wq": ini.dense((D, cfg.n_heads * hd)),
+            "wk": ini.dense((D, cfg.n_kv_heads * hd)),
+            "wv": ini.dense((D, cfg.n_kv_heads * hd)),
+            "wo": ini.dense((cfg.n_heads * hd, D)),
+        },
+        "ffn_norm": jnp.zeros((D,)),
+        "mlp": {
+            "w1": ini.dense((D, cfg.d_ff)),
+            "w3": ini.dense((D, cfg.d_ff)),
+            "w2": ini.dense((cfg.d_ff, D), fan_in=cfg.d_ff),
+        },
+    }
+
+
+def _init_group(cfg: ArchConfig, ini: Initializer) -> dict:
+    pat, _, _ = _pattern(cfg)
+    g = {}
+    for i, kind in enumerate(pat):
+        g[f"l{i}"] = (
+            _init_recurrent(cfg, ini) if kind == "recurrent" else _init_attention(cfg, ini)
+        )
+    return g
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    ini = Initializer(key)
+    pat, n_groups, tail = _pattern(cfg)
+    keys = jax.random.split(ini.key(), n_groups)
+    params = {
+        "embed": jax.random.normal(ini.key(), (cfg.vocab, cfg.d_model)) * 0.02,
+        "groups": jax.vmap(lambda k: _init_group(cfg, Initializer(k)))(keys),
+        "tail": [_init_recurrent(cfg, ini) for _ in range(tail)],
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "lm_head": ini.dense((cfg.d_model, cfg.vocab)),
+    }
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block forwards (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(x, p, impl):
+    return L.linear(L.swiglu(L.linear(x, p["w1"], impl), L.linear(x, p["w3"], impl)), p["w2"], impl)
+
+
+def _recurrent_fwd(x, p, cfg, sctx, impl, h0=None):
+    B, S, D = x.shape
+    W = cfg.hybrid.lru_width or D
+    xn = L.rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    branches = L.linear(xn, p["rec_in"], impl)
+    lru_in, gate = branches[..., :W], branches[..., W:]
+    lru_in = sctx.act_btf(lru_in)
+    lru_in = RG.causal_conv1d(lru_in, p["conv_w"], p["conv_b"])
+    y, h_last = RG.rg_lru_scan(lru_in, p, init_h=h0)
+    y = y * jax.nn.gelu(gate)
+    x = x + L.linear(y, p["rec_out"], impl)
+    x = x + _mlp(L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+    return sctx.act_btd(x), h_last
+
+
+def _attention_fwd(x, p, cfg, sctx, impl, cos, sin):
+    B, S, D = x.shape
+    hd = cfg.hd
+    xn = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    ap = p["attn"]
+    q = L.linear(xn, ap["wq"], impl).reshape(B, S, cfg.n_heads, hd)
+    k = L.linear(xn, ap["wk"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(xn, ap["wv"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    q = sctx.act_bthd(q)
+    o = A.gqa_attention(
+        q, k, v, causal=True, window=cfg.hybrid.local_window, chunk=min(1024, S)
+    )
+    x = x + L.linear(o.reshape(B, S, -1), ap["wo"], impl)
+    x = x + _mlp(L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+    return sctx.act_btd(x), None
+
+
+def _group_fwd(x, gp, cfg, sctx, impl, cos, sin):
+    pat, _, _ = _pattern(cfg)
+    for i, kind in enumerate(pat):
+        if kind == "recurrent":
+            x, _ = _recurrent_fwd(x, gp[f"l{i}"], cfg, sctx, impl)
+        else:
+            x, _ = _attention_fwd(x, gp[f"l{i}"], cfg, sctx, impl, cos, sin)
+    return x
+
+
+def forward(params, tokens, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), *, frontend_embeds=None):
+    from repro.models.transformer import _embed_lookup
+
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = sctx.act_btd(x)
+    S = x.shape[1]
+    cos, sin = L.rope(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def body(h, gp):
+        return _group_fwd(h, gp, cfg, sctx, impl, cos, sin), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body_fn, x, params["groups"], cfg.scan_layers)
+    for p in params["tail"]:
+        x, _ = _recurrent_fwd(x, p, cfg, sctx, impl)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x, params["lm_head"], impl)
+    return sctx.cs(logits, sctx.batch, None, sctx.model), {}
+
+
+# ---------------------------------------------------------------------------
+# decode: ring-buffer local-attention cache + LRU/conv states
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    pat, n_groups, tail = _pattern(cfg)
+    W = cfg.hybrid.lru_width or cfg.d_model
+    win = min(cfg.hybrid.local_window, seq)
+    rec = {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, W), dtype),
+    }
+    attn = {
+        "k": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.hd), dtype),
+        "slot_pos": jnp.full((win,), -1, jnp.int32),  # absolute pos per slot
+    }
+    group = {}
+    for i, kind in enumerate(pat):
+        group[f"l{i}"] = dict(rec) if kind == "recurrent" else dict(attn)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), group
+    )
+    return {
+        "groups": stacked,
+        "tail": [jax.tree.map(jnp.array, rec) for _ in range(tail)],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _recurrent_step(x, p, cfg, impl, cache):
+    W = cfg.hybrid.lru_width or cfg.d_model
+    xn = L.rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    branches = L.linear(xn, p["rec_in"], impl)
+    lru_in, gate = branches[..., :W], branches[..., W:]
+    c_out, new_win = RG.conv1d_decode_step(lru_in, p["conv_w"], p["conv_b"], cache["conv"])
+    y, h_new = RG.rg_lru_decode_step(c_out, p, cache["h"])
+    y = y * jax.nn.gelu(gate)
+    x = x + L.linear(y, p["rec_out"], impl)
+    x = x + _mlp(L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+    return x, {"h": h_new, "conv": new_win}
+
+
+def _attention_step(x, p, cfg, impl, cache, pos, cos, sin):
+    """x: (B, D) one token.  Ring-buffer local-window attention."""
+    B = x.shape[0]
+    hd = cfg.hd
+    win = cache["k"].shape[1]
+    xn = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    ap = p["attn"]
+    q = L.linear(xn, ap["wq"], impl).reshape(B, 1, cfg.n_heads, hd)
+    k = L.linear(xn, ap["wk"], impl).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = L.linear(xn, ap["wv"], impl).reshape(B, 1, cfg.n_kv_heads, hd)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    slot = pos % win
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    spos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None], (slot,))
+    # masked attention over the ring buffer (mask invalid / out-of-window)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, ck, preferred_element_type=jnp.float32) * hd ** -0.5
+    valid = (spos >= 0) & (spos >= pos - win + 1) & (spos <= pos)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pweights = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", pweights.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, cfg.n_heads * hd).astype(x.dtype)
+    x = x + L.linear(o, ap["wo"], impl)
+    x = x + _mlp(L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+    return x, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
+    from repro.models.transformer import _embed_lookup
+
+    pat, n_groups, tail = _pattern(cfg)
+    pos = caches["pos"]
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)[:, 0]
+    cos, sin = L.rope(pos[None], cfg.hd, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def body(h, inp):
+        gp, gc = inp
+        new_gc = {}
+        for i, kind in enumerate(pat):
+            if kind == "recurrent":
+                h, new_gc[f"l{i}"] = _recurrent_step(h, gp[f"l{i}"], cfg, impl, gc[f"l{i}"])
+            else:
+                h, new_gc[f"l{i}"] = _attention_step(
+                    h, gp[f"l{i}"], cfg, impl, gc[f"l{i}"], pos, cos, sin
+                )
+        return h, new_gc
+
+    x, new_groups = maybe_scan(body, x, (params["groups"], caches["groups"]), cfg.scan_layers)
+    new_tail = []
+    for p, c in zip(params["tail"], caches["tail"]):
+        x, nc = _recurrent_step(x, p, cfg, impl, c)
+        new_tail.append(nc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x, params["lm_head"], impl)[:, None, :]
+    return logits, {"groups": new_groups, "tail": new_tail, "pos": pos + 1}
+
+
+def prefill(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), **kw):
+    """Prompt pass: full-sequence forward while extracting decode states."""
+    from repro.models.transformer import _embed_lookup
+
+    pat, n_groups, tail = _pattern(cfg)
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = sctx.act_btd(x)
+    B, S, D = x.shape
+    cos, sin = L.rope(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def fill_attn_cache(k, v, cache):
+        """Write the last `win` positions into the ring buffer."""
+        winl = cache["k"].shape[1]
+        kw_ = k[:, -winl:]
+        vw = v[:, -winl:]
+        n = kw_.shape[1]
+        pos0 = S - n
+        slots = (pos0 + jnp.arange(n)) % winl
+        ck = cache["k"].at[:, slots].set(kw_.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype))
+        spos = cache["slot_pos"].at[slots].set(pos0 + jnp.arange(n))
+        return {"k": ck, "v": cv, "slot_pos": spos}
+
+    def body(h, inp):
+        gp, gc = inp
+        new_gc = {}
+        for i, kind in enumerate(pat):
+            p = gp[f"l{i}"]
+            if kind == "recurrent":
+                W = cfg.hybrid.lru_width or cfg.d_model
+                xn = L.rms_norm(h, p["rec_norm"], cfg.norm_eps)
+                branches = L.linear(xn, p["rec_in"], impl)
+                lru_in, gate = branches[..., :W], branches[..., W:]
+                conv_tail = lru_in[:, -(cfg.hybrid.conv_width - 1):, :]
+                lru_conv = RG.causal_conv1d(lru_in, p["conv_w"], p["conv_b"])
+                y, h_last = RG.rg_lru_scan(lru_conv, p)
+                y = y * jax.nn.gelu(gate)
+                h = h + L.linear(y, p["rec_out"], impl)
+                h = h + _mlp(L.rms_norm(h, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+                new_gc[f"l{i}"] = {"h": h_last, "conv": conv_tail.astype(gc[f"l{i}"]["conv"].dtype)}
+            else:
+                hd = cfg.hd
+                xn = L.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+                ap = p["attn"]
+                q = L.linear(xn, ap["wq"], impl).reshape(B, S, cfg.n_heads, hd)
+                k = L.linear(xn, ap["wk"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+                v = L.linear(xn, ap["wv"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+                q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+                o = A.gqa_attention(q, k, v, causal=True,
+                                    window=cfg.hybrid.local_window, chunk=min(1024, S))
+                h = h + L.linear(o.reshape(B, S, -1), ap["wo"], impl)
+                h = h + _mlp(L.rms_norm(h, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+                new_gc[f"l{i}"] = fill_attn_cache(k, v, gc[f"l{i}"])
+        return h, new_gc
+
+    x, new_groups = maybe_scan(body, x, (params["groups"], caches["groups"]), cfg.scan_layers)
+    new_tail = []
+    for p, c in zip(params["tail"], caches["tail"]):
+        W = cfg.hybrid.lru_width or cfg.d_model
+        xn = L.rms_norm(x, p["rec_norm"], cfg.norm_eps)
+        branches = L.linear(xn, p["rec_in"], impl)
+        lru_in, gate = branches[..., :W], branches[..., W:]
+        conv_tail = lru_in[:, -(cfg.hybrid.conv_width - 1):, :]
+        lru_conv = RG.causal_conv1d(lru_in, p["conv_w"], p["conv_b"])
+        y, h_last = RG.rg_lru_scan(lru_conv, p)
+        y = y * jax.nn.gelu(gate)
+        x = x + L.linear(y, p["rec_out"], impl)
+        x = x + _mlp(L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p["mlp"], impl)
+        new_tail.append({"h": h_last, "conv": conv_tail.astype(c["conv"].dtype)})
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x[:, -1:], params["lm_head"], impl)
+    return logits, {"groups": new_groups, "tail": new_tail, "pos": caches["pos"] + S}

@@ -1,0 +1,202 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpecs by path.
+
+Megatron-style TP on the ``model`` axis (column→row pairs per block), EP for
+MoE experts, DP over ``data`` (and ``pod``), ZeRO-1 for optimizer states.
+Rules are path-regex driven so the same table covers dense params and the
+idx/codebook leaves PASM quantization swaps in (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = [
+    "param_pspecs",
+    "cache_pspecs",
+    "batch_axes",
+    "input_pspecs",
+    "opt_state_pspecs",
+]
+
+MODEL = "model"
+
+
+def batch_axes(multi_pod: bool, global_batch: int, n_data: int = 16, n_pod: int = 2):
+    """Axes the batch dim shards over; () when the batch is too small (long_500k)."""
+    total = n_data * (n_pod if multi_pod else 1)
+    if global_batch % total == 0:
+        return ("pod", "data") if multi_pod else ("data",)
+    if global_batch % n_data == 0:
+        return ("data",)
+    return ()
+
+
+# rules: regex over the flattened path → spec for the TRAILING dims.
+# Earlier rules win.  Leading (scan/expert-stack) dims are padded with None.
+_RULES: list[tuple[str, tuple]] = [
+    # PASM leaves inherit their parent weight's layout (idx) / replicate (codebook)
+    (r"codebook$", ("__REPL__",)),
+    # MoE experts: 2-D sharding — E over model (EP), FFN hidden over data
+    # (w1/w3 (E, D, Fe): Fe sharded; w2 (E, Fe, D): Fe sharded)
+    (r"moe/w[13](/idx)?$", (MODEL, None, "data")),
+    (r"moe/w2(/idx)?$", (MODEL, "data", None)),
+    # column-parallel (output dim sharded)
+    (r"(wq|wk|wv|w1|w3|shared_w1|shared_w3|rec_in|in_proj|w_a|w_x)(/idx)?$", (None, MODEL)),
+    # row-parallel (input dim sharded)
+    (r"(wo|w2|shared_w2|rec_out|out_proj)(/idx)?$", (MODEL, None)),
+    # embeddings: vocab-sharded; lm_head column-parallel
+    (r"embed(/idx)?$", (MODEL, None)),
+    (r"lm_head(/idx)?$", (None, MODEL)),
+    (r"vproj(/idx)?$", (None, None)),
+    (r"pos_embed$", (None, None)),
+    # depthwise conv / gates / per-channel vectors: channel dim sharded
+    (r"conv_w$", (None, MODEL)),
+    (r"(conv_b|lam|b_a|b_x|ssm_norm)$", (MODEL,)),
+    (r"router$", (None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                parts.append(str(v))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int) -> P:
+    for pat, tail in _RULES:
+        if re.search(pat, path_s):
+            if tail == ("__REPL__",):
+                return P(*([None] * ndim))
+            pad = ndim - len(tail)
+            if pad < 0:  # leaf smaller than rule (e.g. smoke dims) — replicate
+                return P(*([None] * ndim))
+            return P(*([None] * pad + list(tail)))
+    return P(*([None] * ndim))  # norms, biases, scalars → replicated
+
+
+def _divisible(shape, spec: P, axis_sizes: dict) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        size = np.prod([axis_sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+        if dim % size:
+            return False
+    return True
+
+
+def param_pspecs(params: Any, axis_sizes: dict) -> Any:
+    """PartitionSpec tree matching ``params`` (PASMTensor descends into leaves).
+
+    Falls back to replication when a dim doesn't divide the mesh axis (small
+    smoke shapes) — full configs shard cleanly by construction.
+    """
+
+    def one(path, leaf):
+        s = _spec_for(_path_str(path), leaf.ndim)
+        if not _divisible(leaf.shape, s, axis_sizes):
+            return P(*([None] * leaf.ndim))
+        return s
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_pspecs(params: Any, pspecs: Any, axis_sizes: dict) -> Any:
+    """ZeRO-1: Adam moments additionally shard their largest replicated dim
+    over ``data``.  Falls back to the param spec when nothing divides."""
+
+    n_data = axis_sizes.get("data", 1)
+
+    def used_axes(spec):
+        out = set()
+        for d in spec:
+            if d is None:
+                continue
+            out.update(d if isinstance(d, tuple) else (d,))
+        return out
+
+    def one(leaf, spec):
+        if leaf.ndim == 0:
+            return P()
+        if "data" in used_axes(spec):
+            return spec  # already data-sharded (2-D expert sharding / FSDP)
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        # find the largest dim not already sharded that divides n_data
+        cands = [
+            (leaf.shape[i], i)
+            for i in range(leaf.ndim)
+            if dims[i] is None and leaf.shape[i] % n_data == 0 and leaf.shape[i] >= n_data
+        ]
+        if not cands:
+            return P(*dims)
+        _, i = max(cands)
+        dims[i] = "data"
+        return P(*dims)
+
+    return jax.tree.map(one, params, pspecs)
+
+
+def cache_pspecs(cfg: ArchConfig, caches: Any, axis_sizes: dict, batch: tuple) -> Any:
+    """KV/state cache specs.  KV heads shard over ``model`` when divisible,
+    else the sequence dim takes ``model`` (DESIGN.md §4)."""
+    tp = axis_sizes.get(MODEL, 1)
+    kv_on_model = cfg.n_kv_heads and cfg.n_kv_heads % tp == 0
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        if nd >= 4 and re.search(r"(^|/)(k|v)(_q)?$", name):
+            # (L?, B, S, KV, hd)
+            dims = [None] * nd
+            dims[-4] = batch if batch else None
+            if kv_on_model:
+                dims[-2] = MODEL
+            elif leaf.shape[-3] % tp == 0:
+                dims[-3] = MODEL
+            return P(*dims)
+        if nd >= 3 and re.search(r"(^|/)(k|v)_scale$", name):
+            # (L?, B, S, KV) — mirror the cache layout on S/KV
+            dims = [None] * nd
+            dims[-3] = batch if batch else None
+            if kv_on_model:
+                dims[-1] = MODEL
+            elif leaf.shape[-2] % tp == 0:
+                dims[-2] = MODEL
+            return P(*dims)
+        if re.search(r"ssm$", name) and nd >= 4:
+            # (L, B, H, P, N): shard P (head_dim) when divisible
+            dims = [None] * nd
+            dims[-4] = batch if batch else None
+            if leaf.shape[-2] % tp == 0:
+                dims[-2] = MODEL
+            return P(*dims)
+        if re.search(r"(conv$|^h$|/h$)", name) and nd >= 2:
+            # recurrent states: (.., B, .., channels) — shard channels on model
+            dims = [None] * nd
+            if leaf.shape[-1] % tp == 0 and leaf.shape[-1] >= tp:
+                dims[-1] = MODEL
+            return P(*dims)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def input_pspecs(specs: dict, batch: tuple) -> dict:
+    """Token/label/frontend inputs: batch-sharded on dim 0, replicated elsewhere."""
+    out = {}
+    for k, v in specs.items():
+        dims = [batch if batch else None] + [None] * (len(v.shape) - 1)
+        out[k] = P(*dims)
+    return out

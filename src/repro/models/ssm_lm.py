@@ -1,0 +1,199 @@
+"""Mamba-2 language model (SSD blocks, attention-free) — mamba2-130m."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Initializer, ShardCtx, maybe_scan
+from repro.nn import layers as L
+from repro.nn import rglru as RG  # causal_conv1d shared
+from repro.nn import ssm as S
+
+__all__ = ["init_params", "forward", "init_caches", "prefill", "decode_step"]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H
+    return d_in, H, conv_dim, proj_out
+
+
+def _init_layer(cfg: ArchConfig, ini: Initializer) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in, H, conv_dim, proj_out = _dims(cfg)
+    return {
+        "attn_norm": jnp.zeros((D,)),
+        "in_proj": ini.dense((D, proj_out)),
+        "conv_w": trunc(ini, (s.d_conv, conv_dim), 0.1),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "ssm_D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))),  # softplus⁻¹
+        "ssm_norm": jnp.zeros((d_in,)),
+        "out_proj": ini.dense((d_in, D), fan_in=d_in),
+    }
+
+
+def trunc(ini, shape, std):
+    return jax.random.normal(ini.key(), shape, jnp.float32) * std
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    ini = Initializer(key)
+    keys = jax.random.split(ini.key(), cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(ini.key(), (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": jax.vmap(lambda k: _init_layer(cfg, Initializer(k)))(keys),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "lm_head": ini.dense((cfg.d_model, cfg.vocab)),
+    }
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+def _split_proj(proj, cfg):
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + conv_dim]
+    dt = proj[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _layer_fwd(x, p, cfg, sctx, impl, state=None, conv_win=None):
+    """Full-sequence SSD layer.  Returns (y, final_ssm_state, last_conv_win)."""
+    s = cfg.ssm
+    Bsz, Sq, D = x.shape
+    d_in, H, conv_dim, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+
+    xn = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    proj = L.linear(xn, p["in_proj"], impl)
+    z, xbc, dt = _split_proj(proj, cfg)
+    if conv_win is not None:  # continue from cached inputs (not used in train)
+        pass
+    xbc_in = xbc
+    xbc = jax.nn.silu(RG.causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(Bsz, Sq, H, s.head_dim)
+    Bm = xbc[..., d_in : d_in + gn].reshape(Bsz, Sq, s.n_groups, s.d_state)
+    Cm = xbc[..., d_in + gn :].reshape(Bsz, Sq, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xs = sctx.cs(xs, sctx.batch, None, None, sctx.model)
+    y, h_final = S.ssd_scan(
+        xs, dt, A, Bm, Cm, p["ssm_D"].astype(jnp.float32),
+        chunk=min(s.chunk, Sq), init_state=state,
+    )
+    y = y.reshape(Bsz, Sq, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    y = sctx.act_btf(y)
+    out = L.linear(y, p["out_proj"], impl)
+    last_win = xbc_in[:, -(s.d_conv - 1) :, :] if Sq >= s.d_conv - 1 else None
+    return sctx.act_btd(out), h_final, last_win
+
+
+def forward(
+    params, tokens, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), *, frontend_embeds=None
+):
+    from repro.models.transformer import _embed_lookup  # PASM-aware lookup
+
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = sctx.act_btd(x)
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def body(h, lp):
+        y, _, _ = _layer_fwd(h, lp, cfg, sctx, impl)
+        return h + y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = maybe_scan(body_fn, x, params["layers"], cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x, params["lm_head"], impl)
+    return sctx.cs(logits, sctx.batch, None, sctx.model), {}
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """SSM state + conv window per layer (no KV cache — attention-free)."""
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = _dims(cfg)
+    one = {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+
+
+def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
+    from repro.models.transformer import _embed_lookup
+
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)[:, 0]  # (B, D)
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def body(h, inp):
+        lp, cache = inp
+        xn = L.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        proj = L.linear(xn, lp["in_proj"], impl)
+        z = proj[..., :d_in]
+        xbc = proj[..., d_in : d_in + conv_dim]
+        dt = proj[..., d_in + conv_dim :]
+        xbc_c, new_win = RG.conv1d_decode_step(xbc, lp["conv_w"], lp["conv_b"], cache["conv"])
+        xbc_c = jax.nn.silu(xbc_c)
+        xs = xbc_c[..., :d_in].reshape(-1, H, s.head_dim)
+        Bm = xbc_c[..., d_in : d_in + gn].reshape(-1, s.n_groups, s.d_state)
+        Cm = xbc_c[..., d_in + gn :].reshape(-1, s.n_groups, s.d_state)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, new_state = S.ssd_decode_step(
+            xs, dtv, A, Bm, Cm, lp["ssm_D"].astype(jnp.float32), cache["ssm"]
+        )
+        y = y.reshape(-1, d_in)
+        y = L.rms_norm(y * jax.nn.silu(z), lp["ssm_norm"], cfg.norm_eps)
+        out = L.linear(y, lp["out_proj"], impl)
+        new_cache = {"ssm": new_state, "conv": new_win, "pos": cache["pos"] + 1}
+        return h + out, new_cache
+
+    x, new_caches = maybe_scan(body, x, (params["layers"], caches), cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x, params["lm_head"], impl)[:, None, :]
+    return logits, new_caches
+
+
+def prefill(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), **kw):
+    """Prompt pass producing final states (uses the chunked SSD scan)."""
+    from repro.models.transformer import _embed_lookup
+
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = sctx.act_btd(x)
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+    s = cfg.ssm
+
+    def body(h, inp):
+        lp, cache = inp
+        y, h_final, last_win = _layer_fwd(h, lp, cfg, sctx, impl)
+        new_cache = {
+            "ssm": h_final,
+            "conv": last_win.astype(cache["conv"].dtype),
+            "pos": cache["pos"] + tokens.shape[1],
+        }
+        return h + y, new_cache
+
+    x, new_caches = maybe_scan(body, x, (params["layers"], caches), cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.linear(x[:, -1:], params["lm_head"], impl)
+    return logits, new_caches

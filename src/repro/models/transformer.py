@@ -1,0 +1,371 @@
+"""Decoder-only transformer LM: dense & MoE, GQA(+qk-norm), scan-over-layers.
+
+Covers assigned archs: qwen3-32b, nemotron-4-340b, phi3-medium-14b,
+stablelm-3b, deepseek-moe-16b, kimi-k2-1t-a32b, and the LM backbone of
+internvl2-26b (``frontend="vit"``).  Per-layer parameters are stacked on a
+leading L axis and executed with ``lax.scan`` so the HLO stays O(1 layer)
+regardless of depth (DESIGN.md §7); PASM quantization swaps any large dense
+leaf for a PASMTensor and every matmul dispatches through ``nn.layers.linear``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import pasm as _pasm
+from repro.models.common import Initializer, ShardCtx, maybe_scan
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as M
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_caches",
+    "prefill",
+    "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(cfg: ArchConfig, ini: Initializer) -> dict:
+    D, hd = cfg.d_model, cfg.hd
+    p = {
+        "wq": ini.dense((D, cfg.n_heads * hd)),
+        "wk": ini.dense((D, cfg.n_kv_heads * hd)),
+        "wv": ini.dense((D, cfg.n_kv_heads * hd)),
+        "wo": ini.dense((cfg.n_heads * hd, D)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,))
+        p["k_norm"] = jnp.zeros((hd,))
+    return p
+
+
+def _init_dense_ffn(cfg: ArchConfig, ini: Initializer, d_ff: Optional[int] = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    p = {"w1": ini.dense((D, F)), "w2": ini.dense((F, D), fan_in=F)}
+    if cfg.act == "swiglu":
+        p["w3"] = ini.dense((D, F))
+    return p
+
+
+def _init_moe(cfg: ArchConfig, ini: Initializer) -> dict:
+    m = cfg.moe
+    D = cfg.d_model
+    E, Fe = m.n_experts, m.d_expert
+    p = {
+        "router": ini.dense((D, E)),
+        "w1": ini.dense((E, D, Fe), fan_in=D),
+        "w3": ini.dense((E, D, Fe), fan_in=D),
+        "w2": ini.dense((E, Fe, D), fan_in=Fe),
+    }
+    if m.n_shared:
+        Fs = m.d_shared * m.n_shared
+        p["shared_w1"] = ini.dense((D, Fs))
+        p["shared_w3"] = ini.dense((D, Fs))
+        p["shared_w2"] = ini.dense((Fs, D), fan_in=Fs)
+    return p
+
+
+def _init_layer(cfg: ArchConfig, ini: Initializer, moe: bool) -> dict:
+    D = cfg.d_model
+    p = {
+        "attn_norm": jnp.zeros((D,)),
+        "ffn_norm": jnp.zeros((D,)),
+        "attn": _init_attn(cfg, ini),
+    }
+    if moe:
+        p["moe"] = _init_moe(cfg, ini)
+    else:
+        p["mlp"] = _init_dense_ffn(cfg, ini)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    ini = Initializer(key)
+    D, V = cfg.d_model, cfg.vocab
+    params: dict = {"embed": trunc_embed(ini, V, D)}
+
+    moe_on = bool(cfg.moe and cfg.moe.n_experts)
+    n_dense = min(cfg.moe.first_dense_layers, cfg.n_layers) if moe_on else 0
+    n_scan = cfg.n_layers - n_dense
+
+    if n_dense:
+        params["dense_layers"] = [
+            _init_layer(cfg, ini, moe=False) for _ in range(n_dense)
+        ]
+
+    # stacked layers: vmap the per-layer init over a key batch
+    keys = jax.random.split(ini.key(), n_scan)
+
+    def one(k):
+        return _init_layer(cfg, Initializer(k), moe=moe_on)
+
+    params["layers"] = jax.vmap(one)(keys)
+    params["final_norm"] = jnp.zeros((D,))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ini.dense((D, V))
+    if cfg.frontend == "vit":
+        params["vproj"] = ini.dense((cfg.frontend_dim, D))
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+def trunc_embed(ini: Initializer, V: int, D: int):
+    return jax.random.normal(ini.key(), (V, D), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed_lookup(w, tokens: jax.Array) -> jax.Array:
+    if isinstance(w, _pasm.PASMTensor):
+        rows = _pasm.logical_idx(w)[tokens]  # (B, S, D) uint8 indices
+        return w.codebook[0][rows.astype(jnp.int32)]
+    return w[tokens]
+
+
+def _attention_block(
+    x, p, cfg: ArchConfig, sctx: ShardCtx, cos, sin, *, cache=None, impl: str
+):
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = L.linear(x, p["wq"], impl).reshape(B, S, cfg.n_heads, hd)
+    k = L.linear(x, p["wk"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(x, p["wv"], impl).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    q, k, v = sctx.act_bthd(q), sctx.cs(k, sctx.batch, None, None, None), sctx.cs(
+        v, sctx.batch, None, None, None
+    )
+    new_cache = None
+    if cache is not None:
+        quant_cache = isinstance(cache, A.QuantKVCache)
+        new_cache = (
+            A.update_quant_cache(cache, k, v) if quant_cache else A.update_cache(cache, k, v)
+        )
+        if S == 1:
+            o = (
+                A.decode_attention_quant(q, new_cache)
+                if quant_cache
+                else A.decode_attention(q, new_cache)
+            )
+        else:
+            # prefill: attend within the freshly written prefix
+            o = A.gqa_attention(q, k, v, causal=True, chunk=min(cfg.attn_chunk, S))
+    else:
+        o = A.gqa_attention(q, k, v, causal=True, chunk=min(cfg.attn_chunk, S))
+    o = sctx.act_bthd(o)
+    y = L.linear(o.reshape(B, S, cfg.n_heads * hd), p["wo"], impl)
+    return sctx.act_btd(y), new_cache
+
+
+def _ffn_block(x, p, cfg: ArchConfig, sctx: ShardCtx, impl: str, dropless: bool = False):
+    aux = {}
+    B, S, D = x.shape
+    if "moe" in p:
+        y, aux = M.moe_ffn(
+            x.reshape(B * S, D),
+            p["moe"],
+            cfg.moe,
+            act=cfg.act,
+            impl=impl,
+            constrain=(lambda a, s: sctx.cs(a, *s)) if sctx.active else (lambda a, s: a),
+            ep_spec=(sctx.model, None, None),
+            dropless=dropless,
+            n_groups=sctx.dp,
+            group_spec=(sctx.batch if sctx.batch else (None,),),
+        )
+        y = y.reshape(B, S, D)
+    else:
+        mp = p["mlp"]
+        if cfg.act == "swiglu":
+            h = L.swiglu(L.linear(x, mp["w1"], impl), L.linear(x, mp["w3"], impl))
+        elif cfg.act == "sq_relu":
+            h = L.sq_relu(L.linear(x, mp["w1"], impl))
+        else:
+            h = L.gelu_ffn_act(L.linear(x, mp["w1"], impl))
+        h = sctx.act_btf(h)
+        y = L.linear(h, mp["w2"], impl)
+    return sctx.act_btd(y), aux
+
+
+def _layer_fwd(x, p, cfg, sctx, cos, sin, cache=None, impl="dense", dropless=False):
+    h, new_cache = _attention_block(
+        L.rms_norm(x, p["attn_norm"], cfg.norm_eps), p["attn"], cfg, sctx, cos, sin,
+        cache=cache, impl=impl,
+    )
+    x = x + h
+    h, aux = _ffn_block(
+        L.rms_norm(x, p["ffn_norm"], cfg.norm_eps), p, cfg, sctx, impl, dropless
+    )
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _prep_inputs(params, cfg, sctx, tokens, frontend_embeds):
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    n_prefix = 0
+    if cfg.frontend == "vit" and frontend_embeds is not None:
+        pe = L.linear(frontend_embeds.astype(jnp.bfloat16), params["vproj"], "dense")
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    return sctx.act_btd(x), n_prefix
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    sctx: ShardCtx = ShardCtx(),
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """Full forward (training / prefill-style).  Returns (logits, aux)."""
+    x, n_prefix = _prep_inputs(params, cfg, sctx, tokens, frontend_embeds)
+    B, S, D = x.shape
+    cos, sin = L.rope(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+    aux_sum = {"moe_load_balance": jnp.zeros((), jnp.float32),
+               "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+    for p in params.get("dense_layers", []):
+        x, _, _ = _layer_fwd(x, p, cfg, sctx, cos, sin, impl=impl)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, _, a = _layer_fwd(h, lp, cfg, sctx, cos, sin, impl=impl)
+        for k in aux:
+            aux = dict(aux)
+            aux[k] = aux[k] + a.get(k, 0.0)
+        return (h, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux_sum), _ = maybe_scan(body_fn, (x, aux_sum), params["layers"], cfg.scan_layers)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings and isinstance(params["embed"], _pasm.PASMTensor):
+        head = _pasm.dequantize(params["embed"]).T
+    logits = L.linear(x, head, impl if not cfg.tie_embeddings else "dense")
+    logits = sctx.cs(logits, sctx.batch, None, sctx.model)
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    return logits, aux_sum
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Stacked KV caches for the scanned layers (+ list for dense layers)."""
+    moe_on = bool(cfg.moe and cfg.moe.n_experts)
+    n_dense = min(cfg.moe.first_dense_layers, cfg.n_layers) if moe_on else 0
+    n_scan = cfg.n_layers - n_dense
+    if cfg.quant.enabled and cfg.quant.kv_bits == 8:
+        one = lambda: A.init_quant_kv_cache(batch, seq, cfg.n_kv_heads, cfg.hd)
+    else:
+        one = lambda: A.init_kv_cache(batch, seq, cfg.n_kv_heads, cfg.hd, dtype)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[one() for _ in range(n_scan)]) \
+        if n_scan > 1 else jax.tree.map(lambda x: x[None], one())
+    return {"dense": [one() for _ in range(n_dense)], "scan": stacked}
+
+
+def _rope_at(pos, cfg):
+    cos, sin = L.rope(pos, cfg.hd, cfg.rope_theta)
+    return cos, sin
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,  # (B, 1)
+    caches,
+    cfg: ArchConfig,
+    sctx: ShardCtx = ShardCtx(),
+):
+    """One autoregressive step against the KV caches.  Returns (logits, caches)."""
+    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = sctx.act_btd(x)
+    pos = caches["scan"].pos[0] if cfg.n_layers > 1 else caches["scan"].pos[0]
+    cos, sin = _rope_at(pos[None] if pos.ndim == 0 else pos, cfg)
+    cos, sin = cos[None], sin[None]
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    new_dense = []
+    for p, c in zip(params.get("dense_layers", []), caches["dense"]):
+        x, nc, _ = _layer_fwd(x, p, cfg, sctx, cos, sin, cache=c, impl=impl, dropless=True)
+        new_dense.append(nc)
+
+    # NOTE [§Perf iteration qwen-decode/2]: a cache-in-carry variant
+    # (dynamic_update_index on the stacked cache) was measured: it proves
+    # in-place aliasing (temp 2.35 → 0.29 GiB/dev) but XLA's cost model
+    # charges the full stacked-cache operand per update (bytes 8.8e9 →
+    # 4.7e10, an accounting artifact).  The ys-emission form below is kept:
+    # XLA aliases scan ys with xs buffers, and the cost model measures it
+    # faithfully.
+    def body(h, inp):
+        lp, cache = inp
+        h, nc, _ = _layer_fwd(h, lp, cfg, sctx, cos, sin, cache=cache, impl=impl, dropless=True)
+        return h, nc
+
+    x, new_scan = maybe_scan(body, x, (params["layers"], caches["scan"]), cfg.scan_layers)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings and isinstance(params["embed"], _pasm.PASMTensor):
+        head = _pasm.dequantize(params["embed"]).T
+    logits = L.linear(x, head, impl if not cfg.tie_embeddings else "dense")
+    return logits, {"dense": new_dense, "scan": new_scan}
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    caches,
+    cfg: ArchConfig,
+    sctx: ShardCtx = ShardCtx(),
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+):
+    """Run the prompt through the model, filling caches.  Returns (logits, caches)."""
+    x, n_prefix = _prep_inputs(params, cfg, sctx, tokens, frontend_embeds)
+    B, S, D = x.shape
+    cos, sin = L.rope(jnp.arange(S), cfg.hd, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    new_dense = []
+    for p, c in zip(params.get("dense_layers", []), caches["dense"]):
+        x, nc, _ = _layer_fwd(x, p, cfg, sctx, cos, sin, cache=c, impl=impl, dropless=True)
+        new_dense.append(nc)
+
+    def body(h, inp):
+        lp, cache = inp
+        h, nc, _ = _layer_fwd(h, lp, cfg, sctx, cos, sin, cache=cache, impl=impl, dropless=True)
+        return h, nc
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_scan = maybe_scan(body_fn, x, (params["layers"], caches["scan"]), cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.linear(x[:, -1:], head, "dense" if cfg.tie_embeddings else impl)
+    return logits, {"dense": new_dense, "scan": new_scan}

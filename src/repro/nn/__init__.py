@@ -1,0 +1,1 @@
+"""Layer zoo: pure-JAX, pjit/shard_map-friendly building blocks."""

@@ -1,0 +1,256 @@
+"""Attention: GQA with qk-norm, chunked (flash-style) causal/local, decode.
+
+All shapes are (batch, seq, heads, head_dim).  GQA is expressed by reshaping
+query heads into (kv_head, group) so the contraction never materializes
+repeated K/V.  The chunked path scans KV blocks with an online softmax so
+prefill at 32 k context never materializes an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KVCache", "gqa_attention", "decode_attention", "init_kv_cache"]
+
+_NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "pos"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # (B, S, KV, hd)
+    v: jax.Array
+    pos: jax.Array  # () int32 — tokens already in cache
+
+
+def init_kv_cache(batch: int, seq: int, n_kv: int, hd: int, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, seq, n_kv, hd), dtype),
+        v=jnp.zeros((batch, seq, n_kv, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _chunk_scores(q, k, scale):
+    """q (B,Cq,KV,G,hd) · k (B,Ck,KV,hd) → (B,KV,G,Cq,Ck) f32."""
+    return jnp.einsum("bqkgh,bckh->bkgqc", q, k, preferred_element_type=jnp.float32) * scale
+
+
+def gqa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Chunked-KV online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); H % KV == 0.
+    ``window`` limits attention to the last ``window`` positions (local
+    attention, RecurrentGemma).  ``q_offset`` is the absolute position of
+    q[0] relative to k[0] (prefill: 0; not used for single-token decode —
+    see :func:`decode_attention`).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    chunk = min(chunk, Sk)
+    Sk_orig = Sk
+    if Sk % chunk:  # pad KV to a chunk multiple; pad positions masked below
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk = Sk + pad
+    n_chunks = Sk // chunk
+
+    qg = q.reshape(B, Sq, KV, G, hd)
+    if n_chunks == 1:
+        # single-pass: no online-softmax carries to round-trip through HBM
+        s = _chunk_scores(qg, k, scale)  # (B,KV,G,Sq,Sk)
+        k_pos = jnp.arange(Sk)
+        mask = jnp.broadcast_to(k_pos[None, :] < Sk_orig, (Sq, Sk))
+        if causal:
+            mask &= (q_offset + jnp.arange(Sq))[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_offset + jnp.arange(Sq))[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    kc = k.reshape(B, n_chunks, chunk, KV, hd)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, o = carry  # (B,KV,G,Sq), (B,KV,G,Sq), (B,KV,G,Sq,hd)
+        kb, vb, c_idx = inputs
+        s = _chunk_scores(qg, kb, scale)  # (B,KV,G,Sq,chunk)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.broadcast_to(k_pos[None, :] < Sk_orig, (Sq, chunk))
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step,
+        (m0, l0, o0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    cache: KVCache,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, hd).  Masks positions ≥ cache.pos (and outside ``window``).
+    This is the op the decode_* shape cells lower — bandwidth-bound: it reads
+    the whole (B, S, KV, hd) cache to produce one token.
+    """
+    B, one, H, hd = q.shape
+    _, S, KV, _ = cache.k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, cache.k, preferred_element_type=jnp.float32
+    ) * scale
+    k_pos = jnp.arange(S)
+    valid = k_pos < cache.pos
+    if window is not None:
+        valid &= k_pos >= cache.pos - window
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskh->bkgh", p.astype(cache.v.dtype), cache.v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Insert (B, T, KV, hd) at cache.pos (T=1 for decode, T=S for prefill)."""
+    idx = (0, cache.pos, 0, 0)
+    return KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), idx),
+        v=jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), idx),
+        pos=cache.pos + k_new.shape[1],
+    )
+
+
+# ---------------------------------------------------------------------------
+# PASM-quantized KV cache (beyond paper): int8 storage + scale folded into
+# the score/output contractions — cache HBM traffic halves vs bf16, the
+# paper's dictionary-compression idea applied to the *activation* cache
+# [§Perf iteration qwen-decode/1].
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k_q", "v_q", "k_scale", "v_scale", "pos"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class QuantKVCache:
+    k_q: jax.Array  # (B, S, KV, hd) int8
+    v_q: jax.Array
+    k_scale: jax.Array  # (B, S, KV) f32 — per token·head amax/127
+    v_scale: jax.Array
+    pos: jax.Array
+
+
+def init_quant_kv_cache(batch: int, seq: int, n_kv: int, hd: int) -> QuantKVCache:
+    return QuantKVCache(
+        k_q=jnp.zeros((batch, seq, n_kv, hd), jnp.int8),
+        v_q=jnp.zeros((batch, seq, n_kv, hd), jnp.int8),
+        k_scale=jnp.zeros((batch, seq, n_kv), jnp.float32),
+        v_scale=jnp.zeros((batch, seq, n_kv), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, T, KV, hd) → int8 values + (B, T, KV) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def update_quant_cache(cache: QuantKVCache, k_new, v_new) -> QuantKVCache:
+    kq, ks = _quantize_kv(k_new)
+    vq, vs = _quantize_kv(v_new)
+    i4 = (0, cache.pos, 0, 0)
+    i3 = (0, cache.pos, 0)
+    return QuantKVCache(
+        k_q=jax.lax.dynamic_update_slice(cache.k_q, kq, i4),
+        v_q=jax.lax.dynamic_update_slice(cache.v_q, vq, i4),
+        k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, i3),
+        v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, i3),
+        pos=cache.pos + k_new.shape[1],
+    )
+
+
+def decode_attention_quant(
+    q: jax.Array, cache: QuantKVCache, *, window: Optional[int] = None
+) -> jax.Array:
+    """Single-token attention over the int8 cache.
+
+    Scales never materialize a dequantized cache: k_scale folds into the
+    scores post-contraction; v_scale folds into the softmax weights.
+    """
+    B, one, H, hd = q.shape
+    _, S, KV, _ = cache.k_q.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg.astype(jnp.float32), cache.k_q.astype(q.dtype).astype(jnp.float32)
+    )
+    s = s * jnp.transpose(cache.k_scale, (0, 2, 1))[:, :, None, :] * scale
+    k_pos = jnp.arange(S)
+    valid = k_pos < cache.pos
+    if window is not None:
+        valid &= k_pos >= cache.pos - window
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = p * jnp.transpose(cache.v_scale, (0, 2, 1))[:, :, None, :]  # fold v scale
+    o = jnp.einsum("bkgs,bskh->bkgh", pv.astype(jnp.float32), cache.v_q.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

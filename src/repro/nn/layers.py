@@ -1,0 +1,100 @@
+"""Shared layers: linear (PASM-aware), norms, activations, RoPE, embeddings.
+
+Every weight-bearing op goes through :func:`linear`, which dispatches on the
+leaf type: a plain array runs a dense matmul; a :class:`PASMTensor` runs the
+weight-shared path selected by ``impl`` — this is how the paper's technique
+is integrated as a first-class feature across all architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pasm as _pasm
+from repro.kernels import ops as _kops
+
+Weight = Union[jax.Array, _pasm.PASMTensor]
+
+__all__ = [
+    "linear",
+    "rms_norm",
+    "layer_norm",
+    "swiglu",
+    "sq_relu",
+    "gelu_ffn_act",
+    "rope",
+    "apply_rope",
+]
+
+
+def linear(x: jax.Array, w: Weight, impl: str = "dense") -> jax.Array:
+    """``x @ w`` where ``w`` is dense or weight-shared (PASM).
+
+    impl (for PASM leaves): "dequant" | "kernel" | "pas_kernel".
+    "dequant" is the weight-shared-MAC baseline and the only distribution-safe
+    path under pjit (pure XLA gather+dot); the kernels are single-device /
+    shard_map paths (DESIGN.md §2).
+    """
+    if isinstance(w, _pasm.PASMTensor):
+        if impl == "kernel":
+            return _kops.pasm_matmul(x, w).astype(x.dtype)
+        if impl == "pas_kernel":
+            return _kops.pas_matmul(x, w).astype(x.dtype)
+        wd = _pasm.dequantize(w, dtype=x.dtype)  # dictionary lookup (Fig 3)
+        return jnp.dot(x, wd, preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
+        x.dtype
+    )
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def sq_relu(x: jax.Array) -> jax.Array:
+    """Squared ReLU (Nemotron-4)."""
+    r = jnp.maximum(x, 0)
+    return r * r
+
+
+def gelu_ffn_act(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` (any shape) → (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)

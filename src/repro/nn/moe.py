@@ -1,0 +1,221 @@
+"""Mixture-of-Experts: top-k routing, LOCAL sort-based dispatch, EP combine.
+
+Dispatch is hierarchical, mirroring production MoE systems: tokens are
+grouped by data shard (``n_groups`` = DP degree), each group sorts ONLY its
+local tokens (no cross-shard sort → no token all-gather), and the grouped
+(G, E, C, D) buffer — G sharded over ``data``, E over ``model`` — moves
+through the expert einsum as the all-to-all pattern the SPMD partitioner
+schedules.  Position-in-expert comes from a searchsorted over run starts, so
+no (T, E, C) one-hot is ever built.
+
+Weights follow DeepSeek-MoE structure: ``n_shared`` always-on experts plus
+``n_experts`` routed experts with top-k softmax gating.  The router stays
+dense under PASM quantization (DESIGN.md §5); expert weights may be
+PASMTensors (dequantized per-einsum on the baseline path).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import pasm as _pasm
+from repro.nn import layers as L
+
+__all__ = ["moe_ffn", "expert_ffn"]
+
+Constrain = Callable[[jax.Array, tuple], jax.Array]
+
+
+def _noop_constrain(x, spec):
+    return x
+
+
+def expert_ffn(x: jax.Array, w1, w3, w2, act: str, impl: str) -> jax.Array:
+    """SwiGLU / squared-ReLU FFN used for both shared and dense-layer FFNs."""
+    if act == "swiglu":
+        h = L.swiglu(L.linear(x, w1, impl), L.linear(x, w3, impl))
+    elif act == "sq_relu":
+        h = L.sq_relu(L.linear(x, w1, impl))
+    else:
+        h = L.gelu_ffn_act(L.linear(x, w1, impl))
+    return L.linear(h, w2, impl)
+
+
+def _dense_w(w, dtype, constrain=_noop_constrain, spec=None):
+    """Expert weight stack (E, K, N): dense array or stacked PASMTensor.
+
+    ``spec`` re-lays-out the STORED weight before use (JIT all-gather of the
+    2-D-sharded storage).  For PASM weights the gather moves the uint8/int4
+    *indices* — 4–8× fewer bytes than gathering dequantized bf16, the
+    paper's compression applied to the collective payload
+    [§Perf iteration kimi-prefill/2].
+    """
+    if isinstance(w, _pasm.PASMTensor):
+        idx = w.idx if spec is None else constrain(w.idx, spec)
+        idx = jax.vmap(_pasm.unpack_int4)(idx) if w.packed else idx
+        E = idx.shape[0]
+        K, N = w.shape
+        G = w.codebook.shape[-2]
+        idxg = idx.reshape(E, G, K // G, N)
+        wd = jax.vmap(jax.vmap(lambda cb, ix: cb[ix.astype(jnp.int32)]))(
+            w.codebook, idxg
+        )
+        return wd.reshape(E, K, N).astype(dtype)
+    w = w if spec is None else constrain(w, spec)
+    return w.astype(dtype)
+
+
+def moe_ffn(
+    x: jax.Array,
+    params: dict,
+    cfg: MoEConfig,
+    *,
+    act: str = "swiglu",
+    impl: str = "dense",
+    constrain: Constrain = _noop_constrain,
+    ep_spec: tuple = ("model", None, None),
+    dropless: bool = False,
+    n_groups: int = 1,
+    group_spec: Optional[tuple] = None,
+) -> tuple[jax.Array, dict]:
+    """x: (T, D) → (T, D), aux metrics.
+
+    ``n_groups``: local-dispatch groups (set to the DP degree under pjit so
+    every sort/scatter stays shard-local).  ``group_spec``: mesh axes of the
+    group dim (e.g. ("data",)); ``ep_spec[0]`` is the expert-dim mesh axis.
+    """
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    if T % n_groups:
+        n_groups = 1
+    Tl = T // n_groups
+    if dropless:
+        # exactly dropless for small local token counts (decode); for large
+        # prefill/train batches a cap of Tl inflates the dispatch buffer by
+        # E/k× — bound it at 2× the balanced load instead (statistically
+        # dropless; measured drop_frac stays 0 for trained routers).
+        # [§Perf iteration kimi-prefill/1 — see EXPERIMENTS.md]
+        cap = Tl if Tl <= 512 else min(Tl, -(-Tl * k * 5 // (E * 4)))  # 1.25× balanced
+    else:
+        cap = int(max(1, round(Tl * k / E * cfg.capacity_factor)))
+    cap = min(cap, Tl)
+
+    # --- routing (dense f32 for numerics) ---
+    logits = jnp.dot(x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    xg = x.reshape(n_groups, Tl, D)
+    ig = top_i.reshape(n_groups, Tl, k)
+    wg = top_w.reshape(n_groups, Tl, k)
+
+    def dispatch(xl, il, wl):
+        """One group: (Tl, D), (Tl, k) → buffer (E, C, D) + combine metadata.
+
+        Inverse-index formulation: the only scatter touches an (E, C) int32
+        slot→token map; every D-dimensional movement is a gather, so no
+        (Tl·k, D) intermediate is materialized and the SPMD partitioner
+        never needs a scatter-combine all-reduce
+        [§Perf iteration kimi-prefill/3].
+        """
+        e_flat = il.reshape(-1)
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        tok_sorted = order // k
+        run_starts = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+        pos = jnp.arange(Tl * k) - run_starts[e_sorted]
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, 0)
+        # slot → token+1 (0 = empty), built from an int scatter — tiny.
+        # dropped entries are routed out of bounds (row E) so mode="drop"
+        # discards them instead of clobbering slot 0 of their expert.
+        slot_tok = jnp.zeros((E, cap), jnp.int32)
+        slot_tok = slot_tok.at[jnp.where(keep, e_sorted, E), pos_c].set(
+            tok_sorted + 1, mode="drop"
+        )
+        buf = xl[jnp.maximum(slot_tok - 1, 0)]  # (E, C, D) direct gather
+        buf = buf * (slot_tok > 0)[..., None].astype(xl.dtype)
+        # per-token (position, kept) in (Tl, k) layout for the combine gathers
+        pos_u = jnp.zeros((Tl * k,), jnp.int32).at[order].set(pos_c).reshape(Tl, k)
+        keep_u = jnp.zeros((Tl * k,), jnp.bool_).at[order].set(keep).reshape(Tl, k)
+        return buf, (il, pos_u, keep_u, wl)
+
+    buf, meta = jax.vmap(dispatch)(xg, ig, wg)  # (G, E, C, D)
+    gspec = tuple(group_spec) if group_spec else (None,)
+    ep_axis = ep_spec[0]
+    ff_axis = gspec[0]  # expert-internal parallelism reuses the freed DP axis
+    buf4 = gspec + (ep_axis, None, None)  # (G, E, C, D) token-sharded layout
+    buf = constrain(buf, buf4)
+
+    # --- token-parallel expert compute: the (G×E) device grid holds BOTH
+    # shardings at once — G (tokens) over data, E (experts) over model — so
+    # every (expert, token-group) pair is computed somewhere and NO token
+    # ever crosses data shards.  The only communication is a just-in-time
+    # all-gather of the 2-D-sharded expert weights (int4 indices under
+    # PASM — the paper's compression shrinking the collective payload),
+    # orders of magnitude smaller than the activation all-reduce it
+    # replaces [§Perf iteration kimi-prefill/2].
+    dt = x.dtype
+    # regime switch [§Perf iteration kimi-decode/1]: with many tokens
+    # (prefill/train) the JIT weight gather (int4 indices) is far cheaper
+    # than moving activations; with few tokens (decode) it's the opposite —
+    # keep the stored Fe-sharded weights and all-reduce the tiny expert
+    # outputs over the data axis instead.
+    gather_weights = T > 4096
+    tspec = ff_axis if gather_weights else None
+    wspec = (ep_axis, None, None) if gather_weights else None
+    hspec = (ep_axis, tspec, None) if gather_weights else (ep_axis, None, ff_axis)
+    bufT = jnp.transpose(buf, (1, 0, 2, 3)).reshape(E, n_groups * cap, D)
+    bufT = constrain(bufT, (ep_axis, tspec, None))
+    w1 = _dense_w(params["w1"], dt, constrain, wspec)
+    w2 = _dense_w(params["w2"], dt, constrain, wspec)
+    h = jnp.einsum("etd,edf->etf", bufT, w1)
+    if act == "swiglu":
+        w3 = _dense_w(params["w3"], dt, constrain, wspec)
+        h = jax.nn.silu(h) * jnp.einsum("etd,edf->etf", bufT, w3)
+    elif act == "sq_relu":
+        r = jnp.maximum(h, 0)
+        h = r * r
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, hspec)
+    y2 = jnp.einsum("etf,efd->etd", h, w2)
+    y2 = constrain(y2, (ep_axis, tspec, None))
+    yb = y2.reshape(E, n_groups, cap, D).transpose(1, 0, 2, 3)
+    yb = constrain(yb, buf4)
+
+    def combine(ybl, m):
+        il, pos_u, keep_u, wl = m
+        y = jnp.zeros((Tl, D), ybl.dtype)
+        for j in range(k):  # k gathers of (Tl, D) — no (Tl·k, D) intermediate
+            contrib = ybl[il[:, j], pos_u[:, j]]
+            gate = (wl[:, j] * keep_u[:, j]).astype(ybl.dtype)
+            y = y + contrib * gate[:, None]
+        return y
+
+    y = jax.vmap(combine)(yb, meta).reshape(T, D)
+
+    # --- shared (always-on) experts ---
+    if "shared_w1" in params:
+        y = y + expert_ffn(
+            x, params["shared_w1"], params["shared_w3"], params["shared_w2"], act, impl
+        )
+
+    # --- aux: load-balance loss (Switch-style) + drop fraction.  Serving
+    # (dropless) skips it: the (T, E) router-prob reduction otherwise costs
+    # an all-gather of the full prob matrix [§Perf iteration kimi-prefill/4].
+    if dropless:
+        aux = {}
+    else:
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (T * k)
+        keep_frac = meta[2].astype(jnp.float32).mean()
+        aux = {
+            "moe_load_balance": E * jnp.sum(me * ce),
+            "moe_drop_frac": 1.0 - keep_frac,
+        }
+    return y.astype(x.dtype), aux

@@ -1,0 +1,79 @@
+"""RG-LRU recurrence (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+  r_t = σ(x_t W_a + b_a)                        recurrence gate
+  i_t = σ(x_t W_x + b_x)                        input gate
+  a_t = exp(−c·softplus(Λ)·r_t)                 per-channel decay, c = 8
+  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses an associative scan (O(log S) depth, sub-quadratic —
+this family runs ``long_500k``); decode is a one-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rg_lru_scan", "rg_lru_decode_step", "causal_conv1d", "conv1d_decode_step"]
+
+_C = 8.0
+
+
+def _gates(x, params):
+    from repro.nn import layers as L  # local import (avoid cycle at module load)
+
+    r = jax.nn.sigmoid(L.linear(x, params["w_a"], "dequant") + params["b_a"].astype(x.dtype))
+    i = jax.nn.sigmoid(L.linear(x, params["w_x"], "dequant") + params["b_x"].astype(x.dtype))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * x.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)
+    )
+    return a, gated
+
+
+def rg_lru_scan(
+    x: jax.Array, params: dict, init_h: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, W) → (y (B,S,W) , h_final (B,W)).  Associative linear scan."""
+    a, b = _gates(x, params)  # (B,S,W) f32 both
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    if init_h is not None:
+        b = b.at[:, 0].add(a[:, 0] * init_h.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_decode_step(
+    x: jax.Array, params: dict, h: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, W) one token; h: (B, W) carried state."""
+    a, b = _gates(x[:, None, :], params)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new.astype(x.dtype), h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x (B,S,W); w (K,W); left-padded, no lookahead."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(
+        xp[:, k : k + x.shape[1], :] * w[k][None, None, :].astype(x.dtype)
+        for k in range(K)
+    )
+    return y + b[None, None, :].astype(x.dtype)
+
+
+def conv1d_decode_step(
+    x: jax.Array, w: jax.Array, b: jax.Array, window: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One-token depthwise conv.  window (B, K-1, W) holds the last K-1 inputs."""
+    K = w.shape[0]
+    full = jnp.concatenate([window, x[:, None, :]], axis=1)  # (B, K, W)
+    y = jnp.einsum("bkw,kw->bw", full.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    return y, full[:, 1:]

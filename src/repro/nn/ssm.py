@@ -1,0 +1,134 @@
+"""Mamba-2 SSD (state-space duality) — chunked scan, training + decode.
+
+Implements the SSD form of Mamba-2 (Dao & Gu 2024, arXiv:2405.21060): the
+selective SSM  ``h_t = exp(dt_t·A) h_{t-1} + dt_t·B_t ⊗ x_t``,
+``y_t = C_t·h_t + D·x_t``  computed chunk-parallel: quadratic
+attention-like compute inside chunks of length Q, a linear state recurrence
+across chunks.  Sub-quadratic in sequence length → this arch family runs the
+``long_500k`` cell (DESIGN.md §5).
+
+Shapes: x (B, S, H, P) heads × head_dim; B/C (B, S, G, N) groups × state;
+dt (B, S, H); A (H,) negative reals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan", "ssd_decode_step", "SSMState"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass, data_fields=["h"], meta_fields=[]
+)
+@dataclasses.dataclass
+class SSMState:
+    h: jax.Array  # (B, H, P, N)
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    S_orig = S
+    if S % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 keeps state, x=0 adds nothing
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G  # heads per B/C group
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    seg_end = cum[:, :, -1, :]  # (B,nc,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # L[t,s] = exp(cum_t - cum_s) for s ≤ t  (log-space for stability)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores[t,s,h] = (C_t · B_s) per group, broadcast to heads
+    cb = jnp.einsum("bctgn,bcsgn->bctsg", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    cb = jnp.repeat(cb, rep, axis=-1)  # (B,nc,t,s,H)
+    w = cb * Lmat * dtc[:, :, None, :, :]  # weight on x_s
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xc.astype(jnp.float32))
+
+    # --- chunk states: S_c = Σ_s exp(seg_end - cum_s)·dt_s·B_s ⊗ x_s ---
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum) * dtc  # (B,nc,Q,H)
+    BxH = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    states = jnp.einsum(
+        "bcsh,bcshn,bcshp->bchpn", decay_to_end, BxH.astype(jnp.float32), xc.astype(jnp.float32)
+    )  # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (linear scan over chunks) ---
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * jnp.exp(dec)[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    (h_final, h_enter) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_end, 1, 0))
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)  # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution: y_t += C_t · exp(cum_t) · h_enter ---
+    CH = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum(
+        "bcthn,bchpn->bcthp", CH.astype(jnp.float32) * jnp.exp(cum)[..., None], h_enter
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :S_orig].astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    state: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """One-token SSD update.  x (B,H,P); dt (B,H); B/C (B,G,N); state (B,H,P,N)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])  # (B,H)
+    BH = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    CH = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    new_state = state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dtf, BH, x.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, CH) + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,243 @@
+"""Three-term roofline analysis from compiled XLA artifacts (no hardware).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / (links × link_bw)
+
+Sources: ``compiled.cost_analysis()`` provides per-device FLOPs and bytes;
+collective bytes are parsed from the post-SPMD optimized HLO
+(``compiled.as_text()``) by summing the result sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, weighted by
+the ring-algorithm payload factor 2·(g−1)/g for all-reduce and (g−1)/g for
+gather/scatter, where g is the replica-group size parsed per op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment sheet).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collective_bytes", "roofline_terms", "RooflineReport"]
+
+# TPU v5e per-chip constants (assignment sheet)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+N_LINKS = 4  # 2-D torus: 4 links usable per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    n_links: int = N_LINKS
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)  # iota form: replica_groups=[ngroups,gsize]<=[N]
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)  # explicit form: {{0,1,2,...},...}
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective payload bytes from optimized HLO text.
+
+    Result sizes are per-device (the SPMD partitioner emits per-device
+    shapes).  Ring-payload weighting: all-reduce moves ≈ 2·(g−1)/g × bytes,
+    all-gather/reduce-scatter (g−1)/g, all-to-all (g−1)/g, permute 1×.
+    """
+    bytes_by_kind: dict = {}
+    count_by_kind: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if kind + "(" not in line and kind + "-start(" not in line:
+            continue
+        if "-done(" in line:  # result of async pair — counted at -start
+            continue
+        size = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if kind == "all-reduce":
+            w = 2.0 * (g - 1) / g
+        elif kind == "collective-permute":
+            w = 1.0
+        else:
+            w = (g - 1) / g
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + size * w
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_frac: float
+    n_devices: int
+    collectives: dict
+    extra: dict
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline bound (the §Perf score):
+        MODEL_FLOPs time at peak ÷ the bound-achieving step time."""
+        ideal = self.model_flops / self.n_devices / PEAK_FLOPS
+        return ideal / max(self.step_time_s, 1e-30)
+
+    @property
+    def memory_efficiency(self) -> float:
+        """For memory-bound cells (decode): ideal bytes (weights+cache read
+        once per step = the argument bytes) ÷ actual HLO bytes."""
+        ideal = self.extra.get("argument_bytes_per_device", 0) / HBM_BW
+        return ideal / max(self.memory_s, 1e-30)
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops: float,
+    hw: HW = HW(),
+    extra: Optional[dict] = None,
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))  # per-device (XLA reports post-SPMD)
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(hlo_text)
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_acc / hw.hbm_bw
+    collective_s = coll.total_bytes / (hw.link_bw * hw.n_links)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / n_devices / max(flops, 1.0)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        collective_bytes=coll.total_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_frac=useful,
+        n_devices=n_devices,
+        collectives={
+            "bytes": coll.bytes_by_kind,
+            "counts": coll.count_by_kind,
+        },
+        extra=extra or {},
+    )
+
+
+# ---------------------------------------------------------------------------
+# HLO profiling: per-op-kind byte/flop attribution (hypothesis formation)
+# ---------------------------------------------------------------------------
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def hlo_bytes_by_op(hlo_text: str, top: int = 15) -> list:
+    """Result bytes summed per HLO op kind — a coarse 'where do bytes go'.
+
+    Counts each op's RESULT size only (operand reads double-count through
+    producers).  While-loop bodies count once, mirroring cost_analysis —
+    apply the same (L−1)·B correction externally if needed.
+    """
+    agg: dict = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if b:
+            agg[kind] = agg.get(kind, 0) + b
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+
+
+def hlo_biggest_tensors(hlo_text: str, top: int = 12) -> list:
+    """Largest single result tensors (op kind, bytes, shape snippet)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        if b:
+            out.append((b, m.group(2), m.group(1)[:60]))
+    out.sort(reverse=True)
+    return out[:top]

@@ -1,0 +1,89 @@
+"""train_step / eval_step factories: loss, grads, microbatching, QAT hook."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.models.common import ShardCtx
+from repro.train import optimizer as opt
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _loss_fn(params, batch, cfg: ArchConfig, sctx: ShardCtx, model):
+    kw = {}
+    if "frontend_embeds" in batch:
+        kw["frontend_embeds"] = batch["frontend_embeds"]
+    logits, aux = model.forward(params, batch["tokens"], cfg, sctx, **kw)
+    loss = api.lm_loss(logits, batch["labels"], batch.get("loss_mask"))
+    if aux.get("moe_load_balance") is not None and cfg.moe:
+        loss = loss + 0.01 * aux["moe_load_balance"] / max(cfg.n_layers, 1)
+    return loss, aux
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    ocfg: opt.AdamWConfig,
+    sctx: ShardCtx = ShardCtx(),
+    *,
+    microbatches: int = 1,
+    compress_grads_bins: int = 0,
+):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over sequential micro-batches
+    (activation-memory relief at fixed global batch).  ``compress_grads_bins``
+    applies the PASM-style dictionary compression to the gradient payload
+    before the optimizer (beyond-paper, DESIGN.md §4).
+    """
+    model = api.get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+                params, batch, cfg, sctx, model
+            )
+        else:
+            # python-unrolled accumulation: keeps every microbatch visible to
+            # the XLA cost model (a fori_loop body is counted once, breaking
+            # the dry-run's roofline accounting) and lets the scheduler
+            # overlap the grad all-reduce of microbatch i with compute of i+1
+            grads = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            loss = jnp.zeros((), jnp.float32)
+            for i in range(microbatches):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches, 0
+                    ),
+                    batch,
+                )
+                (l, _), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                    params, mb, cfg, sctx, model
+                )
+                grads = jax.tree.map(jnp.add, grads, g)
+                loss = loss + l
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {}
+        if compress_grads_bins:
+            grads = opt.compress_grads(grads, compress_grads_bins)
+        params, opt_state, metrics = opt.adamw_update(params, grads, opt_state, ocfg)
+        metrics = dict(metrics, loss=loss, **{k: v for k, v in aux.items()})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
+    model = api.get_model(cfg)
+
+    def eval_step(params, batch):
+        loss, aux = _loss_fn(params, batch, cfg, sctx, model)
+        return {"loss": loss, **aux}
+
+    return eval_step

@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on ONE device (the dry-run alone forces 512 placeholders)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,117 @@
+"""Chunked/online-softmax attention vs a naive reference; decode; windows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * hd ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _qkv(B=2, S=64, H=4, KV=2, hd=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_naive(chunk, causal):
+    q, k, v = _qkv()
+    got = A.gqa_attention(q, k, v, causal=causal, chunk=chunk)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [8, 16])
+def test_local_window(window):
+    q, k, v = _qkv(S=48)
+    got = A.gqa_attention(q, k, v, causal=True, window=window, chunk=16)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_non_divisible_kv_padding():
+    q, k, v = _qkv(S=56)  # 56 % 16 != 0 → internal pad path
+    got = A.gqa_attention(q, k, v, causal=True, chunk=16)
+    want = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_full():
+    B, S, H, KV, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(B, S, H, KV, hd)
+    cache = A.init_kv_cache(B, 48, KV, hd, jnp.float32)
+    cache = A.update_cache(cache, k, v)
+    # decode for the last position
+    got = A.decode_attention(q[:, -1:], cache)
+    want = naive_attention(q, k, v, causal=True)[:, -1:]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_cache_update_positions():
+    cache = A.init_kv_cache(1, 16, 1, 4, jnp.float32)
+    k1 = jnp.ones((1, 3, 1, 4))
+    cache = A.update_cache(cache, k1, k1)
+    assert int(cache.pos) == 3
+    cache = A.update_cache(cache, 2 * k1[:, :1], 2 * k1[:, :1])
+    assert int(cache.pos) == 4
+    np.testing.assert_allclose(np.asarray(cache.k[0, 3, 0]), 2.0)
+    np.testing.assert_allclose(np.asarray(cache.k[0, 4, 0]), 0.0)  # untouched
+
+
+# ---------------------------------------------------------------------------
+# int8 PASM KV cache (beyond paper — §Perf qwen-decode/1)
+# ---------------------------------------------------------------------------
+
+
+def test_quant_cache_decode_close_to_fp():
+    B, S, H, KV, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(B, S, H, KV, hd)
+    fp = A.init_kv_cache(B, 48, KV, hd, jnp.float32)
+    fp = A.update_cache(fp, k, v)
+    qc = A.init_quant_kv_cache(B, 48, KV, hd)
+    qc = A.update_quant_cache(qc, k, v)
+    want = A.decode_attention(q[:, -1:], fp)
+    got = A.decode_attention_quant(q[:, -1:], qc)
+    # int8 with per-token·head scales: ~1% relative error budget
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_quant_cache_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 2, 16)) * 3.0
+    qv, scale = A._quantize_kv(x)
+    deq = qv.astype(jnp.float32) * scale[..., None]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float(jnp.max(jnp.abs(deq - x) / jnp.maximum(amax, 1e-6))) <= 1 / 127 + 1e-6
+
+
+def test_quant_cache_incremental_updates():
+    qc = A.init_quant_kv_cache(1, 16, 1, 4)
+    k1 = jnp.ones((1, 3, 1, 4))
+    qc = A.update_quant_cache(qc, k1, k1)
+    assert int(qc.pos) == 3
+    qc = A.update_quant_cache(qc, 2 * k1[:, :1], 2 * k1[:, :1])
+    assert int(qc.pos) == 4
+    deq = qc.k_q[0, 3, 0].astype(jnp.float32) * qc.k_scale[0, 3, 0]
+    np.testing.assert_allclose(np.asarray(deq), 2.0, rtol=1e-2)

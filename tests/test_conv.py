@@ -1,0 +1,71 @@
+"""The paper's conv accelerator (Fig 13): all three variants agree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.alexnet_conv import PAPER_BINS, PAPER_SPEC
+from repro.core import conv as cv
+
+
+def _setup(spec, bins, seed=0):
+    k = jax.random.PRNGKey(seed)
+    img = jax.random.normal(k, (spec.C, spec.IH, spec.IW))
+    kern = jax.random.normal(jax.random.PRNGKey(seed + 1), (spec.M, spec.C, spec.KY, spec.KX))
+    cb, idx = cv.quantize_conv_weights(kern, bins)
+    return img, kern, cb, idx
+
+
+@pytest.mark.parametrize("bins", PAPER_BINS)
+def test_paper_accelerator_spec(bins):
+    """§4 configuration: 5×5 image, 15 ch, 3×3 kernel, M=2 — all variants equal."""
+    spec = PAPER_SPEC
+    img, kern, cb, idx = _setup(spec, bins)
+    y_ws = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
+    y_pasm = cv.conv2d_pasm(img, idx, cb, spec=spec)
+    y_direct = cv.conv2d_direct(img, cb[idx.astype(jnp.int32)], spec=spec)
+    assert y_ws.shape == (2, 3, 3)
+    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_pasm), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_direct), rtol=1e-6, atol=1e-6)
+
+
+def test_bias_relu_stride():
+    """§4: stride / bias / ReLU are outside weight sharing and must agree."""
+    spec = cv.ConvSpec(IH=9, IW=9, C=4, KY=3, KX=3, M=3, stride=2)
+    img, kern, cb, idx = _setup(spec, 8)
+    bias = jnp.array([0.5, -10.0, 0.1])
+    a = cv.conv2d_weight_shared(img, idx, cb, bias, spec=spec, relu=True)
+    b = cv.conv2d_pasm(img, idx, cb, bias, spec=spec, relu=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+    assert float(a.min()) >= 0.0  # ReLU applied
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    c=st.integers(1, 8),
+    m=st.integers(1, 4),
+    ih=st.integers(5, 12),
+    bins=st.sampled_from([4, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_conv_property(c, m, ih, bins, stride, seed):
+    spec = cv.ConvSpec(IH=ih, IW=ih, C=c, KY=3, KX=3, M=m, stride=stride)
+    img, kern, cb, idx = _setup(spec, bins, seed)
+    a = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
+    b = cv.conv2d_pasm(img, idx, cb, spec=spec)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_integer_images_bit_exact():
+    """With integer images + integer codebook, PASM conv is bit-exact (§5.3)."""
+    spec = cv.ConvSpec(IH=7, IW=7, C=3, KY=3, KX=3, M=2, stride=1)
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(-8, 8, size=(3, 7, 7)), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, 4, size=(2, 3, 3, 3)), jnp.uint8)
+    cb = jnp.asarray(rng.integers(-8, 8, size=4), jnp.int32)
+    a = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
+    b = cv.conv2d_pasm(img, idx, cb, spec=spec)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,111 @@
+"""The hardware cost model vs every number quoted in the paper text."""
+import math
+
+import pytest
+
+from repro.core import hwmodel as hw
+from repro.core import pas
+
+
+def test_table1_asymptotics():
+    """Table 1: multiplier O(W²) dominates; PAS has no multiplier."""
+    c = hw.GateConstants()
+    m8, m32 = hw.mac_unit(8, c), hw.mac_unit(32, c)
+    assert m32.mult / m8.mult == pytest.approx(16.0)  # O(W²)
+    p = hw.pas_unit(32, 16, c)
+    assert p.mult == 0.0
+    # PAS registers grow with B (Table 1: B accumulation registers)
+    assert hw.pas_unit(32, 64, c).seq > hw.pas_unit(32, 16, c).seq
+
+
+def test_standalone_anchor_w32_b16():
+    """§2.4: 16-PAS-4-MAC vs 16-MAC at W=32, B=16 — category savings."""
+    r = hw.gate_ratio(32, 16)
+    assert r["seq"] == pytest.approx(1 - 0.35, abs=0.02)    # 35 % fewer sequential
+    assert r["logic"] == pytest.approx(1 - 0.68, abs=0.02)  # 68 % fewer logic
+    assert r["inv"] == pytest.approx(1 - 0.78, abs=0.06)    # 78 % fewer inverters
+    assert r["buf"] == pytest.approx(1 - 0.61, abs=0.06)    # 61 % fewer buffers
+    assert r["total"] == pytest.approx(1 - 0.66, abs=0.04)  # 66 % overall
+
+
+def test_standalone_power_anchor():
+    """§2.4: −70 % dynamic, −60 % leakage, −70 % total power at W=32/B=16."""
+    p = hw.power_model(32, 16)
+    assert p["dynamic"] == pytest.approx(1 - 0.70, abs=0.04)
+    assert p["leakage"] == pytest.approx(1 - 0.60, abs=0.04)
+    assert p["total"] == pytest.approx(1 - 0.70, abs=0.05)
+
+
+def test_savings_grow_with_bitwidth():
+    """Figs 7/8: the PASM advantage grows with W (multiplier is O(W²))."""
+    totals = [hw.gate_ratio(w, 16)["total"] for w in (4, 8, 16, 32)]
+    assert totals == sorted(totals, reverse=True)  # ratio falls as W grows
+
+
+def test_bin_crossover():
+    """Fig 9: at B=256 the PASM register/buffer cost overtakes the MAC's."""
+    r16 = hw.gate_ratio(32, 16)
+    r256 = hw.gate_ratio(32, 256)
+    assert r16["total"] < 1.0
+    assert r256["seq"] > 1.0  # registers less efficient at 256 bins (paper)
+
+
+def test_asic_accelerator_anchors():
+    """§5.1: in-CNN accelerator, 32-bit kernels."""
+    b4 = hw.accel_ratio_asic(4)
+    assert b4["gates"] == pytest.approx(1 - 0.478, abs=1e-6)
+    assert b4["power"] == pytest.approx(1 - 0.532, abs=1e-6)
+    b8 = hw.accel_ratio_asic(8)
+    assert b8["gates"] == pytest.approx(1 - 0.081, abs=1e-6)
+    assert b8["power"] == pytest.approx(1 - 0.152, abs=1e-6)
+    # the model PREDICTS the paper's qualitative B=16 crossover
+    b16 = hw.accel_ratio_asic(16)
+    assert b16["gates"] > 1.0 and b16["power"] > 1.0
+
+
+def test_asic_int8_anchor():
+    """§5.1: 8-bit kernels, 4 bins: −19.8 % gates, −31.3 % power."""
+    r = hw.accel_ratio_asic(4, W=8)
+    assert r["gates"] == pytest.approx(1 - 0.198, abs=1e-6)
+    assert r["power"] == pytest.approx(1 - 0.313, abs=1e-6)
+
+
+def test_fpga_anchors():
+    """§5.2: 99 % fewer DSPs, 28 % fewer BRAMs; power −64/−41.6/−18 %."""
+    assert hw.fpga_resources(4, pasm=True)["dsp"] == 3
+    assert hw.fpga_resources(4, pasm=False)["dsp"] == 405
+    assert hw.accel_ratio_fpga(4)["power"] == pytest.approx(0.36, abs=1e-6)
+    assert hw.accel_ratio_fpga(8)["power"] == pytest.approx(0.584, abs=1e-6)
+    assert hw.accel_ratio_fpga(16)["power"] == pytest.approx(1 - 0.18, abs=0.03)
+    assert hw.accel_ratio_fpga(4)["dsp"] == pytest.approx(0.01, abs=1e-6)
+    assert hw.accel_ratio_fpga(4)["bram"] == pytest.approx(0.72, abs=1e-6)
+
+
+def test_shared_mac_cycles():
+    """§2.2 worked example: 1024 + 4·16 = 1088 cycles."""
+    assert pas.pasm_cycles(1024, 16, 4) == hw.PAPER_CLAIMS["cycles.example"]
+
+
+def test_latency_fig14():
+    """Fig 14: PASM latency +8.5 % (B=4) … +12.75 % (B=16) on the paper conv."""
+    r4 = hw.conv_latency_ratio(4)
+    r16 = hw.conv_latency_ratio(16)
+    assert r4 == pytest.approx(1.085, abs=0.01)
+    assert r16 == pytest.approx(1.1275, abs=0.01)
+    assert hw.conv_latency_ratio(8) > r4 and hw.conv_latency_ratio(8) < r16
+
+
+def test_latency_amortizes_with_channels():
+    """§4/Table 2: more channels → post-pass amortized → overhead shrinks."""
+    big_c = dict(hw.PAPER_CONV, C=512)
+    assert hw.conv_latency_ratio(16, big_c) < hw.conv_latency_ratio(16)
+
+
+def test_table2_macops():
+    """Table 2: MAC ops per output = C·KX·KY."""
+    for C in (32, 128, 512):
+        for k in (1, 3, 5, 7):
+            n = C * k * k
+            assert hw.conv_latency_cycles(
+                IH=k, IW=k, C=C, KY=k, KX=k, M=1, bins=0
+            ) == n

@@ -1,0 +1,187 @@
+"""Infrastructure: optimizer, checkpointing, fault tolerance, data pipeline."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.ckpt import checkpoint as ck
+from repro.data.pipeline import DataConfig, TokenFileDataset, synthetic_batch, write_token_file
+from repro.train import optimizer as opt
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init_opt_state(params)
+    cfg = opt.AdamWConfig(lr=0.3, weight_decay=0.0, total_steps=100, warmup_steps=1)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(4)}
+    state = opt.init_opt_state(params)
+    cfg = opt.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=1)
+    _, _, metrics = opt.adamw_update(params, {"w": jnp.full(4, 1e6)}, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_cosine_schedule():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(opt.cosine_lr(cfg, jnp.asarray(0))) == 0.0
+    assert float(opt.cosine_lr(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(opt.cosine_lr(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_integer_leaves_frozen():
+    params = {"w": jnp.ones(4), "idx": jnp.arange(4, dtype=jnp.uint8)}
+    state = opt.init_opt_state(params)
+    cfg = opt.AdamWConfig(lr=0.1, warmup_steps=1)
+    grads = {"w": jnp.ones(4), "idx": jnp.zeros(4)}
+    p2, _, _ = opt.adamw_update(params, grads, state, cfg)
+    np.testing.assert_array_equal(np.asarray(p2["idx"]), np.asarray(params["idx"]))
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 0
+
+
+def test_compress_grads_error_bound():
+    """PASM-style gradient dictionary: bounded quantization error."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    gq = opt.compress_grads(g, bins=256)
+    amax = float(jnp.abs(g["w"]).max())
+    bin_width = amax / (256 / 2 - 1)
+    assert float(jnp.abs(g["w"] - gq["w"]).max()) <= bin_width * 0.51
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "step": jnp.asarray(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 10, t, extra={"note": "x"})
+    restored, manifest = ck.restore(tmp_path, t)
+    assert manifest["step"] == 10 and manifest["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    mgr = ck.CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    mgr.wait()
+    mgr._gc()
+    assert ck.latest_step(tmp_path) == 4
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]  # keep-last-2
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck.save(tmp_path, 1, _tree())
+    bad = {"a": jnp.zeros((3, 3)), "nested": {"b": jnp.ones((4,)), "step": jnp.asarray(0)}}
+    with pytest.raises(ValueError):
+        ck.restore(tmp_path, bad)
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    ck.save(tmp_path, 5, _tree())
+    # simulate a crash mid-write: dir without manifest
+    (tmp_path / "step_9").mkdir()
+    assert ck.latest_step(tmp_path) == 5
+
+
+# --------------------------------------------------------------------------
+# fault tolerance
+# --------------------------------------------------------------------------
+
+
+def test_straggler_detection():
+    det = ft.StragglerDetector(n_hosts=4, window=10, threshold=1.5)
+    for step in range(10):
+        for h in range(4):
+            det.record(h, 1.0 if h != 2 else 3.0)
+    assert det.stragglers() == [2]
+
+
+def test_supervisor_restarts_then_succeeds():
+    calls = []
+
+    def flaky(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            raise RuntimeError("chip fell off")
+        return 42
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=5, backoff_s=0.0), sleep=lambda s: None)
+    assert sup.run(flaky) == 42
+    assert sup.restarts == 2
+
+
+def test_supervisor_gives_up():
+    def always_fails(resume):
+        raise RuntimeError("dead host")
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=2, backoff_s=0.0), sleep=lambda s: None)
+    with pytest.raises(RuntimeError, match="exceeded max_restarts"):
+        sup.run(always_fails)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+
+def test_synthetic_deterministic():
+    cfg = DataConfig(seed=1, vocab=1000, seq_len=32, global_batch=4)
+    a = synthetic_batch(cfg, 7)
+    b = synthetic_batch(cfg, 7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = synthetic_batch(cfg, 8)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_synthetic_shards_disjoint():
+    base = dict(seed=1, vocab=1000, seq_len=16, global_batch=8, n_shards=2)
+    s0 = synthetic_batch(DataConfig(**base, shard_index=0), 3)
+    s1 = synthetic_batch(DataConfig(**base, shard_index=1), 3)
+    assert s0["tokens"].shape == (4, 16)  # global 8 over 2 shards
+    assert not np.array_equal(np.asarray(s0["tokens"]), np.asarray(s1["tokens"]))
+
+
+def test_labels_are_shifted():
+    cfg = DataConfig(seed=0, vocab=100, seq_len=16, global_batch=2)
+    b = synthetic_batch(cfg, 0)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1])
+    )
+
+
+def test_file_dataset(tmp_path):
+    toks = np.arange(17 * 10, dtype=np.uint32)
+    path = tmp_path / "tokens.bin"
+    write_token_file(str(path), toks)
+    cfg = DataConfig(seed=0, vocab=200, seq_len=16, global_batch=2, path=str(path))
+    ds = TokenFileDataset(cfg)
+    assert ds.n_seqs == 10
+    b = ds.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    b2 = ds.batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(b2["tokens"]))

@@ -1,0 +1,103 @@
+"""Per-arch smoke: reduced configs — forward/train shapes, no NaNs, decode.
+
+Assignment requirement (f): one smoke test per assigned architecture that
+instantiates a reduced config of the same family and runs one forward and
+one train step on CPU asserting output shapes + finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+from repro.models.common import ShardCtx
+from repro.train import optimizer as opt
+from repro.train import step as step_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    B, S = 2, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    fe = api.frontend_spec(cfg, B)
+    kw = {"frontend_embeds": jnp.zeros(fe.shape, fe.dtype)} if fe is not None else {}
+    logits, aux = model.forward(params, tokens, cfg, **kw)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    state = opt.init_opt_state(params)
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab),
+    }
+    fe = api.frontend_spec(cfg, B)
+    if fe is not None:
+        batch["frontend_embeds"] = jnp.zeros(fe.shape, fe.dtype)
+    ts = step_mod.make_train_step(cfg, opt.AdamWConfig(lr=1e-3, total_steps=10), ShardCtx())
+    params2, state2, metrics = ts(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else 0.0,
+        params,
+        params2,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(S)) ≡ prefill(S+1) up to bf16 noise (all families)."""
+    cfg = get_config(arch, smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    B, S = 2, 8
+    tokens = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    fe = api.frontend_spec(cfg, B)
+    kw = {"frontend_embeds": jnp.zeros(fe.shape, fe.dtype)} if fe is not None else {}
+    caches = model.init_caches(cfg, B, 32)
+    lg_pre, caches = model.prefill(params, tokens[:, :S], caches, cfg, **kw)
+    lg_dec, _ = model.decode_step(params, tokens[:, S : S + 1], caches, cfg)
+    caches2 = model.init_caches(cfg, B, 32)
+    lg_pre2, _ = model.prefill(params, tokens, caches2, cfg, **kw)
+    err = float(jnp.abs(lg_dec[:, 0] - lg_pre2[:, 0]).max())
+    assert err < 0.15, f"{arch}: decode/prefill mismatch {err}"
+    assert lg_dec.shape == (B, 1, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "deepseek-moe-16b", "mamba2-130m"])
+def test_pasm_quantized_forward(arch):
+    """The paper's technique as a config knob: quantized forward stays close."""
+    from repro.models.common import quantize_params
+
+    cfg = get_config(arch, smoke=True)
+    # smoke weights are small — drop the min-size guard so something quantizes
+    cfg = cfg.with_quant(enabled=True, bins=64, impl="dequant", min_weight_elems=64)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    qparams = quantize_params(params, cfg)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    lg_dense, _ = model.forward(params, tokens, cfg.with_quant(enabled=False))
+    lg_q, _ = model.forward(qparams, tokens, cfg)
+    assert bool(jnp.isfinite(lg_q.astype(jnp.float32)).all())
+    # 64-bin quantization: logits correlated with dense output
+    a = np.asarray(lg_dense.astype(jnp.float32)).ravel()
+    b = np.asarray(lg_q.astype(jnp.float32)).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.9, f"{arch}: corr {corr}"

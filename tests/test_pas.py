@@ -1,0 +1,76 @@
+"""The paper's core identity: PASM ≡ weight-shared MAC (§2.2, §5.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pas, pasm
+
+
+def test_paper_worked_example():
+    """Fig 4 / Fig 6: result = 98.8 via both formulations, same bins."""
+    x = jnp.array([26.7, 3.4, 4.8, 17.7, 6.1])
+    idx = jnp.array([0, 1, 2, 3, 0], dtype=jnp.uint8)
+    cb = jnp.array([1.7, 0.4, 1.3, 2.0])
+    ws = pas.weight_shared_dot(x, idx, cb)
+    pm = pas.pasm_dot(x, idx, cb)
+    assert np.isclose(float(ws), 98.8, atol=0.05)  # paper rounds to 98.8
+    assert np.isclose(float(pm), float(ws), rtol=1e-6)
+    bins = pas.pas_accumulate(x, idx, 4)
+    np.testing.assert_allclose(np.asarray(bins), [32.8, 3.4, 4.8, 17.7], rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    n=st.integers(4, 200),
+    bins=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bit_exact_integer(n, bins, seed):
+    """§5.3: in integer arithmetic PASM is BIT-EXACT vs the weight-shared MAC."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-1000, 1000, size=n).astype(np.int64)
+    idx = rng.integers(0, bins, size=n).astype(np.int64)
+    cb = rng.integers(-1000, 1000, size=bins).astype(np.int64)
+    direct = int(np.sum(x * cb[idx]))
+    bins_acc = np.zeros(bins, np.int64)
+    np.add.at(bins_acc, idx, x)  # PAS phase
+    pasm_result = int(np.sum(bins_acc * cb))  # post-pass multiply
+    assert direct == pasm_result  # exact, not approximate
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(4, 128),
+    bins=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_float_equivalence(n, bins, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, bins, size=n), jnp.uint8)
+    cb = jnp.asarray(rng.normal(size=bins), jnp.float32)
+    a = pas.weight_shared_dot(x, idx, cb)
+    b = pas.pasm_dot(x, idx, cb)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("groups", [1, 4])
+@pytest.mark.parametrize("bins", [4, 16, 64])
+def test_matmul_equivalence(groups, bins):
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (64, 48))
+    t = pasm.quantize(w, bins=bins, groups=groups)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    y_ws = pas.weight_shared_matmul(x, t)
+    y_pasm = pas.pasm_matmul(x, t)
+    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_pasm), rtol=1e-4, atol=1e-4)
+
+
+def test_cycle_model_paper_example():
+    """§2.2: 1024 inputs, B=16, 4 PAS sharing one MAC → 1088 cycles."""
+    assert pas.mac_cycles(1024) == 1024
+    assert pas.pasm_cycles(1024, bins=16, pas_per_mac=4) == 1088
+    assert pas.pasm_cycles(1024, bins=16, pas_per_mac=1) == 1040

@@ -1,0 +1,46 @@
+"""Roofline machinery: collective parsing, term math, HLO attribution."""
+import numpy as np
+
+from repro import roofline as RL
+
+HLO = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256]
+  %all-gather.2 = bf16[64,128]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups=[2,8]<=[16]
+  %all-reduce-start.3 = (f32[8]{0}, f32[8]{0}) all-reduce-start(%w), replica_groups=[1,4]<=[4]
+  %ard = f32[8]{0} all-reduce-done(%all-reduce-start.3)
+  %notacoll = f32[10]{0} add(%a, %b)
+"""
+
+
+def test_parse_collective_bytes():
+    st = RL.parse_collective_bytes(HLO)
+    # all-reduce: 1024·512·4 bytes × 2·15/16
+    ar = 1024 * 512 * 4 * 2 * 15 / 16
+    # start op: two f32[8] in the tuple = 64 B × 2·3/4
+    ar += 64 * 2 * 3 / 4
+    assert np.isclose(st.bytes_by_kind["all-reduce"], ar)
+    ag = 64 * 128 * 2 * 3 / 4  # explicit groups of 4
+    assert np.isclose(st.bytes_by_kind["all-gather"], ag)
+    assert st.count_by_kind["all-reduce"] == 2  # start counted, done skipped
+    assert "add" not in st.bytes_by_kind
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.roofline_terms(
+        arch="a", shape="s", mesh_name="16x16", n_devices=256,
+        cost={"flops": 197e12, "bytes accessed": 819e9 / 2},
+        hlo_text="", model_flops=197e12 * 256 * 0.5,
+    )
+    assert np.isclose(r.compute_s, 1.0)
+    assert np.isclose(r.memory_s, 0.5)
+    assert r.bottleneck == "compute"
+    assert np.isclose(r.roofline_fraction, 0.5)
+    assert np.isclose(r.useful_flops_frac, 0.5)
+
+
+def test_hlo_bytes_by_op():
+    txt = "  %d = f32[128,128]{1,0} dot(%a, %b)\n  %c = bf16[64]{0} copy(%d)\n"
+    agg = dict(RL.hlo_bytes_by_op(txt))
+    assert agg["dot"] == 128 * 128 * 4
+    assert agg["copy"] == 128

@@ -1,0 +1,87 @@
+"""Sharding rules: specs by path, divisibility fallback, ZeRO/FSDP derivation."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import api, sharding
+from repro.models.common import quantize_params
+
+AX = {"data": 16, "model": 16}
+
+
+def test_param_spec_rules():
+    params = {
+        "embed": jnp.zeros((1600, 64)),
+        "layers": {
+            "attn": {"wq": jnp.zeros((2, 64, 256)), "wo": jnp.zeros((2, 256, 64))},
+            "mlp": {"w1": jnp.zeros((2, 64, 256)), "w2": jnp.zeros((2, 256, 64))},
+            "attn_norm": jnp.zeros((2, 64)),
+            "moe": {"w1": jnp.zeros((2, 32, 64, 256)), "router": jnp.zeros((2, 64, 32))},
+        },
+        "lm_head": jnp.zeros((64, 1600)),
+    }
+    sp = sharding.param_pspecs(params, AX)
+    assert sp["embed"] == P("model", None)
+    assert sp["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert sp["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert sp["layers"]["mlp"]["w2"] == P(None, "model", None)
+    assert sp["layers"]["attn_norm"] == P(None, None)
+    assert sp["layers"]["moe"]["w1"] == P(None, "model", None, "data")
+    assert sp["layers"]["moe"]["router"] == P(None, None, None)
+    assert sp["lm_head"] == P(None, "model")
+
+
+def test_indivisible_falls_back_to_replicated():
+    params = {"attn": {"wq": jnp.zeros((10, 24))}}  # 24 % 16 != 0
+    sp = sharding.param_pspecs(params, AX)
+    assert sp["attn"]["wq"] == P(None, None)
+
+
+def test_pasm_leaves_get_specs():
+    cfg = get_config("qwen3-32b", smoke=True).with_quant(
+        enabled=True, bins=64, min_weight_elems=64
+    )
+    model = api.get_model(cfg)
+    params = quantize_params(model.init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    sp = sharding.param_pspecs(params, {"data": 2, "model": 2})
+    # idx inherits the parent weight layout; codebook replicated
+    wq = sp["layers"]["attn"]["wq"]
+    assert wq.idx == P(None, None, "model")
+    assert wq.codebook == P(None, None, None)
+
+
+def test_zero1_opt_specs_add_data():
+    params = {"w1": jnp.zeros((64, 256))}
+    base = sharding.param_pspecs(params, AX)
+    z = sharding.opt_state_pspecs(params, base, AX)
+    # w1 is (None, model): ZeRO shards dim0 over data
+    assert z["w1"] == P("data", "model")
+
+
+def test_zero1_skips_already_data_sharded():
+    params = {"moe": {"w1": jnp.zeros((32, 64, 256))}}
+    base = sharding.param_pspecs(params, AX)
+    z = sharding.opt_state_pspecs(params, base, AX)
+    assert z["moe"]["w1"] == base["moe"]["w1"]  # 2-D expert sharding untouched
+
+
+def test_cache_specs_kv_heads_vs_seq():
+    from repro.nn.attention import KVCache
+
+    # kv=32 divisible by 16 → heads sharded
+    c1 = {"scan": KVCache(k=jnp.zeros((2, 8, 64, 32, 16)), v=jnp.zeros((2, 8, 64, 32, 16)), pos=jnp.zeros((2,), jnp.int32))}
+    cfg = get_config("stablelm-3b")
+    sp = sharding.cache_pspecs(cfg, c1, AX, ("data",))
+    assert sp["scan"].k == P(None, ("data",), None, "model", None)
+    # kv=8 not divisible by 16 → sequence sharded
+    cfg2 = get_config("qwen3-32b")
+    c2 = {"scan": KVCache(k=jnp.zeros((2, 8, 64, 8, 16)), v=jnp.zeros((2, 8, 64, 8, 16)), pos=jnp.zeros((2,), jnp.int32))}
+    sp2 = sharding.cache_pspecs(cfg2, c2, AX, ("data",))
+    assert sp2["scan"].k == P(None, ("data",), "model", None, None)
+
+
+def test_batch_axes_adaptive():
+    assert sharding.batch_axes(False, 256) == ("data",)
+    assert sharding.batch_axes(True, 256) == ("pod", "data")
+    assert sharding.batch_axes(False, 1) == ()  # long_500k: batch unshardable

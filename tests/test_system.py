@@ -1,0 +1,129 @@
+"""End-to-end behaviour: train→checkpoint→restart equivalence, serving, QAT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import api
+from repro.models.common import ShardCtx, quantize_params, weight_bytes
+from repro.serve.engine import Engine
+from repro.train import optimizer as opt
+from repro.train import step as step_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _train_n(cfg, params, state, train_step, dcfg, start, n):
+    losses = []
+    for s in range(start, start + n):
+        params, state, m = train_step(params, state, synthetic_batch(dcfg, s))
+        losses.append(float(m["loss"]))
+    return params, state, m, losses
+
+
+def test_training_reduces_loss():
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    state = opt.init_opt_state(params)
+    dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=64, global_batch=4)
+    ts = jax.jit(
+        step_mod.make_train_step(cfg, opt.AdamWConfig(lr=1e-3, total_steps=30), ShardCtx()),
+        donate_argnums=(0, 1),
+    )
+    params, state, m, losses = _train_n(cfg, params, state, ts, dcfg, 0, 30)
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    """train(4) == train(2) → checkpoint → restore → train(2): same params.
+
+    The fault-tolerance contract: a crash+restore never changes the math
+    (data pipeline is step-addressed; optimizer state is saved whole).
+    """
+    cfg = get_config("qwen3-32b", smoke=True)
+    model = api.get_model(cfg)
+    dcfg = DataConfig(seed=3, vocab=cfg.vocab, seq_len=32, global_batch=2)
+    ts = jax.jit(step_mod.make_train_step(cfg, opt.AdamWConfig(lr=1e-3), ShardCtx()))
+
+    p0 = model.init_params(cfg, KEY)
+    s0 = opt.init_opt_state(p0)
+    pa, sa, _, _ = _train_n(cfg, p0, s0, ts, dcfg, 0, 4)
+
+    pb, sb, _, _ = _train_n(cfg, p0, s0, ts, dcfg, 0, 2)
+    ck.save(tmp_path, 2, (pb, sb))
+    (pr, sr), man = ck.restore(tmp_path, (pb, sb))
+    pc, sc, _, _ = _train_n(cfg, pr, sr, ts, dcfg, man["step"], 2)
+
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_engine_drains_and_is_deterministic():
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, batch_slots=2, max_seq=64)
+        rng = np.random.default_rng(0)
+        reqs = [eng.submit(rng.integers(0, cfg.vocab, size=6), max_new=5) for _ in range(4)]
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        assert all(len(r.out) == 5 for r in reqs)
+        outs.append([tuple(r.out) for r in reqs])
+    assert outs[0] == outs[1]  # greedy decode is deterministic
+
+
+def test_pasm_end_to_end_compression_and_serving():
+    """The paper's pipeline: train dense → k-means weight-share → serve."""
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    qcfg = cfg.with_quant(enabled=True, bins=16, impl="dequant", min_weight_elems=1024)
+    qparams = quantize_params(params, qcfg)
+    wb = weight_bytes(qparams)
+    assert wb["ratio"] > 1.5  # int4 storage on the large mats
+    eng = Engine(qcfg, qparams, batch_slots=2, max_seq=64)
+    r = eng.submit(np.arange(5) % cfg.vocab, max_new=4)
+    eng.run_until_drained()
+    assert r.done and len(r.out) == 4
+
+
+def test_microbatched_grad_accum_matches_full_batch():
+    cfg = get_config("qwen3-32b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    state = opt.init_opt_state(params)
+    dcfg = DataConfig(seed=5, vocab=cfg.vocab, seq_len=32, global_batch=4)
+    batch = synthetic_batch(dcfg, 0)
+    ocfg = opt.AdamWConfig(lr=1e-3)
+    full = step_mod.make_train_step(cfg, ocfg, ShardCtx(), microbatches=1)
+    micro = step_mod.make_train_step(cfg, ocfg, ShardCtx(), microbatches=2)
+    p1, _, m1 = full(params, state, batch)
+    p2, _, m2 = micro(params, state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_grad_compression_trains():
+    """PASM-style gradient dictionary compression still converges."""
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    params = model.init_params(cfg, KEY)
+    state = opt.init_opt_state(params)
+    dcfg = DataConfig(seed=0, vocab=cfg.vocab, seq_len=64, global_batch=4)
+    ts = jax.jit(
+        step_mod.make_train_step(
+            cfg, opt.AdamWConfig(lr=1e-3, total_steps=20), ShardCtx(), compress_grads_bins=256
+        ),
+        donate_argnums=(0, 1),
+    )
+    _, _, m, losses = _train_n(cfg, params, state, ts, dcfg, 0, 20)
+    assert losses[-1] < losses[0] - 0.3
