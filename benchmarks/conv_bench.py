@@ -1,12 +1,32 @@
-"""Measured latency of the three conv-accelerator variants (paper §5 analog).
+"""Measured latency of the conv-accelerator variants (paper §5 analog).
 
-On TPU hardware the PASM variant's +N→N+B latency shows up per §4; on this
-CPU container we measure the jitted JAX ports to confirm (a) all three agree
-numerically and (b) the relative cost ordering of the formulations — the
-PAS-histogram formulation costs ≈B× the MACs of the direct product, which is
-exactly the DESIGN.md §2 trade-off statement.
+Two tiers:
+
+* ``conv_variants_latency`` — the paper's own §4 single-image configuration,
+  all three einsum ports.  On TPU hardware the PASM variant's +N→N+B latency
+  shows up per §4; on this CPU container we confirm (a) numerical agreement
+  and (b) the relative cost ordering — the PAS-histogram formulation costs
+  ≈B× the MACs of the direct product, exactly the DESIGN.md §2 trade-off.
+
+* ``batched_conv_latency`` / ``cnn_forward_latency`` — the production shape
+  of the same workload (DESIGN.md §3): batched im2col lowered onto the Pallas
+  GEMMs at realistic AlexNet layer sizes (224×224×3→96, 27×27×96→256) and
+  the full CNN stack.  On CPU the kernels run in interpret mode, so absolute
+  µs are not hardware numbers — the rows exist to exercise the fast path at
+  scale and to compare formulations on equal footing (``--smoke`` shrinks
+  batch/iters for CI).
+
+    PYTHONPATH=src python benchmarks/conv_bench.py [--smoke]
 """
 from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))  # direct-script runs: make `benchmarks` importable
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +35,13 @@ from repro.configs.alexnet_conv import PAPER_SPEC
 from repro.core import conv as cv
 
 from benchmarks.common import emit, time_us
+
+# the ISSUE's realistic layer sizes: AlexNet conv1 and conv2 under the
+# paper's kernel-centred VALID windowing
+REALISTIC_LAYERS = (
+    ("alexnet_conv1", cv.ConvSpec(IH=224, IW=224, C=3, KY=11, KX=11, M=96, stride=4)),
+    ("alexnet_conv2", cv.ConvSpec(IH=27, IW=27, C=96, KY=5, KX=5, M=256, stride=1)),
+)
 
 
 def conv_variants_latency():
@@ -33,3 +60,58 @@ def conv_variants_latency():
         emit(f"conv.direct.B{bins}", t_d)
         emit(f"conv.weight_shared.B{bins}", t_w)
         emit(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}")
+
+
+def batched_conv_latency(smoke: bool = False):
+    """Realistic layers, batched, Pallas kernel path vs the einsum port."""
+    batch = 1 if smoke else 8
+    iters = 1 if smoke else 5
+    warmup = 1 if smoke else 2
+    for name, spec in REALISTIC_LAYERS:
+        imgs = jax.random.normal(jax.random.PRNGKey(2), (batch, spec.C, spec.IH, spec.IW))
+        kern = jax.random.normal(
+            jax.random.PRNGKey(3), (spec.M, spec.C, spec.KY, spec.KX)
+        ) * (spec.C * spec.KY * spec.KX) ** -0.5
+        cb, idx = cv.quantize_conv_weights(kern, 16)
+        oh, ow = cv.out_hw(spec)
+        derived = f"P={batch * oh * ow} K={spec.C * spec.KY * spec.KX} M={spec.M}"
+
+        def f_kernel(i, idx=idx, cb=cb, spec=spec):
+            return cv.conv2d_weight_shared(i, idx, cb, spec=spec, engine="kernel")
+
+        def f_einsum(i, idx=idx, cb=cb, spec=spec):
+            return cv.conv2d_weight_shared(i, idx, cb, spec=spec, engine="einsum")
+
+        t_k = time_us(jax.jit(f_kernel), imgs, iters=iters, warmup=warmup)
+        t_e = time_us(jax.jit(f_einsum), imgs, iters=iters, warmup=warmup)
+        emit(f"conv.batched.pasm_kernel.{name}.bs{batch}", t_k, derived)
+        emit(f"conv.batched.einsum.{name}.bs{batch}", t_e, derived)
+
+
+def cnn_forward_latency(smoke: bool = True):
+    """Full AlexNet-style stack forward on the fused-dequant kernel path."""
+    from repro.configs import get_cnn_config
+    from repro.models import cnn
+
+    cfg = get_cnn_config("alexnet", smoke=smoke)
+    params = cnn.quantize(cnn.init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    batch = 2 if smoke else 8
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.in_chw))
+    iters = 1 if smoke else 5
+    t = time_us(lambda i: cnn.forward(params, i, cfg), imgs, iters=iters, warmup=1)
+    emit(f"cnn.forward.{cfg.name}.bs{batch}", t, f"layers={len(cfg.layers)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: batch 1-2, single timed iteration")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    conv_variants_latency()
+    batched_conv_latency(smoke=args.smoke)
+    cnn_forward_latency(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

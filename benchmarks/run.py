@@ -22,6 +22,9 @@ BENCHES = [
     ("fig19_22", paper_figures.fig19_22_fpga_accel),
     ("table2", paper_figures.table2_macops),
     ("conv_latency", conv_bench.conv_variants_latency),
+    # interpret-mode on CPU: smoke sizing; run conv_bench.py directly on TPU
+    ("conv_batched", lambda: conv_bench.batched_conv_latency(smoke=True)),
+    ("cnn_forward", lambda: conv_bench.cnn_forward_latency(smoke=True)),
     ("pasm_bytes", pasm_roofline.weight_bytes_table),
     ("pasm_matmul", pasm_roofline.matmul_formulations),
     ("pasm_kernel", pasm_roofline.kernel_oracle_check),

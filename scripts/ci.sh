@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full offline test suite plus an interpret-mode smoke of the
+# batched conv benchmark (exercises the Pallas PASM kernels end to end).
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: batched conv benchmark (interpret mode) =="
+python benchmarks/conv_bench.py --smoke
+
+echo "CI OK"

@@ -32,6 +32,19 @@ def get_shape(name: str) -> ShapeSpec:
     return SHAPES[name]
 
 
+# CNN (vision) registry — separate from the LM cells above: CNNConfig is not
+# an ArchConfig and the conv stack has no prefill/decode surface.
+CNN_IDS = ("alexnet",)
+
+
+def get_cnn_config(name: str, *, smoke: bool = False):
+    if name not in CNN_IDS:
+        raise KeyError(f"unknown cnn {name!r}; known: {CNN_IDS}")
+    from repro.configs import alexnet_conv as mod
+
+    return mod.smoke_config() if smoke else mod.config()
+
+
 # cells skipped by design (sub-quadratic requirement / no decoder):
 # full-attention archs skip long_500k (assignment sheet; DESIGN.md §5).
 _SUBQUADRATIC = {"mamba2-130m", "recurrentgemma-2b"}

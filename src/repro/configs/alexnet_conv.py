@@ -2,9 +2,75 @@
 layer — 5×5 image, 15 channels, 3×3 kernel, 2 output channels, stride 1 —
 with B ∈ {4, 8, 16} weight bins.  This is the faithful-reproduction target
 for Figs 14–22; see benchmarks/ and tests/test_conv.py.
+
+Beyond the single paper layer, :class:`CNNConfig` scales the same accelerator
+to a full AlexNet-style conv stack (the network the paper's layer is drawn
+from): conv/ReLU/pool layers with one PASM dictionary per conv layer and a
+dense classifier head, running on the batched Pallas conv path
+(DESIGN.md §3).  Windowing stays the paper's kernel-centred VALID bounds, so
+spatial dims differ slightly from the padded torchvision AlexNet.
 """
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
 from repro.core.conv import ConvSpec
 
 PAPER_SPEC = ConvSpec(IH=5, IW=5, C=15, KY=3, KX=3, M=2, stride=1)
 PAPER_BINS = (4, 8, 16)
 PAPER_BITWIDTHS = (8, 32)  # kernel bit-widths evaluated in the paper
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayerSpec:
+    """One conv/ReLU(/pool) stage of the stack."""
+
+    c_out: int
+    k: int
+    stride: int = 1
+    pool: int = 1  # max-pool window == stride; 1 = no pool
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """An AlexNet-family CNN on the weight-shared conv accelerator."""
+
+    name: str
+    in_chw: tuple  # (C, H, W) input images
+    layers: Sequence[ConvLayerSpec]
+    classes: int
+    bins: int = 16  # PASM dictionary size, one dictionary per conv layer
+    impl: str = "kernel"  # einsum | kernel (pasm_matmul) | pas_kernel
+    family: str = "cnn"  # models/api dispatch key
+
+
+def config() -> CNNConfig:
+    """Full AlexNet-style stack at the paper's ImageNet-scale layer sizes."""
+    return CNNConfig(
+        name="alexnet",
+        in_chw=(3, 224, 224),
+        layers=(
+            ConvLayerSpec(96, 11, stride=4, pool=2),  # 224→54→27
+            ConvLayerSpec(256, 5, pool=2),            # 27→23→11
+            ConvLayerSpec(384, 3),                    # 11→9
+            ConvLayerSpec(384, 3),                    # 9→7
+            ConvLayerSpec(256, 3, pool=2),            # 7→5→2
+        ),
+        classes=1000,
+    )
+
+
+def smoke_config() -> CNNConfig:
+    """CIFAR-sized stack: same code path, CPU-testable in interpret mode."""
+    return CNNConfig(
+        name="alexnet-smoke",
+        in_chw=(3, 32, 32),
+        layers=(
+            ConvLayerSpec(16, 3, pool=2),  # 32→30→15
+            ConvLayerSpec(32, 3, pool=2),  # 15→13→6
+            ConvLayerSpec(32, 3, pool=2),  # 6→4→2
+        ),
+        classes=10,
+    )

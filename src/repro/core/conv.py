@@ -14,6 +14,15 @@ semantics:
 All three produce identical results on identical weights (the paper's §5.3
 claim), property-tested in ``tests/test_conv.py``.  "VALID"-style windowing
 follows the paper's loop bounds: output spans kernel-centred positions.
+
+Batched fast path (DESIGN.md §3): every variant accepts a single image
+``(C, IH, IW)`` or a batch ``(B, C, IH, IW)``.  Convolution lowers onto the
+PASM GEMMs via a batched im2col — ``(B, C, IH, IW) → (B·P, C·KY·KX)`` in the
+paper's (c, ky, kx) flat order — so weight-shared variants execute on the
+Pallas kernels (``pasm_matmul``: fused dequant; ``pas_matmul``: the
+paper-faithful two-phase formulation).  ``engine="auto"`` routes batched
+inputs through the kernels and keeps single images on the seed's einsum port
+(the reference semantics the kernels are tested against).
 """
 from __future__ import annotations
 
@@ -28,6 +37,8 @@ from repro.core import pasm as _pasm
 __all__ = [
     "ConvSpec",
     "out_hw",
+    "im2col",
+    "conv_pasm_tensor",
     "conv2d_direct",
     "conv2d_weight_shared",
     "conv2d_pasm",
@@ -54,13 +65,26 @@ def out_hw(spec: ConvSpec) -> tuple[int, int]:
     return oh, ow
 
 
-def _im2col(image: jax.Array, spec: ConvSpec) -> jax.Array:
-    """image (C, IH, IW) → patches (OH·OW, C·KY·KX) in the paper's loop order.
+def _batched(image: jax.Array) -> tuple[jax.Array, bool]:
+    """Normalize (C, IH, IW) | (B, C, IH, IW) to batched; report if added."""
+    if image.ndim == 3:
+        return image[None], True
+    if image.ndim == 4:
+        return image, False
+    raise ValueError(f"image must be (C,IH,IW) or (B,C,IH,IW), got {image.shape}")
+
+
+def im2col(images: jax.Array, spec: ConvSpec) -> jax.Array:
+    """images (B, C, IH, IW) → patches (B·OH·OW, C·KY·KX), paper loop order.
 
     Column order is (cIdx, kyIdx, kxIdx) — matching Fig 1's loop nest so that
-    index tensors flatten identically for the PASM path.
+    index tensors flatten identically for the PASM path.  The flattened
+    leading axis is the GEMM M dim of the batched fast path: one row per
+    (image, output pixel).
     """
-    C, IH, IW = image.shape
+    B, C, IH, IW = images.shape
+    if (C, IH, IW) != (spec.C, spec.IH, spec.IW):
+        raise ValueError(f"image {images.shape[1:]} does not match spec {spec}")
     oh, ow = out_hw(spec)
     ky = jnp.arange(spec.KY)
     kx = jnp.arange(spec.KX)
@@ -69,10 +93,23 @@ def _im2col(image: jax.Array, spec: ConvSpec) -> jax.Array:
     # gather indices: (oh, ow, C, KY, KX)
     rows = oy[:, None, None, None, None] + ky[None, None, None, :, None]
     cols = ox[None, :, None, None, None] + kx[None, None, None, None, :]
-    patches = image[
-        jnp.arange(C)[None, None, :, None, None], rows, cols
-    ]  # (oh, ow, C, KY, KX)
-    return patches.reshape(oh * ow, C * spec.KY * spec.KX)
+    patches = images[
+        :, jnp.arange(C)[None, None, :, None, None], rows, cols
+    ]  # (B, oh, ow, C, KY, KX)
+    return patches.reshape(B * oh * ow, C * spec.KY * spec.KX)
+
+
+def _im2col(image: jax.Array, spec: ConvSpec) -> jax.Array:
+    """Single-image im2col (seed surface): (C, IH, IW) → (OH·OW, C·KY·KX)."""
+    return im2col(image[None], spec)
+
+
+def _col2im(y: jax.Array, spec: ConvSpec, batch: int, squeeze: bool) -> jax.Array:
+    """GEMM output (B·P, M) → feature map (B, M, OH, OW) (squeezed if asked)."""
+    oh, ow = out_hw(spec)
+    out = y.reshape(batch, oh * ow, spec.M)
+    out = jnp.moveaxis(out, -1, 1).reshape(batch, spec.M, oh, ow)
+    return out[0] if squeeze else out
 
 
 def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
@@ -91,12 +128,15 @@ def conv2d_direct(
     spec: ConvSpec,
     relu: bool = False,
 ) -> jax.Array:
-    """Non-weight-shared accelerator (Fig 1).  kernel: (M, C, KY, KX)."""
-    patches = _im2col(image, spec)  # (P, N)
-    w = kernel.reshape(spec.M, -1).T  # (N, M) — same (c,ky,kx) order
+    """Non-weight-shared accelerator (Fig 1).  kernel: (M, C, KY, KX).
+
+    Accepts a single image (C, IH, IW) or a batch (B, C, IH, IW).
+    """
+    images, squeeze = _batched(image)
+    patches = im2col(images, spec)  # (B·P, K)
+    w = kernel.reshape(spec.M, -1).T  # (K, M) — same (c,ky,kx) order
     y = patches @ w  # plain MACs
-    oh, ow = out_hw(spec)
-    return _epilogue(y, bias, relu).T.reshape(spec.M, oh, ow)
+    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
 
 
 def quantize_conv_weights(
@@ -111,6 +151,37 @@ def quantize_conv_weights(
     return cb[0], idx.reshape(kernel.shape).astype(jnp.uint8)
 
 
+def conv_pasm_tensor(bin_idx: jax.Array, codebook: jax.Array) -> _pasm.PASMTensor:
+    """View conv weight-share state as the GEMM operand of the Pallas kernels.
+
+    ``bin_idx (M, C, KY, KX) uint8`` + ``codebook (B,)`` → a single-dictionary
+    :class:`PASMTensor` of logical shape ``(K, M)`` with ``K = C·KY·KX`` in
+    the paper's (c, ky, kx) flat order — exactly the transpose layout
+    ``im2col`` patches contract against.
+    """
+    M = bin_idx.shape[0]
+    idx = bin_idx.reshape(M, -1).T.astype(jnp.uint8)  # (K, M)
+    bins = codebook.shape[0]
+    return _pasm.PASMTensor(
+        idx=idx,
+        codebook=codebook.reshape(1, bins).astype(jnp.float32),
+        shape=tuple(idx.shape),
+        bins=bins,
+        bits=_pasm.bits_for_bins(bins),
+        packed=False,
+    )
+
+
+def _resolve_engine(engine: str, squeeze: bool) -> str:
+    if engine == "auto":
+        # batched inputs ride the Pallas fast path; single images keep the
+        # seed's einsum port (the reference the kernels are tested against)
+        return "einsum" if squeeze else "kernel"
+    if engine not in ("einsum", "kernel"):
+        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
+    return engine
+
+
 def conv2d_weight_shared(
     image: jax.Array,
     bin_idx: jax.Array,
@@ -119,10 +190,25 @@ def conv2d_weight_shared(
     *,
     spec: ConvSpec,
     relu: bool = False,
+    engine: str = "auto",
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Weight-shared accelerator (Figs 3/4): dereference dictionary, then MAC."""
-    kernel = codebook[bin_idx.astype(jnp.int32)]  # the extra indirection level
-    return conv2d_direct(image, kernel, bias, spec=spec, relu=relu)
+    """Weight-shared accelerator (Figs 3/4): dereference dictionary, then MAC.
+
+    ``engine="kernel"`` (default for batched input) lowers onto
+    :func:`repro.kernels.ops.pasm_matmul` — the fused-dequant Pallas kernel —
+    via the batched im2col; ``engine="einsum"`` is the seed's pure-XLA port.
+    """
+    images, squeeze = _batched(image)
+    if _resolve_engine(engine, squeeze) == "einsum":
+        kernel = codebook[bin_idx.astype(jnp.int32)]  # the extra indirection
+        return conv2d_direct(image, kernel, bias, spec=spec, relu=relu)
+    from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+    patches = im2col(images, spec)  # (B·P, K)
+    t = conv_pasm_tensor(bin_idx, codebook)
+    y = _kops.pasm_matmul(patches, t, interpret=interpret)  # (B·P, M)
+    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
 
 
 def conv2d_pasm(
@@ -133,6 +219,8 @@ def conv2d_pasm(
     *,
     spec: ConvSpec,
     relu: bool = False,
+    engine: str = "auto",
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Weight-shared-with-PASM accelerator (Fig 13).
 
@@ -140,14 +228,26 @@ def conv2d_pasm(
       PAS:       ``imageBin[b] += imVal`` for every (imVal, binIdx) pair
       post-pass: ``Σ_b imageBin[b] · sk[b]``
     Vectorized: one-hot histogram over the patch axis, then a (B,)-dot.
+
+    ``engine="kernel"`` (default for batched input) runs the same two-phase
+    formulation inside :func:`repro.kernels.ops.pas_matmul` — PAS bins live in
+    a VMEM scratch accumulator, the codebook multiply happens once at the last
+    reduction step.
     """
+    images, squeeze = _batched(image)
+    if _resolve_engine(engine, squeeze) == "kernel":
+        from repro.kernels import ops as _kops  # deferred import, see above
+
+        patches = im2col(images, spec)  # (B·P, K)
+        t = conv_pasm_tensor(bin_idx, codebook)
+        y = _kops.pas_matmul(patches, t, interpret=interpret)  # (B·P, M)
+        return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
     B = codebook.shape[0]
-    patches = _im2col(image, spec)  # (P, N)
+    patches = im2col(images, spec)  # (B·P, N)
     idx = bin_idx.reshape(spec.M, -1)  # (M, N) — (c,ky,kx) flat order
     onehot = jax.nn.one_hot(idx, B, dtype=patches.dtype)  # (M, N, B)
     # PAS phase: imageBin[p, m, b] = Σ_n patches[p, n]·[idx[m, n] = b]
     image_bins = jnp.einsum("pn,mnb->pmb", patches, onehot)
     # post-pass multiply: one multiply per bin, not per element
     y = jnp.einsum("pmb,b->pm", image_bins, codebook.astype(patches.dtype))
-    oh, ow = out_hw(spec)
-    return _epilogue(y, bias, relu).T.reshape(spec.M, oh, ow)
+    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)

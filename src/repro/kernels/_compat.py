@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer JAX;
+kernel modules import :data:`CompilerParams` from here so the same source runs
+on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -32,28 +32,75 @@ def _round_up(v: int, m: int) -> int:
 
 
 def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
+    """Tile plan for an (M, K)·(K, N) PASM matmul.
+
+    Returns ``(bm, bn, bk, gs_pad)`` where ``gs_pad`` is the padded per-group
+    reduction length (``== group_size`` when the group tiles exactly).  A
+    group that fits one k-tile (``group_size <= 512``) is never padded — this
+    keeps the seed's tiling (and its numerics) on every aligned shape.  Larger
+    groups must split into 128-aligned k-tiles; when no such divisor exists
+    (e.g. conv im2col reductions like K = C·KY·KX = 2400) the group is padded
+    up to the next 128 multiple and :func:`_pad_operands` maps the pad rows to
+    a reserved zero-codebook bin instead of the former hard ``ValueError``.
+    """
     bm = min(128, _round_up(M, 8))
     bn = min(128, _round_up(N, 128))
-    bk = min(512, group_size)
-    # bk must divide group_size and be even when packed
-    while group_size % bk != 0 or (packed and bk % 2):
+    if group_size <= 512 and not (packed and group_size % 2):
+        return bm, bn, group_size, group_size  # one k-tile per group
+    bk = 512
+    while bk >= 128 and group_size % bk:
         bk //= 2
-        if bk < 2:
-            raise ValueError(f"cannot tile group_size={group_size} packed={packed}")
-    return bm, bn, bk
+    if bk >= 128:
+        return bm, bn, bk, group_size
+    if packed and group_size % 2:
+        # packed nibbles straddle the group boundary: no consistent layout
+        raise ValueError(f"packed int4 needs an even group size, got {group_size}")
+    gs_pad = _round_up(group_size, 128)
+    bk = min(512, gs_pad)
+    while gs_pad % bk:
+        bk //= 2
+    return bm, bn, bk, gs_pad
 
 
-def _pad_operands(x, idx, bm, bn, bk, packed):
+def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
+    """Pad (x, idx, codebook) to the tile plan; returns logical (M, N, Kp).
+
+    M/N padding is plain zero/edge padding (sliced off the output).  K padding
+    appends ``gs_pad - group_size`` rows per group: the pad rows of ``x`` are
+    zero AND their indices point at a reserved all-zero codebook bin (appended
+    as bin ``B`` when representable), so padded positions are doubly inert in
+    both the fused-dequant and the PAS-histogram formulation.  When the pad
+    bin is not representable (packed int4 at B=16, or B=256 saturating uint8)
+    bin 0 is used instead — still exact, because the paired activations are
+    zero.  Grouped codebooks pad per group so the kernel's ``k-block → group``
+    index map stays a pure division.
+    """
     M, K = x.shape
-    Kp_phys, N = idx.shape
-    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
-    if Kp != K:
-        # padding the reduction would need codebook-aware index padding across
-        # group boundaries; block picking guarantees bk | group_size | K.
-        raise ValueError(f"K={K} must already be a multiple of bk={bk}")
+    N = idx.shape[1]
+    G, B = codebook.shape
+    gs = K // G
+    if gs_pad != gs:
+        pad = gs_pad - gs
+        if not packed and B < 256:
+            codebook = jnp.pad(codebook, ((0, 0), (0, 1)))  # reserved zero bin
+            pad_bin = B
+        else:
+            pad_bin = 0
+        if packed:
+            idxg = idx.reshape(G, gs // 2, N)
+            idx = jnp.pad(idxg, ((0, 0), (0, pad // 2), (0, 0))).reshape(-1, N)
+        else:
+            idxg = idx.reshape(G, gs, N)
+            idx = jnp.pad(
+                idxg, ((0, 0), (0, pad), (0, 0)), constant_values=pad_bin
+            ).reshape(-1, N)
+        x = jnp.pad(x.reshape(M, G, gs), ((0, 0), (0, 0), (0, pad)))
+        x = x.reshape(M, G * gs_pad)
+        K = G * gs_pad
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
     x = jnp.pad(x, ((0, Mp - M), (0, 0))) if Mp != M else x
     idx = jnp.pad(idx, ((0, 0), (0, Np - N))) if Np != N else idx
-    return x, idx, (M, N)
+    return x, idx, codebook, (M, N, K)
 
 
 @functools.partial(
@@ -66,14 +113,16 @@ def _pasm_matmul_fwd_impl(
         return _ref.pasm_matmul_ref(x, idx, codebook, packed=packed)
     G, B = codebook.shape
     group_size = logical_k // G
-    bm, bn, bk = _pick_blocks(x.shape[0], logical_k, idx.shape[1], group_size, packed)
-    xp, idxp, (M, N) = _pad_operands(x, idx, bm, bn, bk, packed)
+    bm, bn, bk, gs_pad = _pick_blocks(
+        x.shape[0], logical_k, idx.shape[1], group_size, packed
+    )
+    xp, idxp, cbp, (M, N, Kp) = _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed)
     out = pasm_matmul_kernel_call(
         xp,
         idxp,
-        codebook,
+        cbp,
         packed=packed,
-        logical_k=logical_k,
+        logical_k=Kp,
         bm=bm,
         bn=bn,
         bk=bk,
@@ -147,10 +196,12 @@ def pasm_matmul(
 def _pas_matmul_impl(x, idx, codebook, *, interpret):
     M, K = x.shape
     N = idx.shape[1]
-    bm, bn, bk = _pick_blocks(M, K, N, K, packed=False)
-    xp, idxp, (M, N) = _pad_operands(x, idx, bm, bn, bk, packed=False)
+    bm, bn, bk, gs_pad = _pick_blocks(M, K, N, K, packed=False)
+    xp, idxp, cbp, (M, N, _) = _pad_operands(
+        x, idx, codebook, bm, bn, gs_pad, packed=False
+    )
     out = pas_matmul_kernel_call(
-        xp, idxp, codebook, bm=bm, bn=bn, bk=bk, interpret=interpret
+        xp, idxp, cbp, bm=bm, bn=bn, bk=bk, interpret=interpret
     )
     return out[:M, :N]
 

@@ -12,7 +12,11 @@ __all__ = ["get_model", "input_specs", "lm_loss", "frontend_spec"]
 
 
 def get_model(cfg: ArchConfig):
-    """Returns the module implementing init_params/forward/init_caches/prefill/decode_step."""
+    """Returns the module implementing init_params/forward/init_caches/prefill/decode_step.
+
+    Family ``cnn`` (CNNConfig) exposes init_params/quantize/forward only — a
+    feed-forward vision stack has no KV-cache/prefill/decode surface.
+    """
     if cfg.family in ("dense", "moe", "vlm"):
         from repro.models import transformer as m
     elif cfg.family == "ssm":
@@ -21,6 +25,8 @@ def get_model(cfg: ArchConfig):
         from repro.models import hybrid as m
     elif cfg.family == "audio":
         from repro.models import encdec as m
+    elif cfg.family == "cnn":
+        from repro.models import cnn as m
     else:
         raise ValueError(f"unknown family {cfg.family}")
     return m

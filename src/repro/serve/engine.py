@@ -1,9 +1,13 @@
 """Serving engine: continuous batching over prefill/decode with PASM weights.
 
 The engine owns jitted ``prefill`` and ``decode_step`` closures and a slot
-table.  Requests join a waiting queue; free slots get prefilled (one prompt
-at a time here — a fleet deployment maps slots across the batch dim of the
+table.  Requests join a waiting queue and are admitted in WAVES: when no
+slot is live, up to ``batch_slots`` waiting prompts prefill together against
+fresh caches (a fleet deployment maps slots across the batch dim of the
 production mesh) and every engine tick decodes ONE token for all live slots.
+Wave admission exists because the KV caches share one position counter —
+see :meth:`Engine._admit` for the invariant and DESIGN.md §2 for the
+serving context.
 Weights are PASM-quantized by default: decode is bandwidth-bound, so the
 4–8× weight-byte reduction is the paper's win applied where it matters
 (DESIGN.md §2; measured in benchmarks/pasm_roofline.py).
@@ -54,7 +58,7 @@ class Engine:
         self.batch = batch_slots
         self.max_seq = max_seq
         self.greedy = greedy
-        self.caches = self.model.init_caches(cfg, batch_slots, max_seq)
+        self.caches = None  # built fresh per admission wave (see _admit)
         self.live: dict[int, Request] = {}
         self.waiting: deque[Request] = deque()
         self._uid = 0
@@ -77,21 +81,31 @@ class Engine:
         return r
 
     def _admit(self):
-        """Prefill waiting requests into free slots.
+        """Prefill waiting requests into slots — one WAVE at a time.
 
-        The per-slot cache model here assumes slot-aligned prompts (all slots
-        share one position counter); the production path pads prompts to a
-        common length per admission wave — standard continuous-batching
-        behaviour for step-synchronized decoders.
+        Admission is gated to ticks with no live slot.  The cache model is
+        slot-batched but shares ONE position counter (``KVCache.pos`` is a
+        scalar), so a mid-decode prefill would run the whole batch — zero
+        tokens in live slots — through ``prefill``, overwriting live slots'
+        KV entries at the current position and advancing the shared counter
+        under them (the bug regression-tested in tests/test_engine.py).
+        Per-slot position counters (true continuous batching) are a ROADMAP
+        item; until then waves are the correct admission unit for
+        step-synchronized decoders.
         """
-        free = [s for s in range(self.batch) if s not in {r.slot for r in self.live.values()}]
+        if self.live:
+            return
         admitted = []
+        free = list(range(self.batch))
         while free and self.waiting:
             r = self.waiting.popleft()
             r.slot = free.pop(0)
             admitted.append(r)
         if not admitted:
             return
+        # fresh caches per wave: the previous wave's KV must not be a visible
+        # attention prefix for the new prompts (pos never rewinds mid-wave)
+        self.caches = self.model.init_caches(self.cfg, self.batch, self.max_seq)
         # batch the admitted prompts (padded to equal length)
         S = max(len(r.prompt) for r in admitted)
         toks = np.zeros((self.batch, S), np.int32)

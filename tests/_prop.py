@@ -1,0 +1,105 @@
+"""Property-testing shim: real Hypothesis when installed, else a fallback.
+
+This container is offline, so ``pip install hypothesis`` is impossible and a
+bare ``from hypothesis import ...`` fails collection for every property test.
+Test modules import ``given / settings / st`` from here instead.  When the
+real library is importable it is re-exported unchanged; otherwise a minimal
+deterministic replacement runs ``max_examples`` seeded examples per test —
+no shrinking, no database, but the same decorator surface for the subset of
+the API this suite uses (``st.integers``, ``st.sampled_from``, ``.map``,
+``@settings(deadline=..., max_examples=...)``, ``@given(**kwargs)``).
+
+Determinism: the RNG is seeded from a CRC of the test's qualified name, so a
+failing example reproduces on every run and across machines.
+"""
+from __future__ import annotations
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function wrapper mimicking hypothesis strategies."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def example_for(self, rng):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+    st = _StrategiesModule()
+
+    _DEFAULT_EXAMPLES = 20
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **fixture_kw):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode("utf-8"))
+                )
+                for i in range(n):
+                    kw = {k: s.example_for(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kw, **fixture_kw)
+                    except Exception as e:  # annotate the failing example
+                        raise AssertionError(
+                            f"falsifying example #{i}: {fn.__name__}({kw})"
+                        ) from e
+
+            wrapper._max_examples = getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+            wrapper.hypothesis_shim = True
+            # hide the strategy kwargs from pytest's fixture resolution
+            # (hypothesis does the same: the collected item takes no args)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(*, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        """Accepts (and ignores) hypothesis-only knobs like ``deadline``."""
+
+        def deco(fn):
+            # works in either decorator order: @given reads the stash off the
+            # raw fn; applied on top it updates the wrapper's attribute
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

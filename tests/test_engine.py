@@ -1,0 +1,67 @@
+"""Serving-engine admission: mid-decode submits must not disturb live slots.
+
+Regression for the cache-clobbering bug: ``Engine._admit`` used to re-run
+``prefill`` over the WHOLE batch whenever a free slot existed — zero tokens
+in live slots — overwriting live slots' KV caches and the shared position
+counter.  Admission is now wave-gated (no prefill while any slot is live).
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import Engine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup():
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = api.get_model(cfg)
+    return cfg, model.init_params(cfg, KEY)
+
+
+def test_staggered_submit_preserves_live_outputs():
+    """A request admitted mid-decode must not change earlier requests' output."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    p1 = rng.integers(0, cfg.vocab, size=6)
+    p2 = rng.integers(0, cfg.vocab, size=4)
+
+    # baseline: the first request decoded with nothing else in flight
+    solo = Engine(cfg, params, batch_slots=2, max_seq=64)
+    r_solo = solo.submit(p1, max_new=8)
+    solo.run_until_drained()
+
+    # staggered: identical first request; second submitted mid-decode
+    eng = Engine(cfg, params, batch_slots=2, max_seq=64)
+    r1 = eng.submit(p1, max_new=8)
+    for _ in range(3):  # r1 is now live and mid-decode
+        eng.step()
+    assert not r1.done
+    r2 = eng.submit(p2, max_new=4)
+    eng.run_until_drained()
+
+    assert r1.done and r2.done
+    assert r1.out == r_solo.out  # live slot unaffected by the later admit
+    assert len(r2.out) == 4
+
+
+def test_waves_do_not_leak_kv_prefix():
+    """A request served in wave 2 matches the same request served in wave 1."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    p1 = rng.integers(0, cfg.vocab, size=5)
+    p2 = rng.integers(0, cfg.vocab, size=5)
+
+    solo = Engine(cfg, params, batch_slots=1, max_seq=64)
+    want = solo.submit(p2, max_new=6)
+    solo.run_until_drained()
+
+    eng = Engine(cfg, params, batch_slots=1, max_seq=64)
+    first = eng.submit(p1, max_new=6)
+    second = eng.submit(p2, max_new=6)  # queued: admitted as its own wave
+    eng.run_until_drained()
+
+    assert first.done and second.done
+    assert second.out == want.out  # fresh caches per wave: no stale prefix

@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _prop import given, settings, st
 
 from repro.core import pasm
 from repro.kernels import ops, ref
@@ -84,6 +83,68 @@ def test_pasm_matmul_property(m, n, kmul, bins, seed):
     got = ops.pasm_matmul(x, t, interpret=True)
     want = ref.pasm_matmul_ref(x, t.idx, t.codebook, packed=t.packed)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "M,K,N,bins,groups",
+    [
+        (9, 363, 96, 16, 1),     # odd K (AlexNet conv1 im2col: 3·11·11)
+        (16, 2400, 256, 16, 1),  # K = 96·5·5 (conv2), packed, padded to 2432
+        (8, 1125, 32, 64, 1),    # odd K > 512: the seed raised ValueError here
+        (8, 1200, 32, 16, 2),    # grouped + packed: per-group K padding
+    ],
+)
+def test_pasm_matmul_kpad_vs_oracle(M, K, N, bins, groups):
+    """Reduction dims with no clean tile divisor route through K-padding
+    (reserved zero-codebook bin) instead of the seed's hard ``ValueError``."""
+    pack = None if K % 2 == 0 else False
+    kk = jax.random.PRNGKey(0)
+    w = jax.random.normal(kk, (K, N))
+    t = pasm.quantize(w, bins=bins, groups=groups, pack=pack)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    got = ops.pasm_matmul(x, t, interpret=True)
+    want = ref.pasm_matmul_ref(x, t.idx, t.codebook, packed=t.packed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_pas_matmul_kpad_vs_oracle():
+    """The paper-faithful kernel also accepts K-padded reductions."""
+    K = 2400
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, 64))
+    t = pasm.quantize(w, bins=16, groups=1, pack=False)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, K))
+    got = ops.pas_matmul(x, t, interpret=True)
+    want = ref.pas_matmul_ref(x, t.idx, t.codebook)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "bins,groups,packed",
+    [(16, 4, True), (16, 2, True), (64, 4, False), (16, 1, True)],
+)
+def test_pasm_bwd_gradcheck_vs_dequant_chain(bins, groups, packed):
+    """The custom VJP (packed int4 + groups>1 included) ≡ grad through
+    dequantize-then-dot: same codebook/activation gradients."""
+    M, K, N = 6, 128, 48
+    w = jax.random.normal(jax.random.PRNGKey(4), (K, N))
+    t = pasm.quantize(w, bins=bins, groups=groups, pack=packed)
+    assert t.packed == packed
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, K))
+
+    def loss_kernel(x, cb):
+        tt = dataclasses.replace(t, codebook=cb)
+        return (ops.pasm_matmul(x, tt, interpret=True) ** 2).sum()
+
+    def loss_chain(x, cb):
+        tt = dataclasses.replace(t, codebook=cb)
+        wd = pasm.dequantize(tt, dtype=x.dtype)
+        return (jnp.dot(x, wd, preferred_element_type=jnp.float32) ** 2).sum()
+
+    gx_k, gcb_k = jax.grad(loss_kernel, argnums=(0, 1))(x, t.codebook)
+    gx_c, gcb_c = jax.grad(loss_chain, argnums=(0, 1))(x, t.codebook)
+    assert gcb_k.shape == t.codebook.shape == (groups, bins)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_c), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gcb_k), np.asarray(gcb_c), rtol=1e-4, atol=1e-4)
 
 
 def test_gradients_match_numeric():
