@@ -1,12 +1,14 @@
 """The paper's own experiment: the §4 conv accelerator, all three variants.
 
 Builds the exact configuration evaluated in the paper (5×5 image, 15
-channels, 3×3 kernels, M=2, B ∈ {4,8,16}) and reports (a) numerical
-equivalence of non-weight-shared / weight-shared / weight-shared-with-PASM,
-(b) the calibrated hardware model's area/power/latency deltas next to the
-paper's quoted numbers.  Then it scales the same accelerator up the
-production path (DESIGN.md §3): a batched image stack through the Pallas
-PASM GEMMs, and the full AlexNet-style CNN with per-layer dictionaries.
+channels, 3×3 kernels, M=2, B ∈ {4,8,16}) on the unified
+``ConvParams``/``conv2d`` surface and reports (a) numerical equivalence of
+non-weight-shared / weight-shared / weight-shared-with-PASM, (b) the
+calibrated hardware model's area/power/latency deltas next to the paper's
+quoted numbers.  Then it scales the same accelerator up the production path
+(DESIGN.md §3): a batched image stack through the Pallas PASM GEMMs with the
+fused bias/ReLU epilogue, torchvision-exact SAME geometry on the TPU-native
+NHWC layout, and the full AlexNet-style CNN with per-layer dictionaries.
 
     PYTHONPATH=src python examples/paper_conv.py
 """
@@ -25,22 +27,34 @@ from repro.core import conv as cv
 from repro.core import hwmodel as hw
 from repro.models import cnn
 
+# the §4 accelerator as a geometry-free spec: geometry rides with the images
+PAPER_CONV = cv.Conv2D(
+    k=(PAPER_SPEC.KY, PAPER_SPEC.KX),
+    c_in=PAPER_SPEC.C,
+    c_out=PAPER_SPEC.M,
+    stride=PAPER_SPEC.stride,
+)
+
 
 def main():
-    spec = PAPER_SPEC
     key = jax.random.PRNGKey(0)
-    img = jax.random.normal(key, (spec.C, spec.IH, spec.IW))
-    kern = jax.random.normal(jax.random.PRNGKey(1), (spec.M, spec.C, spec.KY, spec.KX))
+    img = jax.random.normal(key, (PAPER_SPEC.C, PAPER_SPEC.IH, PAPER_SPEC.IW))
+    kern = jax.random.normal(
+        jax.random.PRNGKey(1), (PAPER_SPEC.M, PAPER_SPEC.C, PAPER_SPEC.KY, PAPER_SPEC.KX)
+    )
     bias = jnp.array([0.1, -0.1])
+    conv = dataclasses.replace(PAPER_CONV, relu=True)
 
-    print(f"paper accelerator: image {spec.IH}x{spec.IW}x{spec.C}, "
-          f"kernel {spec.KY}x{spec.KX}, M={spec.M}, stride={spec.stride}\n")
+    print(f"paper accelerator: image {PAPER_SPEC.IH}x{PAPER_SPEC.IW}x{PAPER_SPEC.C}, "
+          f"kernel {PAPER_SPEC.KY}x{PAPER_SPEC.KX}, M={PAPER_SPEC.M}, "
+          f"stride={PAPER_SPEC.stride}\n")
 
     for bins in PAPER_BINS:
-        cb, idx = cv.quantize_conv_weights(kern, bins)
-        y_nws = cv.conv2d_direct(img, kern, bias, spec=spec, relu=True)
-        y_ws = cv.conv2d_weight_shared(img, idx, cb, bias, spec=spec, relu=True)
-        y_pasm = cv.conv2d_pasm(img, idx, cb, bias, spec=spec, relu=True)
+        dense = cv.ConvParams.dense(kern, bias=bias)
+        shared = cv.ConvParams.quantize(kern, bins, bias=bias)
+        y_nws = cv.conv2d(img, dense, conv)
+        y_ws = cv.conv2d(img, shared, conv)  # auto → einsum reference
+        y_pasm = cv.conv2d(img, shared, conv, engine="pas_einsum")
         equiv = float(jnp.abs(y_ws - y_pasm).max())
         qerr = float(jnp.abs(y_nws - y_ws).mean())
         asic = hw.accel_ratio_asic(bins)
@@ -59,25 +73,47 @@ def main():
           f"-{(1-hw.accel_ratio_asic(4)['power'])*100:.1f}% power, "
           f"+{(hw.conv_latency_ratio(4)-1)*100:.1f}% latency")
 
-    batched_fast_path(spec, kern, bias)
+    batched_fast_path(kern, bias)
+    same_nhwc_geometry()
     cnn_stack()
 
 
-def batched_fast_path(spec, kern, bias):
-    """The same accelerator, batched, executing on the Pallas PASM kernels."""
-    print("\n— batched fast path (DESIGN.md §3) —")
-    imgs = jax.random.normal(jax.random.PRNGKey(2), (4, spec.C, spec.IH, spec.IW))
-    cb, idx = cv.quantize_conv_weights(kern, 16)
-    y_kernel = cv.conv2d_weight_shared(imgs, idx, cb, bias, spec=spec, relu=True)
-    y_pas = cv.conv2d_pasm(imgs, idx, cb, bias, spec=spec, relu=True)
-    y_ref = jnp.stack([
-        cv.conv2d_weight_shared(imgs[b], idx, cb, bias, spec=spec, relu=True,
-                                engine="einsum")
-        for b in range(imgs.shape[0])
-    ])
+def batched_fast_path(kern, bias):
+    """The same accelerator, batched: one fused pallas_call per conv layer."""
+    print("\n— batched fast path (DESIGN.md §3, fused epilogue) —")
+    imgs = jax.random.normal(
+        jax.random.PRNGKey(2), (4, PAPER_SPEC.C, PAPER_SPEC.IH, PAPER_SPEC.IW)
+    )
+    conv = dataclasses.replace(PAPER_CONV, relu=True)
+    shared = cv.ConvParams.quantize(kern, 16, bias=bias)
+    y_kernel = cv.conv2d(imgs, shared, conv)  # auto → pasm_matmul, bias+ReLU fused
+    y_pas = cv.conv2d(imgs, shared, conv, engine="pas_kernel")
+    y_ref = cv.conv2d(imgs, shared, conv, engine="einsum")
     print(f"batch of {imgs.shape[0]}: pasm_matmul out {tuple(y_kernel.shape)}, "
           f"max|Δ| vs einsum port {float(jnp.abs(y_kernel - y_ref).max()):.1e}, "
           f"pas_matmul max|Δ| {float(jnp.abs(y_pas - y_ref).max()):.1e}")
+
+
+def same_nhwc_geometry():
+    """torchvision AlexNet layer 1 (3×224×224, k=11, s=4) under SAME + NHWC."""
+    print("\n— SAME padding + NHWC (torchvision-exact geometry) —")
+    conv = cv.Conv2D(k=11, c_in=3, c_out=96, stride=4, padding="same",
+                     layout="NHWC", relu=True)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 224, 224, 3))
+    kern = jax.random.normal(jax.random.PRNGKey(4), (96, 3, 11, 11)) * 0.05
+    shared = cv.ConvParams.quantize(kern, 16, bias=jnp.zeros((96,)))
+    packed = shared.pack(layout="NHWC")  # §3 K-pad: K=363 → 364, then int4
+    y = cv.conv2d(x, shared, conv)
+    y_packed = cv.conv2d(x, packed, conv)
+    kern_q = shared.codebook[shared.idx.astype(jnp.int32)]  # dictionary deref
+    ref = jax.lax.conv_general_dilated(
+        x, kern_q.transpose(2, 3, 1, 0), (4, 4), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    ref = jnp.maximum(ref, 0)
+    print(f"conv1 out {tuple(y.shape)} (expected (2, 56, 56, 96)); "
+          f"max|Δ| vs lax oracle {float(jnp.abs(y - ref).max()):.1e}; "
+          f"int4-packed max|Δ| {float(jnp.abs(y_packed - y).max()):.1e} "
+          f"({packed.idx.nbytes} idx bytes vs {shared.idx.nbytes} unpacked)")
 
 
 def cnn_stack():

@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full offline test suite plus an interpret-mode smoke of the
-# batched conv benchmark (exercises the Pallas PASM kernels end to end).
+# Tier-1 CI: the full offline test suite, the examples on the unified
+# ConvParams/conv2d surface (DeprecationWarnings are errors: the examples must
+# not touch the legacy shims), and an interpret-mode smoke of the batched conv
+# benchmark (exercises the Pallas PASM kernels + fused epilogue end to end,
+# and leaves BENCH_conv.json behind so perf is tracked per PR).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -12,7 +15,13 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== examples (new API, deprecation warnings are errors) =="
+python -W error::DeprecationWarning examples/quickstart.py
+python -W error::DeprecationWarning examples/paper_conv.py
+
 echo "== smoke: batched conv benchmark (interpret mode) =="
-python benchmarks/conv_bench.py --smoke
+python benchmarks/conv_bench.py --smoke --json
+
+test -s BENCH_conv.json && echo "BENCH_conv.json written"
 
 echo "CI OK"

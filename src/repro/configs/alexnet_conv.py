@@ -5,17 +5,20 @@ for Figs 14–22; see benchmarks/ and tests/test_conv.py.
 
 Beyond the single paper layer, :class:`CNNConfig` scales the same accelerator
 to a full AlexNet-style conv stack (the network the paper's layer is drawn
-from): conv/ReLU/pool layers with one PASM dictionary per conv layer and a
-dense classifier head, running on the batched Pallas conv path
-(DESIGN.md §3).  Windowing stays the paper's kernel-centred VALID bounds, so
-spatial dims differ slightly from the padded torchvision AlexNet.
+from): per-stage geometry-free :class:`repro.core.conv.Conv2D` specs with one
+PASM dictionary per conv layer and a dense classifier head, running on the
+batched Pallas conv path (DESIGN.md §3).  The ``padding`` knob selects the
+windowing stack-wide: the default ``valid_centred`` keeps the paper's
+kernel-centred loop bounds; ``same`` reproduces torchvision-exact AlexNet/VGG
+geometries.  ``layout`` picks NCHW (paper loop order) or NHWC (TPU-native,
+channels-minor im2col), and ``packed`` int4-packs every conv dictionary.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
-from repro.core.conv import ConvSpec
+from repro.core.conv import Conv2D, ConvSpec
 
 PAPER_SPEC = ConvSpec(IH=5, IW=5, C=15, KY=3, KX=3, M=2, stride=1)
 PAPER_BINS = (4, 8, 16)
@@ -23,27 +26,44 @@ PAPER_BITWIDTHS = (8, 32)  # kernel bit-widths evaluated in the paper
 
 
 @dataclasses.dataclass(frozen=True)
-class ConvLayerSpec:
-    """One conv/ReLU(/pool) stage of the stack."""
-
-    c_out: int
-    k: int
-    stride: int = 1
-    pool: int = 1  # max-pool window == stride; 1 = no pool
-    relu: bool = True
-
-
-@dataclasses.dataclass(frozen=True)
 class CNNConfig:
     """An AlexNet-family CNN on the weight-shared conv accelerator."""
 
     name: str
-    in_chw: tuple  # (C, H, W) input images
-    layers: Sequence[ConvLayerSpec]
+    in_chw: tuple  # (C, H, W) input images (C leads regardless of layout)
+    layers: Sequence[Conv2D]  # per-stage specs (relu baked in; c_in chained)
+    pools: Sequence[int]  # per-stage max-pool window == stride; 1 = none
     classes: int
     bins: int = 16  # PASM dictionary size, one dictionary per conv layer
     impl: str = "kernel"  # einsum | kernel (pasm_matmul) | pas_kernel
+    padding: str = "valid_centred"  # stack-wide: valid_centred | valid | same
+    layout: str = "NCHW"  # stack-wide: NCHW | NHWC
+    packed: bool = False  # int4-pack the conv dictionaries at quantize time
     family: str = "cnn"  # models/api dispatch key
+
+    def __post_init__(self):
+        if len(self.layers) != len(self.pools):
+            raise ValueError(
+                f"{self.name}: {len(self.layers)} conv layers but "
+                f"{len(self.pools)} pool entries — the sequences are parallel"
+            )
+        c_in = self.in_chw[0]
+        for i, conv in enumerate(self.layers):
+            if conv.c_in != c_in:
+                raise ValueError(
+                    f"{self.name}: layer {i} expects c_in={conv.c_in} but the "
+                    f"stack feeds it {c_in} channels"
+                )
+            c_in = conv.c_out
+
+
+def _stack(c_in: int, *stages: tuple) -> tuple:
+    """(c_out, k, stride) stages → chained Conv2D specs with ReLU."""
+    layers = []
+    for c_out, k, stride in stages:
+        layers.append(Conv2D(k=k, c_in=c_in, c_out=c_out, stride=stride, relu=True))
+        c_in = c_out
+    return tuple(layers)
 
 
 def config() -> CNNConfig:
@@ -51,13 +71,15 @@ def config() -> CNNConfig:
     return CNNConfig(
         name="alexnet",
         in_chw=(3, 224, 224),
-        layers=(
-            ConvLayerSpec(96, 11, stride=4, pool=2),  # 224→54→27
-            ConvLayerSpec(256, 5, pool=2),            # 27→23→11
-            ConvLayerSpec(384, 3),                    # 11→9
-            ConvLayerSpec(384, 3),                    # 9→7
-            ConvLayerSpec(256, 3, pool=2),            # 7→5→2
+        layers=_stack(
+            3,
+            (96, 11, 4),  # 224→54→27 (valid_centred; SAME: 224→56→28)
+            (256, 5, 1),  # 27→23→11
+            (384, 3, 1),  # 11→9
+            (384, 3, 1),  # 9→7
+            (256, 3, 1),  # 7→5→2
         ),
+        pools=(2, 2, 1, 1, 2),
         classes=1000,
     )
 
@@ -67,10 +89,12 @@ def smoke_config() -> CNNConfig:
     return CNNConfig(
         name="alexnet-smoke",
         in_chw=(3, 32, 32),
-        layers=(
-            ConvLayerSpec(16, 3, pool=2),  # 32→30→15
-            ConvLayerSpec(32, 3, pool=2),  # 15→13→6
-            ConvLayerSpec(32, 3, pool=2),  # 6→4→2
+        layers=_stack(
+            3,
+            (16, 3, 1),  # 32→30→15
+            (32, 3, 1),  # 15→13→6
+            (32, 3, 1),  # 6→4→2
         ),
+        pools=(2, 2, 2),
         classes=10,
     )

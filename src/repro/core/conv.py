@@ -1,40 +1,78 @@
-"""Weight-shared convolution layer — JAX port of the paper's accelerator.
+"""Weight-shared convolution — the unified `ConvParams`/`conv2d` surface.
 
-The paper evaluates three accelerator variants of one AlexNet-style conv
-layer (§4, Fig 13): non-weight-shared, weight-shared, and
-weight-shared-with-PASM, each with stride, bias and ReLU (bias/activation are
-*not* shared — §4).  This module implements all three with identical
-semantics:
+The paper evaluates ONE accelerator in three variants (§4, Fig 13):
+non-weight-shared, weight-shared, and weight-shared-with-PASM, each with
+stride, bias and ReLU (bias/activation are *not* shared — §4).  This module
+exposes that accelerator through two types and one entry point:
 
-* :func:`conv2d_direct`        — the Fig 1 pseudo-code (plain MACs)
-* :func:`conv2d_weight_shared` — Fig 3/4: dictionary lookup then MAC
-* :func:`conv2d_pasm`          — Fig 13: PAS bin-accumulate per output pixel,
-                                 then post-pass multiply with the codebook
+* :class:`ConvParams` — a tagged weight container: a ``dense`` kernel, a
+  weight-shared dictionary (``shared``: uint8 bin indices + codebook), or an
+  int4-``packed`` dictionary (two 4-bit indices per byte, §3 K-pad applied
+  before packing so odd ``C·KY·KX`` reductions work).  Built via
+  :meth:`ConvParams.dense` / :meth:`ConvParams.quantize` /
+  :meth:`ConvParams.shared`, converted with :meth:`ConvParams.pack`.
+* :class:`Conv2D` — the geometry-free layer spec: kernel size, channel
+  counts, stride, ``padding="valid_centred"|"valid"|"same"``,
+  ``layout="NCHW"|"NHWC"``, and the epilogue (``bias`` gate + ``relu`` flag).
+  Image height/width are *not* part of the spec — they are read off the
+  input, so one spec serves every image size.
+* :func:`conv2d` — ``conv2d(x, params, conv, *, engine, interpret)``
+  dispatches every (params kind × engine) combination:
 
-All three produce identical results on identical weights (the paper's §5.3
-claim), property-tested in ``tests/test_conv.py``.  "VALID"-style windowing
-follows the paper's loop bounds: output spans kernel-centred positions.
+  ===========  ================================================================
+  engine       meaning
+  ===========  ================================================================
+  ``auto``     dense → einsum; shared/packed → Pallas kernel when batched,
+               einsum reference for single images (the seed's routing rule)
+  ``einsum``   pure-XLA reference: (dequantized) dense GEMM + XLA epilogue
+  ``kernel``   :func:`repro.kernels.ops.pasm_matmul` — fused-dequant Pallas
+               GEMM with the bias/ReLU epilogue fused into the last-k-step
+               write-through (one ``pallas_call`` per conv layer)
+  ``pas_kernel``  :func:`repro.kernels.ops.pas_matmul` — the paper-faithful
+               two-phase PAS formulation, epilogue fused into the post-pass
+  ``pas_einsum``  the two-phase formulation as pure XLA (one-hot histogram +
+               post-pass) — the seed's ``conv2d_pasm`` einsum port
+  ===========  ================================================================
 
-Batched fast path (DESIGN.md §3): every variant accepts a single image
-``(C, IH, IW)`` or a batch ``(B, C, IH, IW)``.  Convolution lowers onto the
-PASM GEMMs via a batched im2col — ``(B, C, IH, IW) → (B·P, C·KY·KX)`` in the
-paper's (c, ky, kx) flat order — so weight-shared variants execute on the
-Pallas kernels (``pasm_matmul``: fused dequant; ``pas_matmul``: the
-paper-faithful two-phase formulation).  ``engine="auto"`` routes batched
-inputs through the kernels and keeps single images on the seed's einsum port
-(the reference semantics the kernels are tested against).
+Convolution lowers onto the PASM GEMMs via a batched im2col —
+``(B, C, IH, IW) → (B·P, C·KY·KX)`` in the paper's ``(c, ky, kx)`` order for
+NCHW, or ``(B, IH, IW, C) → (B·P, KY·KX·C)`` channels-minor (TPU-native) for
+NHWC — and the weight container flattens itself into the matching ``(K, M)``
+GEMM operand.
+
+Migration table (the old surface is kept as thin deprecation shims):
+
+  =====================================================  ======================
+  old call                                               new call
+  =====================================================  ======================
+  ``conv2d_direct(img, kern, bias, spec=s, relu=r)``     ``conv2d(img, ConvParams.dense(kern, bias=bias), Conv2D(k=(s.KY, s.KX), c_in=s.C, c_out=s.M, stride=s.stride, relu=r))``
+  ``conv2d_weight_shared(img, idx, cb, bias, spec=s)``   ``conv2d(img, ConvParams.shared(idx, cb, bias=bias), Conv2D(...))``
+  ``conv2d_pasm(img, idx, cb, bias, spec=s)``            same, with ``engine="pas_kernel"`` (batched) / ``"pas_einsum"`` (reference)
+  ``quantize_conv_weights(kern, bins)``                  ``ConvParams.quantize(kern, bins)``
+  ``conv_pasm_tensor(idx, cb)``                          ``ConvParams.shared(idx, cb).gemm_tensor("NCHW")``
+  ``ConvSpec(IH, IW, C, KY, KX, M, stride)``             ``Conv2D(k, c_in, c_out, stride, ...)`` (geometry lives with the data)
+  =====================================================  ======================
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+import functools
+import warnings
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import pas as _pas
 from repro.core import pasm as _pasm
 
 __all__ = [
+    "Conv2D",
+    "ConvParams",
+    "conv2d",
+    "conv_out_hw",
+    "PADDINGS",
+    "LAYOUTS",
+    # legacy surface (deprecation shims / kept helpers)
     "ConvSpec",
     "out_hw",
     "im2col",
@@ -45,9 +83,415 @@ __all__ = [
     "quantize_conv_weights",
 ]
 
+PADDINGS = ("valid_centred", "valid", "same")
+LAYOUTS = ("NCHW", "NHWC")
+ENGINES = ("auto", "einsum", "kernel", "pas_kernel", "pas_einsum")
+
+# GEMM column order per layout: NCHW flattens patches (and weights) in the
+# paper's (c, ky, kx) loop-nest order (Fig 1); NHWC is channels-minor
+# (ky, kx, c) — the TPU-native layout.
+_ORDER = {"NCHW": "ckk", "NHWC": "kkc"}
+
+
+# ---------------------------------------------------------------------------
+# the layer spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2D:
+    """Geometry-free conv layer spec (image H/W are read off the input)."""
+
+    k: Union[int, tuple]
+    c_in: int
+    c_out: int
+    stride: int = 1
+    padding: str = "valid_centred"
+    layout: str = "NCHW"
+    bias: bool = True  # apply ``params.bias`` when present
+    relu: bool = False
+
+    def __post_init__(self):
+        k = (self.k, self.k) if isinstance(self.k, int) else tuple(self.k)
+        object.__setattr__(self, "k", k)
+        if self.padding not in PADDINGS:
+            raise ValueError(f"padding must be one of {PADDINGS}, got {self.padding!r}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, got {self.layout!r}")
+
+    @property
+    def ky(self) -> int:
+        return self.k[0]
+
+    @property
+    def kx(self) -> int:
+        return self.k[1]
+
+    @property
+    def K(self) -> int:
+        """The im2col reduction length ``c_in·ky·kx``."""
+        return self.c_in * self.ky * self.kx
+
+
+def _axis_geometry(size: int, k: int, stride: int, padding: str) -> tuple:
+    """One spatial axis → ``(out, pad_lo, pad_hi)``.
+
+    ``same`` matches XLA/TF SAME (out = ceil(size/stride), asymmetric zero
+    pad); ``valid`` is standard VALID; ``valid_centred`` is the paper's
+    kernel-centred loop bounds (Fig 1) — identical to ``valid`` for odd
+    kernels, one output short when an even kernel tiles the axis exactly.
+    """
+    if padding == "same":
+        out = -(-size // stride)
+        pad = max((out - 1) * stride + k - size, 0)
+        return out, pad // 2, pad - pad // 2
+    if padding == "valid":
+        return (size - k) // stride + 1, 0, 0
+    return (size - 2 * (k // 2) + stride - 1) // stride, 0, 0
+
+
+def conv_out_hw(ih: int, iw: int, conv: Conv2D) -> tuple:
+    """Output (OH, OW) of ``conv`` on an ``ih × iw`` image."""
+    oh, _, _ = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
+    ow, _, _ = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
+    return oh, ow
+
+
+# ---------------------------------------------------------------------------
+# the weight container
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["kernel", "idx", "codebook", "bias"],
+    meta_fields=["kind", "kshape", "bins", "order", "pad_k"],
+)
+@dataclasses.dataclass(frozen=True)
+class ConvParams:
+    """Tagged conv weights: ``dense`` | weight-``shared`` | int4-``packed``.
+
+    ``dense``   ``kernel (c_out, c_in, ky, kx)``; ``idx``/``codebook`` None.
+    ``shared``  ``idx (c_out, c_in, ky, kx) uint8`` bin indices +
+                ``codebook (bins,)`` — one dictionary per layer (paper §4).
+    ``packed``  ``idx (Kp//2, c_out) uint8`` — two 4-bit indices per byte in
+                the GEMM ``(K, M)`` layout of ``order`` (baked at pack time);
+                ``pad_k`` zero-activation rows were appended by the §3 K-pad
+                so an odd ``C·KY·KX`` packs.
+    ``bias``    ``(c_out,)`` or None on every kind — never shared (paper §4).
+    """
+
+    kernel: Optional[jax.Array] = None
+    idx: Optional[jax.Array] = None
+    codebook: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None
+    kind: str = "dense"
+    kshape: tuple = ()
+    bins: Optional[int] = None
+    order: Optional[str] = None
+    pad_k: int = 0
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def dense(cls, kernel: jax.Array, *, bias: Optional[jax.Array] = None):
+        """Non-weight-shared params from a ``(c_out, c_in, ky, kx)`` kernel."""
+        if kernel.ndim != 4:
+            raise ValueError(f"kernel must be (c_out, c_in, ky, kx), got {kernel.shape}")
+        return cls(kernel=kernel, bias=bias, kind="dense", kshape=tuple(kernel.shape))
+
+    @classmethod
+    def shared(
+        cls,
+        idx: jax.Array,
+        codebook: jax.Array,
+        *,
+        bias: Optional[jax.Array] = None,
+    ):
+        """Weight-shared params from existing bin indices + dictionary."""
+        if idx.ndim != 4:
+            raise ValueError(f"idx must be (c_out, c_in, ky, kx), got {idx.shape}")
+        return cls(
+            idx=idx.astype(jnp.uint8),
+            codebook=codebook,
+            bias=bias,
+            kind="shared",
+            kshape=tuple(idx.shape),
+            bins=int(codebook.shape[-1]),
+        )
+
+    @classmethod
+    def quantize(
+        cls,
+        kernel: jax.Array,
+        bins: int = 16,
+        *,
+        bias: Optional[jax.Array] = None,
+        iters: int = 16,
+    ):
+        """K-means weight-share a dense kernel: one dictionary per layer."""
+        cb, idx = quantize_conv_weights(kernel, bins, iters=iters)
+        return cls.shared(idx, cb, bias=bias)
+
+    def pack(self, *, layout: str = "NCHW") -> "ConvParams":
+        """int4-pack the dictionary indices into the GEMM layout of ``layout``.
+
+        Halves conv weight bytes (two 4-bit indices per byte).  Odd
+        ``C·KY·KX`` gets the §3 K-pad first: one pad row is appended, mapped
+        to a reserved all-zero codebook bin when representable (``bins < 16``)
+        or to bin 0 otherwise — exact either way, because :func:`conv2d`
+        pairs the pad rows with zero patch columns.
+        """
+        if self.kind != "shared":
+            raise ValueError(
+                f"pack() needs shared params (got {self.kind!r}); "
+                "quantize() dense kernels first"
+            )
+        if self.bins > 16:
+            raise ValueError(f"int4 packing needs bins <= 16, got {self.bins}")
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
+        order = _ORDER[layout]
+        flat = _flatten_kernel(self.idx, order)  # (K, c_out)
+        codebook, bins, pad_k = self.codebook, self.bins, 0
+        if flat.shape[0] % 2:
+            pad_k = 1
+            if bins < 16:
+                codebook = jnp.pad(codebook.reshape(-1), (0, 1))  # reserved 0-bin
+                pad_bin, bins = bins, bins + 1
+            else:
+                pad_bin = 0  # inert anyway: conv2d zero-pads the patch column
+            flat = jnp.pad(flat, ((0, 1), (0, 0)), constant_values=pad_bin)
+        return ConvParams(
+            idx=_pasm.pack_int4(flat),
+            codebook=codebook,
+            bias=self.bias,
+            kind="packed",
+            kshape=self.kshape,
+            bins=bins,
+            order=order,
+            pad_k=pad_k,
+        )
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def c_out(self) -> int:
+        return self.kshape[0]
+
+    def gemm_tensor(self, layout: str = "NCHW") -> _pasm.PASMTensor:
+        """The dictionary as the ``(K, M)`` Pallas GEMM operand for ``layout``."""
+        order = _ORDER[layout]
+        if self.kind == "packed":
+            if order != self.order:
+                raise ValueError(
+                    f"params were packed for order {self.order!r} but layout "
+                    f"{layout!r} needs {order!r}; re-pack for this layout"
+                )
+            K = self.idx.shape[0] * 2
+            return _pasm.PASMTensor(
+                idx=self.idx,
+                codebook=self.codebook.reshape(1, -1).astype(jnp.float32),
+                shape=(K, self.c_out),
+                bins=self.bins,
+                bits=4,
+                packed=True,
+            )
+        if self.kind != "shared":
+            raise ValueError("dense params have no dictionary; use engine='einsum'")
+        idx = _flatten_kernel(self.idx, order)  # (K, M)
+        return _pasm.PASMTensor(
+            idx=idx,
+            codebook=self.codebook.reshape(1, -1).astype(jnp.float32),
+            shape=tuple(idx.shape),
+            bins=self.bins,
+            bits=_pasm.bits_for_bins(self.bins),
+            packed=False,
+        )
+
+    def dense_operand(self, layout: str = "NCHW") -> jax.Array:
+        """The ``(K(+pad_k), M)`` dense GEMM operand (einsum reference path).
+
+        Dtype is preserved for dense/shared kinds so integer-exactness claims
+        (§5.3) survive the reference path; packed dequantizes to f32.
+        """
+        if self.kind == "dense":
+            return _flatten_kernel(self.kernel, _ORDER[layout])
+        if self.kind == "shared":
+            kernel = self.codebook[self.idx.astype(jnp.int32)]
+            return _flatten_kernel(kernel, _ORDER[layout])
+        return _pasm.dequantize(self.gemm_tensor(layout))
+
+
+def _flatten_kernel(a: jax.Array, order: str) -> jax.Array:
+    """(c_out, c_in, ky, kx) → (K, c_out) flat in ``order`` ∈ {ckk, kkc}."""
+    if order == "kkc":
+        a = a.transpose(0, 2, 3, 1)  # (c_out, ky, kx, c_in)
+    return a.reshape(a.shape[0], -1).T
+
+
+# ---------------------------------------------------------------------------
+# im2col (both layouts, all paddings)
+# ---------------------------------------------------------------------------
+
+
+def _batched4(x: jax.Array) -> tuple:
+    if x.ndim == 3:
+        return x[None], True
+    if x.ndim == 4:
+        return x, False
+    raise ValueError(f"x must be a single image (3-D) or a batch (4-D), got {x.shape}")
+
+
+def _im2col(xb: jax.Array, conv: Conv2D) -> tuple:
+    """Batched patches in the layout's GEMM column order.
+
+    NCHW ``(B, C, IH, IW) → (B·P, C·KY·KX)`` (paper (c, ky, kx) order);
+    NHWC ``(B, IH, IW, C) → (B·P, KY·KX·C)`` (channels-minor, TPU-native).
+    Returns ``(patches, (oh, ow))``.
+    """
+    nhwc = conv.layout == "NHWC"
+    B = xb.shape[0]
+    ih, iw = (xb.shape[1], xb.shape[2]) if nhwc else (xb.shape[2], xb.shape[3])
+    oh, plo_h, phi_h = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
+    ow, plo_w, phi_w = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
+    if plo_h or phi_h or plo_w or phi_w:
+        spatial = ((plo_h, phi_h), (plo_w, phi_w))
+        pad = ((0, 0), *spatial, (0, 0)) if nhwc else ((0, 0), (0, 0), *spatial)
+        xb = jnp.pad(xb, pad)
+    ky = jnp.arange(conv.ky)
+    kx = jnp.arange(conv.kx)
+    oy = jnp.arange(oh) * conv.stride
+    ox = jnp.arange(ow) * conv.stride
+    if nhwc:
+        rows = oy[:, None, None, None] + ky[None, None, :, None]  # (oh,1,KY,1)
+        cols = ox[None, :, None, None] + kx[None, None, None, :]  # (1,ow,1,KX)
+        patches = xb[:, rows, cols, :]  # (B, oh, ow, KY, KX, C)
+    else:
+        c = jnp.arange(conv.c_in)[None, None, :, None, None]
+        rows = oy[:, None, None, None, None] + ky[None, None, None, :, None]
+        cols = ox[None, :, None, None, None] + kx[None, None, None, None, :]
+        patches = xb[:, c, rows, cols]  # (B, oh, ow, C, KY, KX)
+    return patches.reshape(B * oh * ow, conv.K), (oh, ow)
+
+
+def _col2im(y: jax.Array, conv: Conv2D, batch: int, oh: int, ow: int, squeeze: bool):
+    """GEMM output (B·P, M) → feature map in the spec's layout."""
+    if conv.layout == "NHWC":
+        out = y.reshape(batch, oh, ow, conv.c_out)
+    else:
+        out = y.reshape(batch, oh * ow, conv.c_out)
+        out = jnp.moveaxis(out, -1, 1).reshape(batch, conv.c_out, oh, ow)
+    return out[0] if squeeze else out
+
+
+def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
+    # one definition shared with the kernel oracles (repro.kernels.ref has no
+    # pallas dependency, so core stays pallas-free)
+    from repro.kernels.ref import apply_epilogue
+
+    return apply_epilogue(y, bias, relu)
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+
+def _resolve_engine(engine: str, params: ConvParams, squeeze: bool) -> str:
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if params.kind == "dense":
+        if engine in ("auto", "einsum"):
+            return "einsum"
+        raise ValueError(f"dense params have no dictionary; engine {engine!r} "
+                         "needs shared/packed params")
+    if engine == "auto":
+        # batched inputs ride the Pallas fast path; single images keep the
+        # einsum reference port (the semantics the kernels are tested against)
+        return "einsum" if squeeze else "kernel"
+    return engine
+
+
+def conv2d(
+    x: jax.Array,
+    params: ConvParams,
+    conv: Conv2D,
+    *,
+    engine: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The unified conv entry point: any params kind, any engine, any layout.
+
+    ``x`` is a single image or a batch in ``conv.layout`` order.  On the
+    Pallas engines the bias/ReLU epilogue is fused into the kernel's final
+    reduction step, so a batched conv layer is exactly one ``pallas_call``.
+    """
+    xb, squeeze = _batched4(x)
+    c_axis = -1 if conv.layout == "NHWC" else 1
+    if xb.shape[c_axis] != conv.c_in:
+        raise ValueError(
+            f"input {x.shape} has {xb.shape[c_axis]} channels on the "
+            f"{conv.layout} channel axis; spec says c_in={conv.c_in}"
+        )
+    if params.kshape != (conv.c_out, conv.c_in, conv.ky, conv.kx):
+        raise ValueError(
+            f"params kshape {params.kshape} does not match spec "
+            f"{(conv.c_out, conv.c_in, conv.ky, conv.kx)}"
+        )
+    eng = _resolve_engine(engine, params, squeeze)
+    patches, (oh, ow) = _im2col(xb, conv)
+    bias = params.bias if conv.bias else None
+
+    if eng == "einsum":
+        w = params.dense_operand(conv.layout)
+        if params.pad_k:
+            patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
+        y = _epilogue(patches @ w, bias, conv.relu)
+    elif eng == "pas_einsum":
+        y = _pas_einsum(patches, params, conv.layout)
+        y = _epilogue(y, bias, conv.relu)
+    else:
+        from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+        t = params.gemm_tensor(conv.layout)
+        if params.pad_k:
+            patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
+        f = _kops.pasm_matmul if eng == "kernel" else _kops.pas_matmul
+        y = f(patches, t, bias=bias, relu=conv.relu, interpret=interpret)
+    return _col2im(y, conv, xb.shape[0], oh, ow, squeeze)
+
+
+def _pas_einsum(patches: jax.Array, params: ConvParams, layout: str) -> jax.Array:
+    """The two-phase PASM formulation in pure XLA (Fig 13, the seed's port).
+
+    Per output pixel and channel: PAS bins via a one-hot histogram over the
+    patch axis, then one multiply per bin — bit-exact on integer inputs.
+    """
+    if params.kind == "packed":
+        idx = _pasm.logical_idx(params.gemm_tensor(layout)).T  # (M, K+pad)
+        if params.pad_k:
+            patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
+    else:
+        idx = _flatten_kernel(params.idx, _ORDER[layout]).T  # (M, K)
+    B = params.codebook.shape[-1]
+    onehot = jax.nn.one_hot(idx, B, dtype=patches.dtype)  # (M, K, B)
+    # PAS phase: imageBin[p, m, b] = Σ_n patches[p, n]·[idx[m, n] = b]
+    image_bins = jnp.einsum("pn,mnb->pmb", patches, onehot)
+    # post-pass multiply: one multiply per bin, not per element
+    return jnp.einsum("pmb,b->pm", image_bins, params.codebook.astype(patches.dtype))
+
+
+# ---------------------------------------------------------------------------
+# legacy surface: ConvSpec + the three conv2d_* shims
+# ---------------------------------------------------------------------------
+
 
 class ConvSpec(NamedTuple):
-    """Paper's accelerator dims (§4: IH=IW=5, C=15, KY=KX=3, M=2, stride=1)."""
+    """Paper's accelerator dims (§4: IH=IW=5, C=15, KY=KX=3, M=2, stride=1).
+
+    Deprecated: image geometry now lives with the data — see :class:`Conv2D`.
+    """
 
     IH: int = 5
     IW: int = 5
@@ -58,90 +502,48 @@ class ConvSpec(NamedTuple):
     stride: int = 1
 
 
-def out_hw(spec: ConvSpec) -> tuple[int, int]:
+def out_hw(spec: ConvSpec) -> tuple:
     """Output dims under the paper's kernel-centred loop bounds (Fig 1)."""
-    oh = (spec.IH - 2 * (spec.KY // 2) + spec.stride - 1) // spec.stride
-    ow = (spec.IW - 2 * (spec.KX // 2) + spec.stride - 1) // spec.stride
-    return oh, ow
+    conv = _spec_to_conv2d(spec)
+    return conv_out_hw(spec.IH, spec.IW, conv)
 
 
-def _batched(image: jax.Array) -> tuple[jax.Array, bool]:
-    """Normalize (C, IH, IW) | (B, C, IH, IW) to batched; report if added."""
-    if image.ndim == 3:
-        return image[None], True
-    if image.ndim == 4:
-        return image, False
-    raise ValueError(f"image must be (C,IH,IW) or (B,C,IH,IW), got {image.shape}")
+def _spec_to_conv2d(spec: ConvSpec, relu: bool = False, bias: bool = False) -> Conv2D:
+    return Conv2D(
+        k=(spec.KY, spec.KX),
+        c_in=spec.C,
+        c_out=spec.M,
+        stride=spec.stride,
+        padding="valid_centred",
+        layout="NCHW",
+        bias=bias,
+        relu=relu,
+    )
+
+
+def _check_spec(images: jax.Array, spec: ConvSpec) -> None:
+    if tuple(images.shape[1:]) != (spec.C, spec.IH, spec.IW):
+        raise ValueError(f"image {images.shape[1:]} does not match spec {spec}")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (migration table in repro/core/conv.py)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def im2col(images: jax.Array, spec: ConvSpec) -> jax.Array:
-    """images (B, C, IH, IW) → patches (B·OH·OW, C·KY·KX), paper loop order.
-
-    Column order is (cIdx, kyIdx, kxIdx) — matching Fig 1's loop nest so that
-    index tensors flatten identically for the PASM path.  The flattened
-    leading axis is the GEMM M dim of the batched fast path: one row per
-    (image, output pixel).
-    """
-    B, C, IH, IW = images.shape
-    if (C, IH, IW) != (spec.C, spec.IH, spec.IW):
-        raise ValueError(f"image {images.shape[1:]} does not match spec {spec}")
-    oh, ow = out_hw(spec)
-    ky = jnp.arange(spec.KY)
-    kx = jnp.arange(spec.KX)
-    oy = jnp.arange(oh) * spec.stride
-    ox = jnp.arange(ow) * spec.stride
-    # gather indices: (oh, ow, C, KY, KX)
-    rows = oy[:, None, None, None, None] + ky[None, None, None, :, None]
-    cols = ox[None, :, None, None, None] + kx[None, None, None, None, :]
-    patches = images[
-        :, jnp.arange(C)[None, None, :, None, None], rows, cols
-    ]  # (B, oh, ow, C, KY, KX)
-    return patches.reshape(B * oh * ow, C * spec.KY * spec.KX)
-
-
-def _im2col(image: jax.Array, spec: ConvSpec) -> jax.Array:
-    """Single-image im2col (seed surface): (C, IH, IW) → (OH·OW, C·KY·KX)."""
-    return im2col(image[None], spec)
-
-
-def _col2im(y: jax.Array, spec: ConvSpec, batch: int, squeeze: bool) -> jax.Array:
-    """GEMM output (B·P, M) → feature map (B, M, OH, OW) (squeezed if asked)."""
-    oh, ow = out_hw(spec)
-    out = y.reshape(batch, oh * ow, spec.M)
-    out = jnp.moveaxis(out, -1, 1).reshape(batch, spec.M, oh, ow)
-    return out[0] if squeeze else out
-
-
-def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
-    if bias is not None:
-        y = y + bias
-    if relu:
-        y = jnp.maximum(y, 0)
-    return y
-
-
-def conv2d_direct(
-    image: jax.Array,
-    kernel: jax.Array,
-    bias: Optional[jax.Array] = None,
-    *,
-    spec: ConvSpec,
-    relu: bool = False,
-) -> jax.Array:
-    """Non-weight-shared accelerator (Fig 1).  kernel: (M, C, KY, KX).
-
-    Accepts a single image (C, IH, IW) or a batch (B, C, IH, IW).
-    """
-    images, squeeze = _batched(image)
-    patches = im2col(images, spec)  # (B·P, K)
-    w = kernel.reshape(spec.M, -1).T  # (K, M) — same (c,ky,kx) order
-    y = patches @ w  # plain MACs
-    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
+    """images (B, C, IH, IW) → patches (B·OH·OW, C·KY·KX), paper loop order."""
+    _check_spec(images, spec)
+    patches, _ = _im2col(images, _spec_to_conv2d(spec))
+    return patches
 
 
 def quantize_conv_weights(
     kernel: jax.Array, bins: int, *, iters: int = 16
-) -> tuple[jax.Array, jax.Array]:
+) -> tuple:
     """K-means weight-share a conv kernel: one dictionary per layer (paper §4).
 
     Returns ``(codebook (B,), bin_idx (M, C, KY, KX) uint8)``.
@@ -152,34 +554,26 @@ def quantize_conv_weights(
 
 
 def conv_pasm_tensor(bin_idx: jax.Array, codebook: jax.Array) -> _pasm.PASMTensor:
-    """View conv weight-share state as the GEMM operand of the Pallas kernels.
-
-    ``bin_idx (M, C, KY, KX) uint8`` + ``codebook (B,)`` → a single-dictionary
-    :class:`PASMTensor` of logical shape ``(K, M)`` with ``K = C·KY·KX`` in
-    the paper's (c, ky, kx) flat order — exactly the transpose layout
-    ``im2col`` patches contract against.
-    """
-    M = bin_idx.shape[0]
-    idx = bin_idx.reshape(M, -1).T.astype(jnp.uint8)  # (K, M)
-    bins = codebook.shape[0]
-    return _pasm.PASMTensor(
-        idx=idx,
-        codebook=codebook.reshape(1, bins).astype(jnp.float32),
-        shape=tuple(idx.shape),
-        bins=bins,
-        bits=_pasm.bits_for_bins(bins),
-        packed=False,
-    )
+    """Deprecated: ``ConvParams.shared(idx, cb).gemm_tensor("NCHW")``."""
+    _deprecated("conv_pasm_tensor", "ConvParams.shared(...).gemm_tensor(...)")
+    return ConvParams.shared(bin_idx, codebook).gemm_tensor("NCHW")
 
 
-def _resolve_engine(engine: str, squeeze: bool) -> str:
-    if engine == "auto":
-        # batched inputs ride the Pallas fast path; single images keep the
-        # seed's einsum port (the reference the kernels are tested against)
-        return "einsum" if squeeze else "kernel"
-    if engine not in ("einsum", "kernel"):
-        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
-    return engine
+def conv2d_direct(
+    image: jax.Array,
+    kernel: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    spec: ConvSpec,
+    relu: bool = False,
+) -> jax.Array:
+    """Deprecated shim: non-weight-shared accelerator (Fig 1) → :func:`conv2d`."""
+    _deprecated("conv2d_direct", "conv2d(x, ConvParams.dense(...), Conv2D(...))")
+    images, _ = _batched4(image)
+    _check_spec(images, spec)
+    params = ConvParams.dense(kernel, bias=bias)
+    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
+    return conv2d(image, params, conv, engine="einsum")
 
 
 def conv2d_weight_shared(
@@ -193,22 +587,15 @@ def conv2d_weight_shared(
     engine: str = "auto",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Weight-shared accelerator (Figs 3/4): dereference dictionary, then MAC.
-
-    ``engine="kernel"`` (default for batched input) lowers onto
-    :func:`repro.kernels.ops.pasm_matmul` — the fused-dequant Pallas kernel —
-    via the batched im2col; ``engine="einsum"`` is the seed's pure-XLA port.
-    """
-    images, squeeze = _batched(image)
-    if _resolve_engine(engine, squeeze) == "einsum":
-        kernel = codebook[bin_idx.astype(jnp.int32)]  # the extra indirection
-        return conv2d_direct(image, kernel, bias, spec=spec, relu=relu)
-    from repro.kernels import ops as _kops  # deferred: core must not need pallas
-
-    patches = im2col(images, spec)  # (B·P, K)
-    t = conv_pasm_tensor(bin_idx, codebook)
-    y = _kops.pasm_matmul(patches, t, interpret=interpret)  # (B·P, M)
-    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
+    """Deprecated shim: weight-shared accelerator (Figs 3/4) → :func:`conv2d`."""
+    _deprecated("conv2d_weight_shared", "conv2d(x, ConvParams.shared(...), Conv2D(...))")
+    images, _ = _batched4(image)
+    _check_spec(images, spec)
+    if engine not in ("auto", "einsum", "kernel"):
+        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
+    params = ConvParams.shared(bin_idx, codebook, bias=bias)
+    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
+    return conv2d(image, params, conv, engine=engine, interpret=interpret)
 
 
 def conv2d_pasm(
@@ -222,32 +609,20 @@ def conv2d_pasm(
     engine: str = "auto",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Weight-shared-with-PASM accelerator (Fig 13).
+    """Deprecated shim: weight-shared-with-PASM accelerator (Fig 13).
 
-    Per output pixel and output channel m:
-      PAS:       ``imageBin[b] += imVal`` for every (imVal, binIdx) pair
-      post-pass: ``Σ_b imageBin[b] · sk[b]``
-    Vectorized: one-hot histogram over the patch axis, then a (B,)-dot.
-
-    ``engine="kernel"`` (default for batched input) runs the same two-phase
-    formulation inside :func:`repro.kernels.ops.pas_matmul` — PAS bins live in
-    a VMEM scratch accumulator, the codebook multiply happens once at the last
-    reduction step.
+    Maps the seed routing onto :func:`conv2d`: the einsum reference becomes
+    ``engine="pas_einsum"``, the Pallas path ``engine="pas_kernel"``.
     """
-    images, squeeze = _batched(image)
-    if _resolve_engine(engine, squeeze) == "kernel":
-        from repro.kernels import ops as _kops  # deferred import, see above
-
-        patches = im2col(images, spec)  # (B·P, K)
-        t = conv_pasm_tensor(bin_idx, codebook)
-        y = _kops.pas_matmul(patches, t, interpret=interpret)  # (B·P, M)
-        return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
-    B = codebook.shape[0]
-    patches = im2col(images, spec)  # (B·P, N)
-    idx = bin_idx.reshape(spec.M, -1)  # (M, N) — (c,ky,kx) flat order
-    onehot = jax.nn.one_hot(idx, B, dtype=patches.dtype)  # (M, N, B)
-    # PAS phase: imageBin[p, m, b] = Σ_n patches[p, n]·[idx[m, n] = b]
-    image_bins = jnp.einsum("pn,mnb->pmb", patches, onehot)
-    # post-pass multiply: one multiply per bin, not per element
-    y = jnp.einsum("pmb,b->pm", image_bins, codebook.astype(patches.dtype))
-    return _col2im(_epilogue(y, bias, relu), spec, images.shape[0], squeeze)
+    _deprecated("conv2d_pasm", 'conv2d(..., engine="pas_kernel")')
+    images, squeeze = _batched4(image)
+    _check_spec(images, spec)
+    if engine not in ("auto", "einsum", "kernel"):
+        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
+    if engine == "auto":
+        eng = "pas_einsum" if squeeze else "pas_kernel"
+    else:
+        eng = {"einsum": "pas_einsum", "kernel": "pas_kernel"}[engine]
+    params = ConvParams.shared(bin_idx, codebook, bias=bias)
+    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
+    return conv2d(image, params, conv, engine=eng, interpret=interpret)

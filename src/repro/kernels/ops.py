@@ -104,29 +104,38 @@ def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("packed", "logical_k", "gather", "interpret", "use_ref")
+    jax.jit,
+    static_argnames=("packed", "logical_k", "gather", "interpret", "use_ref", "relu"),
 )
 def _pasm_matmul_fwd_impl(
-    x, idx, codebook, *, packed, logical_k, gather, interpret, use_ref
+    x, idx, codebook, bias=None, *, packed, logical_k, gather, interpret, use_ref,
+    relu=False,
 ):
     if use_ref:
-        return _ref.pasm_matmul_ref(x, idx, codebook, packed=packed)
+        y = _ref.pasm_matmul_ref(x, idx, codebook, packed=packed)
+        return _ref.apply_epilogue(y, bias, relu)
     G, B = codebook.shape
     group_size = logical_k // G
     bm, bn, bk, gs_pad = _pick_blocks(
         x.shape[0], logical_k, idx.shape[1], group_size, packed
     )
     xp, idxp, cbp, (M, N, Kp) = _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed)
+    bias_row = None
+    if bias is not None:
+        bias_row = jnp.pad(bias.astype(jnp.float32), (0, idxp.shape[1] - N))
+        bias_row = bias_row.reshape(1, -1)
     out = pasm_matmul_kernel_call(
         xp,
         idxp,
         cbp,
+        bias_row,
         packed=packed,
         logical_k=Kp,
         bm=bm,
         bn=bn,
         bk=bk,
         gather=gather,
+        relu=relu,
         interpret=interpret,
     )
     return out[:M, :N]
@@ -172,36 +181,82 @@ def _pasm_bwd(packed, gather, interpret, res, g):
 _pasm_matmul.defvjp(_pasm_fwd, _pasm_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu):
+    """The fused-epilogue variant: bias/ReLU applied inside the kernel."""
+    return _pasm_matmul_fwd_impl(
+        x,
+        idx,
+        codebook,
+        bias,
+        packed=packed,
+        logical_k=x.shape[-1],
+        gather=gather,
+        interpret=interpret,
+        use_ref=False,
+        relu=relu,
+    )
+
+
+def _pasm_ep_fwd(x, idx, codebook, bias, packed, gather, interpret, relu):
+    y = _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu)
+    return y, (x, idx, codebook, bias, y)
+
+
+def _pasm_ep_bwd(packed, gather, interpret, relu, res, g):
+    x, idx, codebook, bias, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)  # mask through the fused ReLU
+    dx, _, dcb = _pasm_bwd(packed, gather, interpret, (x, idx, codebook), g)
+    dbias = g.sum(axis=0).astype(bias.dtype)
+    return dx, None, dcb, dbias
+
+
+_pasm_matmul_ep.defvjp(_pasm_ep_fwd, _pasm_ep_bwd)
+
+
 def pasm_matmul(
     x: jax.Array,
     t: _pasm.PASMTensor,
     *,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
     gather: str = "take",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """``x @ t`` with the fused dequant kernel.  x: (..., K) → (..., N) f32.
 
-    Differentiable in ``x`` and ``t.codebook``.
+    ``bias (N,)`` / ``relu`` fuse into the kernel's last-k-step write-through
+    (one pallas_call per layer, no XLA epilogue).  Differentiable in ``x``,
+    ``t.codebook`` and ``bias``.
     """
     if interpret is None:
         interpret = _interpret_default()
     K = t.shape[0]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
-    y = _pasm_matmul(x2, t.idx, t.codebook, t.packed, gather, interpret)
+    if bias is None and not relu:
+        y = _pasm_matmul(x2, t.idx, t.codebook, t.packed, gather, interpret)
+    else:
+        b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
+        y = _pasm_matmul_ep(x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu)
     return y.reshape(*lead, t.shape[1])
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _pas_matmul_impl(x, idx, codebook, *, interpret):
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def _pas_matmul_impl(x, idx, codebook, bias=None, *, relu=False, interpret):
     M, K = x.shape
     N = idx.shape[1]
     bm, bn, bk, gs_pad = _pick_blocks(M, K, N, K, packed=False)
     xp, idxp, cbp, (M, N, _) = _pad_operands(
         x, idx, codebook, bm, bn, gs_pad, packed=False
     )
+    bias_row = None
+    if bias is not None:
+        bias_row = jnp.pad(bias.astype(jnp.float32), (0, idxp.shape[1] - N))
+        bias_row = bias_row.reshape(1, -1)
     out = pas_matmul_kernel_call(
-        xp, idxp, cbp, bm=bm, bn=bn, bk=bk, interpret=interpret
+        xp, idxp, cbp, bias_row, bm=bm, bn=bn, bk=bk, relu=relu, interpret=interpret
     )
     return out[:M, :N]
 
@@ -210,14 +265,22 @@ def pas_matmul(
     x: jax.Array,
     t: _pasm.PASMTensor,
     *,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Paper-faithful PASM two-phase matmul (single dictionary, unpacked)."""
+    """Paper-faithful PASM two-phase matmul (single dictionary).
+
+    ``bias (N,)`` / ``relu`` fuse into the post-pass write-through.
+    """
     if interpret is None:
         interpret = _interpret_default()
     idx = _pasm.logical_idx(t)
     lead = x.shape[:-1]
-    y = _pas_matmul_impl(x.reshape(-1, t.shape[0]), idx, t.codebook, interpret=interpret)
+    y = _pas_matmul_impl(
+        x.reshape(-1, t.shape[0]), idx, t.codebook, bias, relu=relu,
+        interpret=interpret,
+    )
     return y.reshape(*lead, t.shape[1])
 
 
@@ -231,9 +294,25 @@ def matmul_flops(M: int, K: int, N: int) -> int:
 
 
 def pasm_hbm_bytes(t: _pasm.PASMTensor, M: int, act_bytes: int = 2) -> int:
-    """Bytes moved for one (M,K)@(K,N) PASM matmul: activations + idx + cb."""
+    """Bytes one (M,K)@(K,N) PASM matmul actually moves: x + idx + cb + out.
+
+    Tile-plan aware (audited against :attr:`PASMTensor.nbytes_weights`): the
+    kernel streams the *padded* operands, so shapes that route through the §3
+    K-pad move ``G·gs_pad`` reduction rows (plus one reserved codebook bin per
+    group), and M/N round up to the block plan.  The output is written f32
+    (4 B) — the seed counted it at ``act_bytes``, under-reporting the store
+    traffic.  On tile-aligned shapes the weight term equals
+    ``t.nbytes_weights`` exactly.
+    """
     K, N = t.shape
-    return M * K * act_bytes + t.nbytes_weights + M * N * act_bytes
+    G, B = t.codebook.shape
+    bm, bn, bk, gs_pad = _pick_blocks(M, K, N, K // G, t.packed)
+    Kp = G * gs_pad
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    idx_bytes = (Kp // 2 if t.packed else Kp) * Np
+    padded_k = gs_pad != K // G
+    cb_bytes = G * (B + (1 if padded_k and not t.packed and B < 256 else 0)) * 4
+    return Mp * Kp * act_bytes + idx_bytes + cb_bytes + Mp * Np * 4
 
 
 def flash_attention(

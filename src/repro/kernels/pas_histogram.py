@@ -34,7 +34,8 @@ from repro.kernels._compat import CompilerParams
 __all__ = ["pas_matmul_kernel_call"]
 
 
-def _kernel(x_ref, idx_ref, cb_ref, o_ref, s_ref, *, bins: int, n_k: int):
+def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
+    b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -54,27 +55,36 @@ def _kernel(x_ref, idx_ref, cb_ref, o_ref, s_ref, *, bins: int, n_k: int):
     )
 
     # post-pass multiply: executed once, after all accumulation — B multiplies
-    # per output element instead of K.
+    # per output element instead of K.  The bias/ReLU epilogue rides the same
+    # write-through (the paper's shared post-pass MAC carries the bias too).
     @pl.when(k == n_k - 1)
     def _postpass():
         cb = cb_ref[0].astype(jnp.float32)  # (B,)
-        o_ref[...] = jnp.einsum("mnb,b->mn", s_ref[...], cb)
+        y = jnp.einsum("mnb,b->mn", s_ref[...], cb)
+        if b_ref is not None:
+            y = y + b_ref[...]  # (1, bn) broadcasts over rows
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
 
 
 def pas_matmul_kernel_call(
     x: jax.Array,
     idx: jax.Array,
     codebook: jax.Array,
+    bias: "jax.Array | None" = None,
     *,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    relu: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """``x (M,K) · idx (K,N) · codebook (1,B) → (M,N) f32`` (single dictionary).
 
-    Paper-faithful: one dictionary per layer (groups == 1).  Shape
-    preconditions as for :func:`pasm_matmul_kernel_call`.
+    Paper-faithful: one dictionary per layer (groups == 1).  ``bias (1, N)``
+    and ``relu`` fuse into the post-pass.  Shape preconditions as for
+    :func:`pasm_matmul_kernel_call`.
     """
     M, K = x.shape
     N = idx.shape[1]
@@ -82,14 +92,21 @@ def pas_matmul_kernel_call(
     assert G == 1, "PAS-formulation kernel is paper-faithful: one dictionary"
     n_k = K // bk
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, B), lambda i, j, k: (0, 0)),
+    ]
+    operands = [x, idx, codebook]
+    if bias is not None:
+        assert bias.shape == (1, N), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias)
+
     return pl.pallas_call(
-        functools.partial(_kernel, bins=B, n_k=n_k),
+        functools.partial(_kernel, bins=B, n_k=n_k, relu=relu),
         grid=(M // bm, N // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, B), lambda i, j, k: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
@@ -97,4 +114,4 @@ def pas_matmul_kernel_call(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, idx, codebook)
+    )(*operands)

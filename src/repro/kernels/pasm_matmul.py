@@ -9,7 +9,8 @@ the bandwidth-bound regimes (decode serving) where weights dominate bytes.
 
 Tiling: grid ``(M/bm, N/bn, K/bk)`` with the reduction innermost; a VMEM
 f32 accumulator block is zeroed at ``k==0`` and written through at the last
-``k`` step.  Block shapes are MXU-aligned (multiples of 128 on N, 8/128 on
+``k`` step — where the optional bias-add/ReLU epilogue is fused, so a conv
+layer with bias+activation is a single ``pallas_call`` (no XLA epilogue).  Block shapes are MXU-aligned (multiples of 128 on N, 8/128 on
 M/K per dtype tiling).  The codebook block is ``(1, B)`` — ≤ 1 KiB, resident
 in VMEM for the whole tile loop; group selection is an index-map function of
 ``k`` (requires ``group_size % bk == 0``).
@@ -54,7 +55,10 @@ def _unpack_int4_tile(packed):
     return out.reshape(packed.shape[0] * 2, packed.shape[1])
 
 
-def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, packed: bool, gather: str, n_k: int):
+def _kernel(
+    x_ref, idx_ref, cb_ref, *rest, packed: bool, gather: str, n_k: int, relu: bool
+):
+    b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -67,11 +71,25 @@ def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, packed: bool, gather: str, n_k: in
     w = _dequant_tile(idx_tile, cb_ref[0], gather, x_ref.dtype)
     o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
 
+    # fused epilogue: bias-add / ReLU in the last-k-step write-through, so a
+    # conv layer with bias+activation stays a single pallas_call
+    if b_ref is not None or relu:
+
+        @pl.when(k == n_k - 1)
+        def _finish():
+            y = o_ref[...]
+            if b_ref is not None:
+                y = y + b_ref[...]  # (1, bn) broadcasts over rows
+            if relu:
+                y = jnp.maximum(y, 0.0)
+            o_ref[...] = y
+
 
 def pasm_matmul_kernel_call(
     x: jax.Array,
     idx: jax.Array,
     codebook: jax.Array,
+    bias: "jax.Array | None" = None,
     *,
     packed: bool,
     logical_k: int,
@@ -79,13 +97,15 @@ def pasm_matmul_kernel_call(
     bn: int = 128,
     bk: int = 512,
     gather: str = "take",
+    relu: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call; shape plumbing/padding lives in :mod:`repro.kernels.ops`.
 
     ``x (M, K) · idx (K or K//2, N) · codebook (G, B) → (M, N) f32``.
-    Preconditions (enforced by ops.py): M % bm == N % bn == K % bk == 0,
-    group_size % bk == 0, bk even when packed.
+    ``bias (1, N)`` and ``relu`` are the fused epilogue, applied inside the
+    last reduction step.  Preconditions (enforced by ops.py):
+    M % bm == N % bn == K % bk == 0, group_size % bk == 0, bk even when packed.
     """
     M, K = x.shape
     N = idx.shape[1]
@@ -99,18 +119,25 @@ def pasm_matmul_kernel_call(
     idx_block = (bk // 2, bn) if packed else (bk, bn)
     blocks_per_group = group_size // bk
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec(idx_block, lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, B), lambda i, j, k: (k // blocks_per_group, 0)),
+    ]
+    operands = [x, idx, codebook]
+    if bias is not None:
+        assert bias.shape == (1, N), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias)
+
     return pl.pallas_call(
-        functools.partial(_kernel, packed=packed, gather=gather, n_k=n_k),
+        functools.partial(_kernel, packed=packed, gather=gather, n_k=n_k, relu=relu),
         grid=(M // bm, N // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec(idx_block, lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, B), lambda i, j, k: (k // blocks_per_group, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, idx, codebook)
+    )(*operands)

@@ -6,7 +6,21 @@ import jax.numpy as jnp
 
 from repro.core import pasm as _pasm
 
-__all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref"]
+__all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref", "apply_epilogue"]
+
+
+def apply_epilogue(y: jax.Array, bias, relu: bool) -> jax.Array:
+    """The bias/ReLU epilogue the kernels fuse, as plain XLA (oracle form).
+
+    Also the einsum reference path of :func:`repro.core.conv.conv2d` — one
+    definition so kernel oracle and conv reference can never drift.  The
+    ReLU clamp keeps ``y``'s dtype (integer inputs stay integer, §5.3).
+    """
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
 
 
 def dequant_ref(idx: jax.Array, codebook: jax.Array, *, packed: bool) -> jax.Array:

@@ -5,19 +5,25 @@ accelerator into the full network shape it was drawn from: conv/ReLU/pool
 stages, each conv carrying its own PASM dictionary (per-layer codebooks, the
 paper's one-dictionary-per-layer rule), followed by a dense classifier head
 (fully-connected layers are outside the paper's conv accelerator and stay
-dense).  Every conv executes through :func:`repro.core.conv` on the batched
-im2col → Pallas GEMM path, so the whole forward pass runs the production
-kernels end-to-end.
+dense).  Every stage is one :class:`repro.core.conv.ConvParams` +
+:class:`~repro.core.conv.Conv2D` pair dispatched through
+:func:`repro.core.conv.conv2d`; on the Pallas engines bias+ReLU fuse into the
+kernel, so each batched conv layer is a single ``pallas_call``.
+
+``cfg.padding``/``cfg.layout`` apply stack-wide (``same``+``NHWC`` gives
+torchvision-exact geometry on the TPU-native layout); ``cfg.packed``
+int4-packs every conv dictionary at quantize time.
 
 Usage (see also ``examples/paper_conv.py`` and ``benchmarks/conv_bench.py``)::
 
     cfg = get_cnn_config("alexnet", smoke=True)
-    params = cnn.init_params(cfg, key)          # dense master weights
+    params = cnn.init_params(cfg, key)          # dense ConvParams per stage
     qparams = cnn.quantize(params, cfg)         # per-layer k-means codebooks
     logits = cnn.forward(qparams, images, cfg)  # (B, classes) via Pallas
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -27,45 +33,42 @@ from repro.configs.alexnet_conv import CNNConfig
 from repro.core import conv as _conv
 from repro.models.common import Initializer
 
-__all__ = ["layer_specs", "feature_shape", "init_params", "quantize", "forward",
+__all__ = ["stages", "feature_shape", "init_params", "quantize", "forward",
            "forward_dense"]
 
-
-def _geometry(cfg: CNNConfig) -> tuple:
-    """Resolve per-stage ``(ConvSpec, pool)`` plus the final (C, H, W)."""
-    C, H, W = cfg.in_chw
-    stages = []
-    for l in cfg.layers:
-        spec = _conv.ConvSpec(IH=H, IW=W, C=C, KY=l.k, KX=l.k, M=l.c_out,
-                              stride=l.stride)
-        H, W = _conv.out_hw(spec)
-        if l.pool > 1:
-            H, W = H // l.pool, W // l.pool
-        C = l.c_out
-        stages.append((spec, l.pool))
-    return stages, (C, H, W)
+_IMPLS = ("einsum", "kernel", "pas_kernel")  # CNNConfig.impl == conv2d engine
 
 
-def layer_specs(cfg: CNNConfig) -> list:
-    """Per-stage ``(ConvSpec, pool)`` resolved from the input geometry."""
-    return _geometry(cfg)[0]
+def stages(cfg: CNNConfig) -> list:
+    """Per-stage ``(Conv2D, pool)`` with the stack-wide padding/layout applied."""
+    return [
+        (dataclasses.replace(c, padding=cfg.padding, layout=cfg.layout), p)
+        for c, p in zip(cfg.layers, cfg.pools)
+    ]
 
 
 def feature_shape(cfg: CNNConfig) -> tuple:
     """(C, H, W) entering the classifier head."""
-    return _geometry(cfg)[1]
+    _, H, W = cfg.in_chw
+    C = cfg.in_chw[0]
+    for conv, pool in stages(cfg):
+        H, W = _conv.conv_out_hw(H, W, conv)
+        if pool > 1:
+            H, W = H // pool, W // pool
+        C = conv.c_out
+    return C, H, W
 
 
 def init_params(cfg: CNNConfig, key: jax.Array) -> dict:
-    """Dense master weights: per-layer conv kernels/biases + head matrix."""
+    """Dense master weights: per-layer ConvParams + head matrix."""
     ini = Initializer(key)
     convs = []
-    for spec, _pool in layer_specs(cfg):
-        fan_in = spec.C * spec.KY * spec.KX
-        convs.append({
-            "kernel": ini.dense((spec.M, spec.C, spec.KY, spec.KX), fan_in=fan_in),
-            "bias": jnp.zeros((spec.M,), jnp.float32),
-        })
+    for conv, _pool in stages(cfg):
+        fan_in = conv.c_in * conv.ky * conv.kx
+        kernel = ini.dense((conv.c_out, conv.c_in, conv.ky, conv.kx), fan_in=fan_in)
+        convs.append(_conv.ConvParams.dense(
+            kernel, bias=jnp.zeros((conv.c_out,), jnp.float32)
+        ))
     C, H, W = feature_shape(cfg)
     return {
         "conv": convs,
@@ -77,23 +80,25 @@ def init_params(cfg: CNNConfig, key: jax.Array) -> dict:
 def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16) -> dict:
     """K-means weight-share every conv layer: one PASM dictionary per layer.
 
-    Returns params with each conv entry carrying ``idx``/``codebook`` instead
-    of the dense kernel (bias stays dense — §4: bias/activation not shared).
+    Each dense ConvParams becomes a ``shared`` one (bias stays dense — §4:
+    bias/activation not shared); ``cfg.packed`` additionally int4-packs the
+    dictionary indices into the stack layout's GEMM order.
     """
     convs = []
     for p in params["conv"]:
-        cb, idx = _conv.quantize_conv_weights(p["kernel"], cfg.bins, iters=iters)
-        convs.append({"idx": idx, "codebook": cb, "bias": p["bias"]})
+        q = _conv.ConvParams.quantize(p.kernel, cfg.bins, bias=p.bias, iters=iters)
+        if cfg.packed:
+            q = q.pack(layout=cfg.layout)
+        convs.append(q)
     return {"conv": convs, "head": params["head"]}
 
 
-def _max_pool(x: jax.Array, p: int) -> jax.Array:
-    """(B, C, H, W) non-overlapping max pool, VALID (floor) windowing."""
+def _max_pool(x: jax.Array, p: int, layout: str) -> jax.Array:
+    """Non-overlapping max pool, VALID (floor) windowing, layout-aware."""
     if p == 1:
         return x
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 1, p, p), (1, 1, p, p), "VALID"
-    )
+    window = (1, p, p, 1) if layout == "NHWC" else (1, 1, p, p)
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, window, "VALID")
 
 
 def _head(x: jax.Array, head: dict) -> jax.Array:
@@ -108,32 +113,26 @@ def forward(
     *,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Quantized forward: images (B, C, H, W) → logits (B, classes).
+    """Quantized forward: images (in ``cfg.layout`` order) → logits.
 
     ``cfg.impl`` picks the conv engine per DESIGN.md §2/§3: ``kernel`` runs
     the fused-dequant ``pasm_matmul``, ``pas_kernel`` the paper-faithful
-    two-phase ``pas_matmul``, ``einsum`` the pure-XLA reference port.
+    two-phase ``pas_matmul`` (both with the bias/ReLU epilogue fused into the
+    pallas_call), ``einsum`` the pure-XLA reference port.
     """
-    if cfg.impl not in ("einsum", "kernel", "pas_kernel"):
+    if cfg.impl not in _IMPLS:
         raise ValueError(f"impl must be einsum|kernel|pas_kernel, got {cfg.impl!r}")
     x = images
-    for p, (spec, pool) in zip(params["conv"], layer_specs(cfg)):
-        if cfg.impl == "pas_kernel":
-            x = _conv.conv2d_pasm(x, p["idx"], p["codebook"], p["bias"],
-                                  spec=spec, relu=True, engine="kernel",
-                                  interpret=interpret)
-        else:
-            x = _conv.conv2d_weight_shared(x, p["idx"], p["codebook"], p["bias"],
-                                           spec=spec, relu=True, engine=cfg.impl,
-                                           interpret=interpret)
-        x = _max_pool(x, pool)
+    for p, (conv, pool) in zip(params["conv"], stages(cfg)):
+        x = _conv.conv2d(x, p, conv, engine=cfg.impl, interpret=interpret)
+        x = _max_pool(x, pool, cfg.layout)
     return _head(x, params["head"])
 
 
 def forward_dense(params: dict, images: jax.Array, cfg: CNNConfig) -> jax.Array:
     """Reference forward on the dense master weights (no weight sharing)."""
     x = images
-    for p, (spec, pool) in zip(params["conv"], layer_specs(cfg)):
-        x = _conv.conv2d_direct(x, p["kernel"], p["bias"], spec=spec, relu=True)
-        x = _max_pool(x, pool)
+    for p, (conv, pool) in zip(params["conv"], stages(cfg)):
+        x = _conv.conv2d(x, p, conv, engine="einsum")
+        x = _max_pool(x, pool, cfg.layout)
     return _head(x, params["head"])

@@ -58,6 +58,35 @@ def test_per_layer_codebooks():
     cfg, params, qparams, imgs = _setup()
     assert len(qparams["conv"]) == len(cfg.layers)
     for p, layer in zip(qparams["conv"], cfg.layers):
-        assert p["codebook"].shape == (cfg.bins,)
-        assert p["idx"].shape[0] == layer.c_out
-        assert int(p["idx"].max()) < cfg.bins
+        assert p.kind == "shared"
+        assert p.codebook.shape == (cfg.bins,)
+        assert p.idx.shape[0] == layer.c_out
+        assert int(p.idx.max()) < cfg.bins
+
+
+def test_packed_stack_matches_unpacked():
+    """cfg.packed int4-packs every dictionary; logits must not move."""
+    cfg, params, qparams, imgs = _setup("kernel")
+    pcfg = dataclasses.replace(cfg, packed=True)
+    pparams = cnn.quantize(params, pcfg)
+    assert all(p.kind == "packed" for p in pparams["conv"])
+    want = cnn.forward(qparams, imgs, cfg)
+    got = cnn.forward(pparams, imgs, pcfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_same_padding_nhwc_stack():
+    """The stack-wide padding/layout knobs: SAME+NHWC runs end to end and
+    matches the dense reference geometry."""
+    cfg = dataclasses.replace(
+        get_cnn_config("alexnet", smoke=True), padding="same", layout="NHWC"
+    )
+    params = cnn.init_params(cfg, KEY)
+    qparams = cnn.quantize(params, cfg)
+    C, H, W = cfg.in_chw
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, H, W, C))
+    logits = cnn.forward(qparams, imgs, cfg)
+    assert logits.shape == (2, cfg.classes)
+    assert cnn.feature_shape(cfg) == (32, 4, 4)  # 32→16→8→4 under SAME+pool
+    want = cnn.forward(qparams, imgs, dataclasses.replace(cfg, impl="einsum"))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-3, atol=1e-3)

@@ -174,6 +174,68 @@ def test_batched_leading_dims():
 
 
 # ---------------------------------------------------------------------------
+# fused bias/ReLU epilogue (the last-k-step write-through)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "M,K,N,bins,groups,packed",
+    [
+        (8, 64, 32, 16, 1, True),    # packed, aligned
+        (5, 96, 17, 16, 2, False),   # grouped + padding path (bias padded too)
+        (16, 2400, 256, 16, 1, True),  # conv2-sized K-padded reduction
+    ],
+)
+def test_pasm_matmul_fused_epilogue_vs_oracle(relu, M, K, N, bins, groups, packed):
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    t = pasm.quantize(w, bins=bins, groups=groups, pack=packed)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    bias = jnp.linspace(-2.0, 2.0, N)
+    got = ops.pasm_matmul(x, t, bias=bias, relu=relu, interpret=True)
+    want = ref.apply_epilogue(
+        ref.pasm_matmul_ref(x, t.idx, t.codebook, packed=t.packed), bias, relu
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+    if relu:
+        assert float(got.min()) >= 0.0
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_pas_matmul_fused_epilogue_vs_oracle(relu):
+    x, t = _mk(8, 128, 48, 16, 1, jnp.float32)
+    t = dataclasses.replace(t, idx=pasm.logical_idx(t), packed=False)
+    bias = jnp.linspace(-1.0, 1.0, 48)
+    got = ops.pas_matmul(x, t, bias=bias, relu=relu, interpret=True)
+    want = ref.apply_epilogue(ref.pas_matmul_ref(x, t.idx, t.codebook), bias, relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_epilogue_gradcheck():
+    """The fused-path VJP ≡ grad through dequantize→dot→bias→ReLU."""
+    M, K, N = 6, 128, 48
+    w = jax.random.normal(jax.random.PRNGKey(4), (K, N))
+    t = pasm.quantize(w, bins=16, groups=2, pack=True)
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, K))
+    bias = jnp.linspace(-0.5, 0.5, N)
+
+    def loss_kernel(x, cb, b):
+        tt = dataclasses.replace(t, codebook=cb)
+        return (ops.pasm_matmul(x, tt, bias=b, relu=True, interpret=True) ** 2).sum()
+
+    def loss_chain(x, cb, b):
+        tt = dataclasses.replace(t, codebook=cb)
+        wd = pasm.dequantize(tt, dtype=x.dtype)
+        y = jnp.dot(x, wd, preferred_element_type=jnp.float32) + b
+        return (jnp.maximum(y, 0.0) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, t.codebook, bias)
+    gc = jax.grad(loss_chain, argnums=(0, 1, 2))(x, t.codebook, bias)
+    for a, b in zip(gk, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # flash attention kernel
 # ---------------------------------------------------------------------------
 
