@@ -9,19 +9,24 @@ Two tiers:
   ≈B× the MACs of the direct product, exactly the DESIGN.md §2 trade-off.
 
 * ``batched_conv_latency`` / ``cnn_forward_latency`` — the production shape
-  of the same workload (DESIGN.md §3): batched im2col lowered onto the Pallas
-  GEMMs at realistic AlexNet layer sizes (224×224×3→96, 27×27×96→256) with
-  the bias/ReLU epilogue fused into the kernels, comparing the einsum port
-  against ``pasm_matmul`` (fused dequant) and ``pas_matmul`` (paper-faithful
-  two-phase).  On CPU the kernels run in interpret mode, so absolute µs are
-  not hardware numbers — the rows exist to exercise the fast path at scale
-  and to compare formulations on equal footing (``--smoke`` shrinks
-  batch/iters for CI).
+  of the same workload (DESIGN.md §3): batched convs on the Pallas GEMMs at
+  realistic AlexNet layer sizes (224×224×3→96, 27×27×96→256) with the
+  bias/ReLU epilogue fused into the kernels, comparing the einsum port
+  against ``pasm_matmul`` (explicit im2col), ``pasm_conv2d``
+  (``kernel_implicit`` — implicit im2col, no patch matrix in HBM) and
+  ``pas_matmul`` (paper-faithful two-phase).  Every batched row carries a
+  modeled ``hbm_bytes`` column (``ops.conv_hbm_bytes``, tile-plan aware) —
+  on CPU the kernels run in interpret mode, so the *bytes* column is the
+  hardware-meaningful trajectory signal and µs only compares formulations
+  on equal footing (``--smoke`` shrinks batch/iters for CI).
 
 ``--json [PATH]`` additionally writes every row to ``BENCH_conv.json`` so CI
-tracks the einsum/kernel/pas_kernel trajectory from this PR onward.
+tracks the engine trajectory from this PR onward; ``--engine e1,e2`` runs
+*only* the batched suite restricted to those engines (the CI comparison mode
+that gates implicit-vs-explicit modeled HBM bytes).
 
     PYTHONPATH=src python benchmarks/conv_bench.py [--smoke] [--json [PATH]]
+                                                   [--engine e1,e2]
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.configs.alexnet_conv import PAPER_SPEC
 from repro.core import conv as cv
+from repro.kernels import ops
 
 from benchmarks.common import emit, time_us
 
@@ -55,12 +61,15 @@ REALISTIC_LAYERS = (
 PAPER_CONV = cv.Conv2D(k=(PAPER_SPEC.KY, PAPER_SPEC.KX), c_in=PAPER_SPEC.C,
                        c_out=PAPER_SPEC.M, stride=PAPER_SPEC.stride)
 
+BATCH_ENGINES = ("einsum", "kernel", "kernel_implicit", "pas_kernel")
+
 _RECORDS: list = []
 
 
-def record(name: str, us_per_call: float, derived: str = "") -> None:
-    emit(name, us_per_call, derived)
-    _RECORDS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+def record(name: str, us_per_call: float, derived: str = "", hbm_bytes=None) -> None:
+    emit(name, us_per_call, derived, hbm_bytes=hbm_bytes)
+    _RECORDS.append({"name": name, "us_per_call": us_per_call,
+                     "hbm_bytes": hbm_bytes, "derived": derived})
 
 
 def conv_variants_latency():
@@ -84,8 +93,13 @@ def conv_variants_latency():
         record(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}")
 
 
-def batched_conv_latency(smoke: bool = False):
-    """Realistic layers, batched: einsum port vs kernel vs pas_kernel."""
+def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
+    """Realistic layers, batched: einsum vs kernel vs kernel_implicit vs pas.
+
+    Each row carries the tile-plan-aware modeled HBM bytes of its dataflow —
+    explicit engines pay the materialized-patch-matrix write+read, implicit
+    streams the padded image once per reuse window.
+    """
     batch = 1 if smoke else 8
     iters = 1 if smoke else 5
     warmup = 1 if smoke else 2
@@ -97,20 +111,29 @@ def batched_conv_latency(smoke: bool = False):
         params = cv.ConvParams.quantize(
             kern, 16, bias=jnp.linspace(-0.1, 0.1, conv.c_out)
         )
+        t_gemm = params.gemm_tensor(conv.layout)
+        geom = cv.conv_geom(conv, ih, iw)
         oh, ow = cv.conv_out_hw(ih, iw, conv)
         derived = f"P={batch * oh * ow} K={conv.K} M={conv.c_out}"
 
-        for engine in ("einsum", "kernel", "pas_kernel"):
+        for engine in engines:
             if engine == "pas_kernel" and smoke and conv.K > 1000:
                 # no silent caps: the one-hot PAS formulation costs B× the
                 # MACs — at conv2's K=2400 that is minutes in interpret mode
                 print(f"# skipped conv.batched.pas_kernel.{name}: K={conv.K} "
                       "too large for CI smoke (interpret mode)", file=sys.stderr)
                 continue
+            # the model describes the Pallas-kernel dataflows only; the XLA
+            # einsum port streams dense f32 weights (no indexed operands)
+            hbm = None if engine == "einsum" else ops.conv_hbm_bytes(
+                t_gemm, geom, batch, ih, iw,
+                implicit=engine == "kernel_implicit", act_bytes=4,
+            )
             f = jax.jit(lambda i, p=params, c=conv, e=engine:
                         cv.conv2d(i, p, c, engine=e))
             t = time_us(f, imgs, iters=iters, warmup=warmup)
-            record(f"conv.batched.{engine}.{name}.bs{batch}", t, derived)
+            record(f"conv.batched.{engine}.{name}.bs{batch}", t, derived,
+                   hbm_bytes=hbm)
 
 
 def cnn_forward_latency(smoke: bool = True):
@@ -134,11 +157,22 @@ def main() -> None:
     ap.add_argument("--json", nargs="?", const="BENCH_conv.json", default=None,
                     metavar="PATH", help="also write rows to a JSON file "
                     "(default BENCH_conv.json)")
+    ap.add_argument("--engine", default=None, metavar="E1,E2",
+                    help="run ONLY the batched suite, restricted to these "
+                    f"conv2d engines (choices: {','.join(BATCH_ENGINES)}) — "
+                    "the CI implicit-vs-explicit comparison mode")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
-    conv_variants_latency()
-    batched_conv_latency(smoke=args.smoke)
-    cnn_forward_latency(smoke=args.smoke)
+    print("name,us_per_call,hbm_bytes,derived")
+    if args.engine:
+        engines = tuple(e.strip() for e in args.engine.split(",") if e.strip())
+        bad = [e for e in engines if e not in BATCH_ENGINES]
+        if bad:
+            ap.error(f"unknown engine(s) {bad}; choices: {BATCH_ENGINES}")
+        batched_conv_latency(smoke=args.smoke, engines=engines)
+    else:
+        conv_variants_latency()
+        batched_conv_latency(smoke=args.smoke)
+        cnn_forward_latency(smoke=args.smoke)
     if args.json:
         payload = {
             "benchmark": "conv",

@@ -1,6 +1,6 @@
 """Benchmark runner: one function per paper table/figure + beyond-paper.
 
-Prints ``name,us_per_call,derived`` CSV rows (0.0 µs = analytical artifact).
+Prints ``name,us_per_call,hbm_bytes,derived`` CSV rows (0.0 µs = analytical artifact).
 
     PYTHONPATH=src python -m benchmarks.run [--only substring]
 """
@@ -36,7 +36,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
+    print("name,us_per_call,hbm_bytes,derived")
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue

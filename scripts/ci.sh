@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 CI: the full offline test suite, the examples on the unified
 # ConvParams/conv2d surface (DeprecationWarnings are errors: the examples must
-# not touch the legacy shims), and an interpret-mode smoke of the batched conv
+# not touch the legacy shims), an interpret-mode smoke of the batched conv
 # benchmark (exercises the Pallas PASM kernels + fused epilogue end to end,
-# and leaves BENCH_conv.json behind so perf is tracked per PR).
+# and leaves BENCH_conv.json behind so perf is tracked per PR), and the
+# implicit-vs-explicit im2col gate: the implicit engine's modeled HBM bytes
+# must be strictly below the explicit path's on the AlexNet conv1 geometry.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -23,5 +25,31 @@ echo "== smoke: batched conv benchmark (interpret mode) =="
 python benchmarks/conv_bench.py --smoke --json
 
 test -s BENCH_conv.json && echo "BENCH_conv.json written"
+
+echo "== smoke: implicit vs explicit im2col HBM bytes (AlexNet conv1) =="
+# two separate --engine runs by design: each exercises its engine's full
+# batched path in isolation before the byte comparison (the modeled numbers
+# alone could be read from BENCH_conv.json, but would not prove both
+# engines still run)
+trap 'rm -f BENCH_conv_explicit.json BENCH_conv_implicit.json' EXIT
+python benchmarks/conv_bench.py --smoke --engine kernel --json BENCH_conv_explicit.json
+python benchmarks/conv_bench.py --smoke --engine kernel_implicit --json BENCH_conv_implicit.json
+python - <<'PY'
+import json
+
+def row(path, name):
+    rows = {r["name"]: r for r in json.load(open(path))["records"]}
+    return rows[name]
+
+e = row("BENCH_conv_explicit.json", "conv.batched.kernel.alexnet_conv1.bs1")
+i = row("BENCH_conv_implicit.json", "conv.batched.kernel_implicit.alexnet_conv1.bs1")
+assert i["hbm_bytes"] is not None and e["hbm_bytes"] is not None, (i, e)
+assert i["hbm_bytes"] < e["hbm_bytes"], (
+    f"implicit im2col must model strictly fewer HBM bytes than explicit on "
+    f"the AlexNet conv1 geometry: implicit={i['hbm_bytes']} explicit={e['hbm_bytes']}"
+)
+print(f"implicit {i['hbm_bytes']} B < explicit {e['hbm_bytes']} B "
+      f"({e['hbm_bytes'] / i['hbm_bytes']:.2f}x reduction) OK")
+PY
 
 echo "CI OK"

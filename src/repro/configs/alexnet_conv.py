@@ -35,7 +35,8 @@ class CNNConfig:
     pools: Sequence[int]  # per-stage max-pool window == stride; 1 = none
     classes: int
     bins: int = 16  # PASM dictionary size, one dictionary per conv layer
-    impl: str = "kernel"  # einsum | kernel (pasm_matmul) | pas_kernel
+    groups: int = 1  # reduction-axis codebook groups per layer (1 = paper rule)
+    impl: str = "kernel"  # einsum | kernel | kernel_implicit | pas_kernel
     padding: str = "valid_centred"  # stack-wide: valid_centred | valid | same
     layout: str = "NCHW"  # stack-wide: NCHW | NHWC
     packed: bool = False  # int4-pack the conv dictionaries at quantize time

@@ -22,23 +22,34 @@ exposes that accelerator through two types and one entry point:
   ===========  ================================================================
   engine       meaning
   ===========  ================================================================
-  ``auto``     dense → einsum; shared/packed → Pallas kernel when batched,
-               einsum reference for single images (the seed's routing rule)
+  ``auto``     dense → einsum; shared/packed → implicit-GEMM Pallas kernel
+               when batched and the image tiles into VMEM
+               (:func:`_implicit_fits`), explicit-im2col kernel otherwise,
+               einsum reference for single images
   ``einsum``   pure-XLA reference: (dequantized) dense GEMM + XLA epilogue
   ``kernel``   :func:`repro.kernels.ops.pasm_matmul` — fused-dequant Pallas
                GEMM with the bias/ReLU epilogue fused into the last-k-step
-               write-through (one ``pallas_call`` per conv layer)
+               write-through (one ``pallas_call`` per conv layer) over an
+               explicitly materialized im2col patch matrix
+  ``kernel_implicit``  :func:`repro.kernels.ops.pasm_conv2d` — **implicit
+               im2col**: one ``pallas_call`` over the raw (padded) image;
+               patch tiles are assembled inside the kernel, no ``(B·P, K)``
+               patch matrix in HBM (bit-exact vs ``kernel``)
   ``pas_kernel``  :func:`repro.kernels.ops.pas_matmul` — the paper-faithful
                two-phase PAS formulation, epilogue fused into the post-pass
+  ``pas_kernel_implicit``  :func:`repro.kernels.ops.pas_conv2d` — the
+               two-phase formulation with implicit im2col
   ``pas_einsum``  the two-phase formulation as pure XLA (one-hot histogram +
                post-pass) — the seed's ``conv2d_pasm`` einsum port
   ===========  ================================================================
 
-Convolution lowers onto the PASM GEMMs via a batched im2col —
-``(B, C, IH, IW) → (B·P, C·KY·KX)`` in the paper's ``(c, ky, kx)`` order for
-NCHW, or ``(B, IH, IW, C) → (B·P, KY·KX·C)`` channels-minor (TPU-native) for
-NHWC — and the weight container flattens itself into the matching ``(K, M)``
-GEMM operand.
+Convolution lowers onto the PASM GEMMs via im2col in the layout's column
+order — ``(B, C, IH, IW) → (B·P, C·KY·KX)`` in the paper's ``(c, ky, kx)``
+order for NCHW, or ``(B, IH, IW, C) → (B·P, KY·KX·C)`` channels-minor
+(TPU-native) for NHWC — and the weight container flattens itself into the
+matching ``(K, M)`` GEMM operand.  The explicit engines materialize that
+patch matrix in HBM; the ``*_implicit`` engines assemble patch tiles inside
+the kernel from the VMEM-resident image (DESIGN.md §3).
 
 Migration table (the old surface is kept as thin deprecation shims):
 
@@ -70,6 +81,7 @@ __all__ = [
     "ConvParams",
     "conv2d",
     "conv_out_hw",
+    "conv_geom",
     "PADDINGS",
     "LAYOUTS",
     # legacy surface (deprecation shims / kept helpers)
@@ -85,7 +97,22 @@ __all__ = [
 
 PADDINGS = ("valid_centred", "valid", "same")
 LAYOUTS = ("NCHW", "NHWC")
-ENGINES = ("auto", "einsum", "kernel", "pas_kernel", "pas_einsum")
+ENGINES = (
+    "auto",
+    "einsum",
+    "kernel",
+    "kernel_implicit",
+    "pas_kernel",
+    "pas_kernel_implicit",
+    "pas_einsum",
+)
+_IMPLICIT_ENGINES = ("kernel_implicit", "pas_kernel_implicit")
+_PAS_ENGINES = ("pas_kernel", "pas_kernel_implicit", "pas_einsum")
+
+# ``auto`` only picks the implicit path when one padded image block (the
+# per-grid-step x operand, f32) fits comfortably in VMEM next to the idx /
+# patch / accumulator tiles; larger images fall back to explicit im2col.
+_IMPLICIT_VMEM_BUDGET = 6 * 1024 * 1024
 
 # GEMM column order per layout: NCHW flattens patches (and weights) in the
 # paper's (c, ky, kx) loop-nest order (Fig 1); NHWC is channels-minor
@@ -157,6 +184,39 @@ def conv_out_hw(ih: int, iw: int, conv: Conv2D) -> tuple:
     return oh, ow
 
 
+def conv_geom(conv: Conv2D, ih: int, iw: int):
+    """The static geometry the implicit-GEMM kernels consume.
+
+    Resolves the spec against an ``ih × iw`` image into the hashable
+    :class:`repro.kernels.ops.ConvGeom` (output dims + spatial pad + the
+    layout's reduction order) that rides jit static args.
+    """
+    from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+    oh, plo_h, phi_h = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
+    ow, plo_w, phi_w = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
+    return _kops.ConvGeom(
+        nhwc=conv.layout == "NHWC",
+        ky=conv.ky,
+        kx=conv.kx,
+        stride=conv.stride,
+        oh=oh,
+        ow=ow,
+        c_in=conv.c_in,
+        pad=((plo_h, phi_h), (plo_w, phi_w)),
+    )
+
+
+def _implicit_fits(conv: Conv2D, ih: int, iw: int) -> bool:
+    """``auto``'s shapes-tile predicate for the implicit-GEMM path."""
+    oh, plo_h, phi_h = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
+    ow, plo_w, phi_w = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
+    if oh <= 0 or ow <= 0:
+        return False
+    hp, wp = ih + plo_h + phi_h, iw + plo_w + phi_w
+    return conv.c_in * hp * wp * 4 <= _IMPLICIT_VMEM_BUDGET
+
+
 # ---------------------------------------------------------------------------
 # the weight container
 # ---------------------------------------------------------------------------
@@ -173,7 +233,10 @@ class ConvParams:
 
     ``dense``   ``kernel (c_out, c_in, ky, kx)``; ``idx``/``codebook`` None.
     ``shared``  ``idx (c_out, c_in, ky, kx) uint8`` bin indices +
-                ``codebook (bins,)`` — one dictionary per layer (paper §4).
+                ``codebook (bins,)`` — one dictionary per layer (paper §4) —
+                or ``(groups, bins)`` with one dictionary per segment of the
+                GEMM reduction axis (beyond-paper accuracy knob; ``order``
+                records which layout's flatten order the groups split).
     ``packed``  ``idx (Kp//2, c_out) uint8`` — two 4-bit indices per byte in
                 the GEMM ``(K, M)`` layout of ``order`` (baked at pack time);
                 ``pad_k`` zero-activation rows were appended by the §3 K-pad
@@ -207,10 +270,31 @@ class ConvParams:
         codebook: jax.Array,
         *,
         bias: Optional[jax.Array] = None,
+        order: Optional[str] = None,
     ):
-        """Weight-shared params from existing bin indices + dictionary."""
+        """Weight-shared params from existing bin indices + dictionary.
+
+        A 1-D ``codebook (bins,)`` is the paper's one-dictionary-per-layer
+        rule; a 2-D ``(groups, bins)`` splits the GEMM reduction axis into
+        ``groups`` segments with one dictionary each, and then ``order``
+        (``"ckk"``/``"kkc"``) must name the flatten order the grouping was
+        built for — group membership is a function of the flat K position.
+        """
         if idx.ndim != 4:
             raise ValueError(f"idx must be (c_out, c_in, ky, kx), got {idx.shape}")
+        if codebook.ndim == 2 and codebook.shape[0] == 1:
+            codebook = codebook.reshape(-1)  # (1, B) ≡ the single-dict rule
+        groups = 1 if codebook.ndim == 1 else int(codebook.shape[0])
+        if groups > 1 and order not in _ORDER.values():
+            raise ValueError(
+                "grouped codebooks split the flattened reduction axis: pass "
+                f"order='ckk'|'kkc' (the layout they were built for), got {order!r}"
+            )
+        if int(idx[0].size) % groups:
+            raise ValueError(
+                f"K = c_in·ky·kx = {idx[0].size} not divisible by "
+                f"groups={groups}"
+            )
         return cls(
             idx=idx.astype(jnp.uint8),
             codebook=codebook,
@@ -218,6 +302,7 @@ class ConvParams:
             kind="shared",
             kshape=tuple(idx.shape),
             bins=int(codebook.shape[-1]),
+            order=order if groups > 1 else None,
         )
 
     @classmethod
@@ -228,10 +313,35 @@ class ConvParams:
         *,
         bias: Optional[jax.Array] = None,
         iters: int = 16,
+        groups: int = 1,
+        layout: str = "NCHW",
     ):
-        """K-means weight-share a dense kernel: one dictionary per layer."""
-        cb, idx = quantize_conv_weights(kernel, bins, iters=iters)
-        return cls.shared(idx, cb, bias=bias)
+        """K-means weight-share a dense kernel.
+
+        ``groups=1`` (default) is the paper rule — one dictionary per layer.
+        ``groups > 1`` splits the GEMM reduction axis (``K = c_in·ky·kx``,
+        flattened in ``layout``'s order) into that many segments with one
+        dictionary each — the ROADMAP accuracy knob for small ``bins``; the
+        resulting params are pinned to ``layout`` (``gemm_tensor`` refuses a
+        mismatch, like packed params do).
+        """
+        if groups == 1:
+            cb, idx = quantize_conv_weights(kernel, bins, iters=iters)
+            return cls.shared(idx, cb, bias=bias)
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
+        K = int(kernel[0].size)
+        if K % groups:
+            raise ValueError(
+                f"K = c_in·ky·kx = {K} not divisible by groups={groups}"
+            )
+        order = _ORDER[layout]
+        flat = _flatten_kernel(kernel, order)  # (K, c_out)
+        cb, idx = _pasm.kmeans_codebook(flat, bins, groups=groups, iters=iters)
+        return cls.shared(
+            _unflatten_kernel(idx, order, tuple(kernel.shape)), cb,
+            bias=bias, order=order,
+        )
 
     def pack(self, *, layout: str = "NCHW") -> "ConvParams":
         """int4-pack the dictionary indices into the GEMM layout of ``layout``.
@@ -252,7 +362,14 @@ class ConvParams:
         if layout not in LAYOUTS:
             raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
         order = _ORDER[layout]
+        self._check_order(order)
         flat = _flatten_kernel(self.idx, order)  # (K, c_out)
+        if self.groups > 1 and (flat.shape[0] // self.groups) % 2:
+            # nibble pairs must not straddle a group boundary
+            raise ValueError(
+                "packed int4 needs an even per-group reduction length, got "
+                f"K={flat.shape[0]} over {self.groups} groups"
+            )
         codebook, bins, pad_k = self.codebook, self.bins, 0
         if flat.shape[0] % 2:
             pad_k = 1
@@ -279,19 +396,35 @@ class ConvParams:
     def c_out(self) -> int:
         return self.kshape[0]
 
+    @property
+    def groups(self) -> int:
+        """Codebook groups along the GEMM reduction axis (1 = paper rule)."""
+        cb = self.codebook
+        return 1 if cb is None or cb.ndim == 1 else int(cb.shape[0])
+
+    def _grouped_codebook(self) -> jax.Array:
+        """The ``(G, B)`` f32 codebook the kernels consume."""
+        cb = self.codebook.astype(jnp.float32)
+        return cb.reshape(1, -1) if cb.ndim == 1 else cb
+
+    def _check_order(self, order: str) -> None:
+        if self.order is not None and order != self.order:
+            what = "packed" if self.kind == "packed" else "grouped"
+            fix = "re-pack" if self.kind == "packed" else "re-quantize"
+            raise ValueError(
+                f"params were {what} for order {self.order!r} but this layout "
+                f"needs {order!r}; {fix} for this layout"
+            )
+
     def gemm_tensor(self, layout: str = "NCHW") -> _pasm.PASMTensor:
         """The dictionary as the ``(K, M)`` Pallas GEMM operand for ``layout``."""
         order = _ORDER[layout]
         if self.kind == "packed":
-            if order != self.order:
-                raise ValueError(
-                    f"params were packed for order {self.order!r} but layout "
-                    f"{layout!r} needs {order!r}; re-pack for this layout"
-                )
+            self._check_order(order)
             K = self.idx.shape[0] * 2
             return _pasm.PASMTensor(
                 idx=self.idx,
-                codebook=self.codebook.reshape(1, -1).astype(jnp.float32),
+                codebook=self._grouped_codebook(),
                 shape=(K, self.c_out),
                 bins=self.bins,
                 bits=4,
@@ -299,10 +432,11 @@ class ConvParams:
             )
         if self.kind != "shared":
             raise ValueError("dense params have no dictionary; use engine='einsum'")
+        self._check_order(order)
         idx = _flatten_kernel(self.idx, order)  # (K, M)
         return _pasm.PASMTensor(
             idx=idx,
-            codebook=self.codebook.reshape(1, -1).astype(jnp.float32),
+            codebook=self._grouped_codebook(),
             shape=tuple(idx.shape),
             bins=self.bins,
             bits=_pasm.bits_for_bins(self.bins),
@@ -318,8 +452,16 @@ class ConvParams:
         if self.kind == "dense":
             return _flatten_kernel(self.kernel, _ORDER[layout])
         if self.kind == "shared":
-            kernel = self.codebook[self.idx.astype(jnp.int32)]
-            return _flatten_kernel(kernel, _ORDER[layout])
+            if self.groups == 1:
+                kernel = self.codebook[self.idx.astype(jnp.int32)]
+                return _flatten_kernel(kernel, _ORDER[layout])
+            self._check_order(_ORDER[layout])
+            idxf = _flatten_kernel(self.idx, _ORDER[layout]).astype(jnp.int32)
+            K, M = idxf.shape
+            wg = jax.vmap(lambda cb, ix: cb[ix])(
+                self.codebook, idxf.reshape(self.groups, K // self.groups, M)
+            )
+            return wg.reshape(K, M)
         return _pasm.dequantize(self.gemm_tensor(layout))
 
 
@@ -328,6 +470,15 @@ def _flatten_kernel(a: jax.Array, order: str) -> jax.Array:
     if order == "kkc":
         a = a.transpose(0, 2, 3, 1)  # (c_out, ky, kx, c_in)
     return a.reshape(a.shape[0], -1).T
+
+
+def _unflatten_kernel(flat: jax.Array, order: str, kshape: tuple) -> jax.Array:
+    """Inverse of :func:`_flatten_kernel`: (K, c_out) → (c_out, c_in, ky, kx)."""
+    c_out, c_in, ky, kx = kshape
+    a = flat.T
+    if order == "kkc":
+        return a.reshape(c_out, ky, kx, c_in).transpose(0, 3, 1, 2)
+    return a.reshape(kshape)
 
 
 # ---------------------------------------------------------------------------
@@ -348,31 +499,21 @@ def _im2col(xb: jax.Array, conv: Conv2D) -> tuple:
 
     NCHW ``(B, C, IH, IW) → (B·P, C·KY·KX)`` (paper (c, ky, kx) order);
     NHWC ``(B, IH, IW, C) → (B·P, KY·KX·C)`` (channels-minor, TPU-native).
-    Returns ``(patches, (oh, ow))``.
+    Returns ``(patches, (oh, ow))``.  The gather itself lives in
+    :func:`repro.kernels.ref.im2col_patches` (pure jnp, pallas-free) — one
+    definition shared with the implicit path's col2im backward.
     """
+    from repro.kernels.ref import im2col_patches
+
     nhwc = conv.layout == "NHWC"
-    B = xb.shape[0]
     ih, iw = (xb.shape[1], xb.shape[2]) if nhwc else (xb.shape[2], xb.shape[3])
     oh, plo_h, phi_h = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
     ow, plo_w, phi_w = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
-    if plo_h or phi_h or plo_w or phi_w:
-        spatial = ((plo_h, phi_h), (plo_w, phi_w))
-        pad = ((0, 0), *spatial, (0, 0)) if nhwc else ((0, 0), (0, 0), *spatial)
-        xb = jnp.pad(xb, pad)
-    ky = jnp.arange(conv.ky)
-    kx = jnp.arange(conv.kx)
-    oy = jnp.arange(oh) * conv.stride
-    ox = jnp.arange(ow) * conv.stride
-    if nhwc:
-        rows = oy[:, None, None, None] + ky[None, None, :, None]  # (oh,1,KY,1)
-        cols = ox[None, :, None, None] + kx[None, None, None, :]  # (1,ow,1,KX)
-        patches = xb[:, rows, cols, :]  # (B, oh, ow, KY, KX, C)
-    else:
-        c = jnp.arange(conv.c_in)[None, None, :, None, None]
-        rows = oy[:, None, None, None, None] + ky[None, None, None, :, None]
-        cols = ox[None, :, None, None, None] + kx[None, None, None, None, :]
-        patches = xb[:, c, rows, cols]  # (B, oh, ow, C, KY, KX)
-    return patches.reshape(B * oh * ow, conv.K), (oh, ow)
+    patches = im2col_patches(
+        xb, nhwc=nhwc, ky=conv.ky, kx=conv.kx, stride=conv.stride,
+        oh=oh, ow=ow, c_in=conv.c_in, pad=((plo_h, phi_h), (plo_w, phi_w)),
+    )
+    return patches, (oh, ow)
 
 
 def _col2im(y: jax.Array, conv: Conv2D, batch: int, oh: int, ow: int, squeeze: bool):
@@ -398,7 +539,9 @@ def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _resolve_engine(engine: str, params: ConvParams, squeeze: bool) -> str:
+def _resolve_engine(
+    engine: str, params: ConvParams, squeeze: bool, conv: Conv2D, ih: int, iw: int
+) -> str:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     if params.kind == "dense":
@@ -406,10 +549,18 @@ def _resolve_engine(engine: str, params: ConvParams, squeeze: bool) -> str:
             return "einsum"
         raise ValueError(f"dense params have no dictionary; engine {engine!r} "
                          "needs shared/packed params")
+    if params.groups > 1 and engine in _PAS_ENGINES:
+        raise ValueError(
+            "the PAS formulation is paper-faithful single-dictionary; grouped "
+            "codebooks need engine='kernel'/'kernel_implicit'/'einsum'"
+        )
     if engine == "auto":
-        # batched inputs ride the Pallas fast path; single images keep the
+        # batched inputs ride the Pallas fast path — implicit im2col when the
+        # image tiles into VMEM, explicit otherwise; single images keep the
         # einsum reference port (the semantics the kernels are tested against)
-        return "einsum" if squeeze else "kernel"
+        if squeeze:
+            return "einsum"
+        return "kernel_implicit" if _implicit_fits(conv, ih, iw) else "kernel"
     return engine
 
 
@@ -425,10 +576,13 @@ def conv2d(
 
     ``x`` is a single image or a batch in ``conv.layout`` order.  On the
     Pallas engines the bias/ReLU epilogue is fused into the kernel's final
-    reduction step, so a batched conv layer is exactly one ``pallas_call``.
+    reduction step, so a batched conv layer is exactly one ``pallas_call`` —
+    and on the ``*_implicit`` engines that call consumes the raw (padded)
+    image directly, with the im2col tiles assembled in VMEM.
     """
     xb, squeeze = _batched4(x)
-    c_axis = -1 if conv.layout == "NHWC" else 1
+    nhwc = conv.layout == "NHWC"
+    c_axis = -1 if nhwc else 1
     if xb.shape[c_axis] != conv.c_in:
         raise ValueError(
             f"input {x.shape} has {xb.shape[c_axis]} channels on the "
@@ -439,9 +593,21 @@ def conv2d(
             f"params kshape {params.kshape} does not match spec "
             f"{(conv.c_out, conv.c_in, conv.ky, conv.kx)}"
         )
-    eng = _resolve_engine(engine, params, squeeze)
-    patches, (oh, ow) = _im2col(xb, conv)
+    ih, iw = (xb.shape[1], xb.shape[2]) if nhwc else (xb.shape[2], xb.shape[3])
+    eng = _resolve_engine(engine, params, squeeze, conv, ih, iw)
     bias = params.bias if conv.bias else None
+
+    if eng in _IMPLICIT_ENGINES:
+        from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+        geom = conv_geom(conv, ih, iw)
+        t = params.gemm_tensor(conv.layout)
+        f = _kops.pasm_conv2d if eng == "kernel_implicit" else _kops.pas_conv2d
+        y = f(xb, t, geom, bias=bias, relu=conv.relu, interpret=interpret)
+        y = y.reshape(-1, conv.c_out)  # (B, P, M) → (B·P, M), after the kernel
+        return _col2im(y, conv, xb.shape[0], geom.oh, geom.ow, squeeze)
+
+    patches, (oh, ow) = _im2col(xb, conv)
 
     if eng == "einsum":
         w = params.dense_operand(conv.layout)

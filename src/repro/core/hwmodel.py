@@ -44,6 +44,8 @@ __all__ = [
     "accel_ratio_fpga",
     "conv_latency_cycles",
     "conv_latency_ratio",
+    "conv_hbm_traffic",
+    "im2col_inflation",
     "fpga_resources",
     "PAPER_CLAIMS",
 ]
@@ -300,3 +302,54 @@ def conv_latency_ratio(bins: int, conv: dict = PAPER_CONV) -> float:
     base = conv_latency_cycles(**conv, bins=0)
     pasm = conv_latency_cycles(**conv, bins=bins)
     return pasm / base
+
+
+# ---------------------------------------------------------------------------
+# 4. conv HBM traffic model (im2col dataflow: explicit vs implicit)
+# ---------------------------------------------------------------------------
+
+
+def im2col_inflation(KY: int, KX: int, stride: int = 1) -> float:
+    """Activation-byte inflation of a materialized patch matrix vs the image.
+
+    Each input pixel lands in up to ``KY·KX/stride²`` patches (≈7.6× for
+    AlexNet conv1: 11·11/4² = 7.5625) — the factor implicit-GEMM removes.
+    """
+    return KY * KX / stride ** 2
+
+
+def conv_hbm_traffic(
+    *, IH: int, IW: int, C: int, KY: int, KX: int, M: int, stride: int = 1,
+    batch: int = 1, bins: int = 16, pad: tuple = (0, 0, 0, 0),
+    act_bytes: int = 4, packed: bool = True, implicit: bool = True,
+) -> int:
+    """Logical-shape HBM bytes of one conv layer on the PASM GEMM.
+
+    The PASM memory argument (DESIGN.md §2) extended to the conv dataflow:
+    weights stream as ``log2(B)``-bit indices (int4-``packed`` halves them)
+    plus a tiny codebook on either path, so the paths differ *only* in the
+    activation term —
+
+    * ``implicit=False`` (explicit im2col): the ``(B·P, K)`` patch matrix is
+      written by the front-end and read back by the kernel — ``2·B·P·K``
+      activation elements, an :func:`im2col_inflation` blow-up of the image.
+    * ``implicit=True``: the padded image streams once per reuse window —
+      ``B·C·Hp·Wp`` elements, full stop.
+
+    Plan-free counterpart of the tile-aware
+    :func:`repro.kernels.ops.conv_hbm_bytes` (which additionally rounds to
+    the kernels' padded operands).
+    """
+    plh, phh, plw, phw = pad
+    hp, wp = IH + plh + phh, IW + plw + phw
+    OH = (hp - KY) // stride + 1
+    OW = (wp - KX) // stride + 1
+    P, K = OH * OW, C * KY * KX
+    idx_bytes = K * M // 2 if packed else K * M
+    cb_bytes = bins * 4
+    out_bytes = batch * P * M * 4  # f32 store
+    if implicit:
+        x_bytes = batch * C * hp * wp * act_bytes
+    else:
+        x_bytes = 2 * batch * P * K * act_bytes  # im2col store + kernel stream
+    return x_bytes + idx_bytes + cb_bytes + out_bytes

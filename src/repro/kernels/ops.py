@@ -17,10 +17,23 @@ import numpy as np
 
 from repro.core import pasm as _pasm
 from repro.kernels import ref as _ref
-from repro.kernels.pas_histogram import pas_matmul_kernel_call
-from repro.kernels.pasm_matmul import pasm_matmul_kernel_call
+from repro.kernels.pas_histogram import pas_conv_kernel_call, pas_matmul_kernel_call
+from repro.kernels.pasm_matmul import (
+    ConvGeom,
+    pasm_conv_kernel_call,
+    pasm_matmul_kernel_call,
+)
 
-__all__ = ["pasm_matmul", "pas_matmul", "matmul_flops", "pasm_hbm_bytes"]
+__all__ = [
+    "pasm_matmul",
+    "pas_matmul",
+    "pasm_conv2d",
+    "pas_conv2d",
+    "ConvGeom",
+    "matmul_flops",
+    "pasm_hbm_bytes",
+    "conv_hbm_bytes",
+]
 
 
 def _interpret_default() -> bool:
@@ -62,23 +75,24 @@ def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
     return bm, bn, bk, gs_pad
 
 
-def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
-    """Pad (x, idx, codebook) to the tile plan; returns logical (M, N, Kp).
+def _pad_weight_operands(idx, codebook, bn, gs_pad, packed):
+    """K-pad (idx, codebook) per group and N-pad idx to the tile plan.
 
-    M/N padding is plain zero/edge padding (sliced off the output).  K padding
-    appends ``gs_pad - group_size`` rows per group: the pad rows of ``x`` are
-    zero AND their indices point at a reserved all-zero codebook bin (appended
-    as bin ``B`` when representable), so padded positions are doubly inert in
-    both the fused-dequant and the PAS-histogram formulation.  When the pad
-    bin is not representable (packed int4 at B=16, or B=256 saturating uint8)
+    K padding appends ``gs_pad - group_size`` index rows per group pointing
+    at a reserved all-zero codebook bin (appended as bin ``B`` when
+    representable), so padded positions are inert in both the fused-dequant
+    and the PAS-histogram formulation — their paired activations are zero
+    too (explicit path: zero-padded ``x`` rows; implicit path: the masked
+    :func:`~repro.kernels.pasm_matmul.patch_tile` gather).  When the pad bin
+    is not representable (packed int4 at B=16, or B=256 saturating uint8)
     bin 0 is used instead — still exact, because the paired activations are
-    zero.  Grouped codebooks pad per group so the kernel's ``k-block → group``
-    index map stays a pure division.
+    zero.  Grouped codebooks pad per group so the kernel's
+    ``k-block → group`` index map stays a pure division.  Returns
+    ``(idx, codebook, N)`` with ``N`` the logical output width.
     """
-    M, K = x.shape
     N = idx.shape[1]
     G, B = codebook.shape
-    gs = K // G
+    gs = idx.shape[0] * (2 if packed else 1) // G
     if gs_pad != gs:
         pad = gs_pad - gs
         if not packed and B < 256:
@@ -94,12 +108,28 @@ def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
             idx = jnp.pad(
                 idxg, ((0, 0), (0, pad), (0, 0)), constant_values=pad_bin
             ).reshape(-1, N)
-        x = jnp.pad(x.reshape(M, G, gs), ((0, 0), (0, 0), (0, pad)))
+    Np = _round_up(N, bn)
+    idx = jnp.pad(idx, ((0, 0), (0, Np - N))) if Np != N else idx
+    return idx, codebook, N
+
+
+def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
+    """Pad (x, idx, codebook) to the tile plan; returns logical (M, N, Kp).
+
+    M/N padding is plain zero padding (sliced off the output); K padding is
+    :func:`_pad_weight_operands` plus matching zero rows in ``x`` so padded
+    positions are doubly inert.
+    """
+    M, K = x.shape
+    G = codebook.shape[0]
+    gs = K // G
+    idx, codebook, N = _pad_weight_operands(idx, codebook, bn, gs_pad, packed)
+    if gs_pad != gs:
+        x = jnp.pad(x.reshape(M, G, gs), ((0, 0), (0, 0), (0, gs_pad - gs)))
         x = x.reshape(M, G * gs_pad)
         K = G * gs_pad
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Mp = _round_up(M, bm)
     x = jnp.pad(x, ((0, Mp - M), (0, 0))) if Mp != M else x
-    idx = jnp.pad(idx, ((0, 0), (0, Np - N))) if Np != N else idx
     return x, idx, codebook, (M, N, K)
 
 
@@ -200,7 +230,8 @@ def _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu):
 
 def _pasm_ep_fwd(x, idx, codebook, bias, packed, gather, interpret, relu):
     y = _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu)
-    return y, (x, idx, codebook, bias, y)
+    # y is a residual only for the ReLU mask — don't pin it otherwise
+    return y, (x, idx, codebook, bias, y if relu else None)
 
 
 def _pasm_ep_bwd(packed, gather, interpret, relu, res, g):
@@ -285,6 +316,196 @@ def pas_matmul(
 
 
 # ---------------------------------------------------------------------------
+# implicit-GEMM convolution (no materialized patch matrix)
+# ---------------------------------------------------------------------------
+
+
+def _pad_image(x, geom: ConvGeom):
+    """Apply the spatial zero-pad of ``geom`` to an image batch (SAME halo)."""
+    ph, pw = geom.pad
+    if any(ph) or any(pw):
+        cfg = ((0, 0), ph, pw, (0, 0)) if geom.nhwc else ((0, 0), (0, 0), ph, pw)
+        x = jnp.pad(x, cfg)
+    return x
+
+
+def _geom_patches(x, geom: ConvGeom):
+    """Explicit im2col from a :class:`ConvGeom` — backward/oracle use ONLY.
+
+    The forward implicit path never materializes this ``(B·P, K)`` matrix;
+    only the custom VJP does (col2im backward, per the initial
+    implicit-GEMM scope).  Delegates to the one shared gather definition.
+    """
+    return _ref.im2col_patches(
+        x, nhwc=geom.nhwc, ky=geom.ky, kx=geom.kx, stride=geom.stride,
+        oh=geom.oh, ow=geom.ow, c_in=geom.c_in, pad=geom.pad,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geom", "packed", "gather", "interpret", "relu", "use_pas"),
+)
+def _conv_fwd_impl(
+    x, idx, codebook, bias=None, *, geom, packed, gather="take", interpret=False,
+    relu=False, use_pas=False,
+):
+    """Shared implicit-conv forward: tile plan + weight padding + kernel call.
+
+    The reduction tiling (``bn``/``bk``/``gs_pad``) is a pure function of
+    K/N/groups in :func:`_pick_blocks`, so the implicit kernel walks the
+    exact k-tile sequence of the explicit path — that is what makes it
+    bit-exact against explicit im2col.  Only ``bm`` differs: it is picked
+    from the *per-image* ``P`` (the conv grid is per-image), so small-P
+    layers don't pad each image's output up to a batch-derived 128 rows.
+    """
+    G, _ = codebook.shape
+    K = idx.shape[0] * (2 if packed else 1)
+    N = idx.shape[1]
+    P = geom.P
+    gs = K // G
+    bm, bn, bk, gs_pad = _pick_blocks(P, K, N, gs, packed)
+    idxp, cbp, _ = _pad_weight_operands(idx, codebook, bn, gs_pad, packed)
+    xp = _pad_image(x, geom)
+    bias_row = None
+    if bias is not None:
+        bias_row = jnp.pad(bias.astype(jnp.float32), (0, idxp.shape[1] - N))
+        bias_row = bias_row.reshape(1, -1)
+    if use_pas:
+        out = pas_conv_kernel_call(
+            xp, idxp, cbp, bias_row, geom=geom, gs=gs, gs_pad=gs_pad,
+            bm=bm, bn=bn, bk=bk, relu=relu, interpret=interpret,
+        )
+    else:
+        out = pasm_conv_kernel_call(
+            xp, idxp, cbp, bias_row, geom=geom, packed=packed, gs=gs,
+            gs_pad=gs_pad, bm=bm, bn=bn, bk=bk, gather=gather, relu=relu,
+            interpret=interpret,
+        )
+    return out[:, :P, :N]
+
+
+def _conv_bwd_core(geom, packed, gather, interpret, relu, res, g):
+    """Backward through the implicit conv via explicit col2im (initial scope):
+    materialize patches, reuse the GEMM VJP, scatter back through im2colᵀ."""
+    x, idx, codebook, y = res
+    g2 = g.reshape(-1, g.shape[-1])
+    if relu:
+        g2 = g2 * (y.reshape(g2.shape) > 0).astype(g2.dtype)
+    K = idx.shape[0] * (2 if packed else 1)
+    patches, vjp_patch = jax.vjp(
+        functools.partial(_geom_patches, geom=geom), x
+    )
+    if K != geom.conv_k:  # §3 pack-time K-pad rows carry zero activations
+        patches = jnp.pad(patches, ((0, 0), (0, K - geom.conv_k)))
+    dp, _, dcb = _pasm_bwd(packed, gather, interpret, (patches, idx, codebook), g2)
+    dx, = vjp_patch(dp[:, : geom.conv_k])
+    return dx, dcb, g2
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _pasm_conv(x, idx, codebook, geom, packed, gather, interpret):
+    return _conv_fwd_impl(
+        x, idx, codebook, geom=geom, packed=packed, gather=gather,
+        interpret=interpret,
+    )
+
+
+def _pasm_conv_fwd(x, idx, codebook, geom, packed, gather, interpret):
+    y = _pasm_conv(x, idx, codebook, geom, packed, gather, interpret)
+    return y, (x, idx, codebook)
+
+
+def _pasm_conv_bwd(geom, packed, gather, interpret, res, g):
+    x, idx, codebook = res
+    dx, dcb, _ = _conv_bwd_core(
+        geom, packed, gather, interpret, False, (x, idx, codebook, None), g
+    )
+    return dx, None, dcb
+
+
+_pasm_conv.defvjp(_pasm_conv_fwd, _pasm_conv_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu):
+    """The fused-epilogue implicit conv: bias/ReLU applied inside the kernel."""
+    return _conv_fwd_impl(
+        x, idx, codebook, bias, geom=geom, packed=packed, gather=gather,
+        interpret=interpret, relu=relu,
+    )
+
+
+def _pasm_conv_ep_fwd(x, idx, codebook, bias, geom, packed, gather, interpret, relu):
+    y = _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu)
+    # y is a residual only for the ReLU mask — don't pin it otherwise
+    return y, (x, idx, codebook, bias, y if relu else None)
+
+
+def _pasm_conv_ep_bwd(geom, packed, gather, interpret, relu, res, g):
+    x, idx, codebook, bias, y = res
+    dx, dcb, g2 = _conv_bwd_core(
+        geom, packed, gather, interpret, relu, (x, idx, codebook, y), g
+    )
+    dbias = g2.sum(axis=0).astype(bias.dtype)
+    return dx, None, dcb, dbias
+
+
+_pasm_conv_ep.defvjp(_pasm_conv_ep_fwd, _pasm_conv_ep_bwd)
+
+
+def pasm_conv2d(
+    x: jax.Array,
+    t: _pasm.PASMTensor,
+    geom: ConvGeom,
+    *,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
+    gather: str = "take",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Implicit-GEMM conv on the fused-dequant kernel: ``(B, img) → (B, P, N)``.
+
+    One ``pallas_call`` over the (spatially padded) image batch — the im2col
+    patch tiles are assembled inside the kernel, so no ``(B·P, K)`` patch
+    matrix exists in HBM.  ``bias (N,)`` / ``relu`` fuse into the last-k-step
+    write-through exactly as in :func:`pasm_matmul`.  Differentiable in
+    ``x``, ``t.codebook`` and ``bias`` (the backward pass materializes
+    patches explicitly — col2im — for now).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if bias is None and not relu:
+        return _pasm_conv(x, t.idx, t.codebook, geom, t.packed, gather, interpret)
+    b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
+    return _pasm_conv_ep(
+        x, t.idx, t.codebook, b, geom, t.packed, gather, interpret, relu
+    )
+
+
+def pas_conv2d(
+    x: jax.Array,
+    t: _pasm.PASMTensor,
+    geom: ConvGeom,
+    *,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Implicit-GEMM conv on the paper-faithful two-phase PAS formulation.
+
+    Single dictionary, forward-only — mirrors :func:`pas_matmul`.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    idx = _pasm.logical_idx(t)
+    return _conv_fwd_impl(
+        x, idx, t.codebook, bias, geom=geom, packed=False, interpret=interpret,
+        relu=relu, use_pas=True,
+    )
+
+
+# ---------------------------------------------------------------------------
 # roofline bookkeeping helpers
 # ---------------------------------------------------------------------------
 
@@ -313,6 +534,54 @@ def pasm_hbm_bytes(t: _pasm.PASMTensor, M: int, act_bytes: int = 2) -> int:
     padded_k = gs_pad != K // G
     cb_bytes = G * (B + (1 if padded_k and not t.packed and B < 256 else 0)) * 4
     return Mp * Kp * act_bytes + idx_bytes + cb_bytes + Mp * Np * 4
+
+
+def conv_hbm_bytes(
+    t: _pasm.PASMTensor,
+    geom: ConvGeom,
+    batch: int,
+    ih: int,
+    iw: int,
+    *,
+    implicit: bool,
+    act_bytes: int = 4,
+) -> int:
+    """Modeled HBM bytes of one conv layer on the PASM GEMM, tile-plan aware.
+
+    ``implicit=False`` (explicit im2col): the ``(B·P, K)`` patch matrix is
+    *written* by the XLA front-end and *read back* by the kernel — the
+    activation term is twice the padded patch-matrix bytes, inflating input
+    traffic by up to ``ky·kx/stride²`` over the raw image.
+
+    ``implicit=True``: the padded image streams once per reuse window (each
+    image block stays VMEM-resident across its whole tile loop), so the
+    activation term is just the padded image bytes.  Weight/codebook/output
+    terms follow the same padded-operand accounting as
+    :func:`pasm_hbm_bytes`.  The logical-shape (plan-free) counterpart is
+    :func:`repro.core.hwmodel.conv_hbm_traffic`.
+    """
+    K, N = t.shape
+    G, B = t.codebook.shape
+    P = geom.P
+    # bm mirrors the kernels: per-image P on the implicit grid, B·P explicit
+    bm, bn, bk, gs_pad = _pick_blocks(
+        P if implicit else batch * P, K, N, K // G, t.packed
+    )
+    Kp = G * gs_pad
+    Np = _round_up(N, bn)
+    idx_bytes = (Kp // 2 if t.packed else Kp) * Np
+    padded_k = gs_pad != K // G
+    cb_bytes = G * (B + (1 if padded_k and not t.packed and B < 256 else 0)) * 4
+    if implicit:
+        (plh, phh), (plw, phw) = geom.pad
+        hp, wp = ih + plh + phh, iw + plw + phw
+        x_bytes = batch * geom.c_in * hp * wp * act_bytes
+        out_bytes = batch * _round_up(P, bm) * Np * 4
+    else:
+        Mp = _round_up(batch * P, bm)
+        x_bytes = 2 * Mp * Kp * act_bytes  # im2col store + kernel stream
+        out_bytes = Mp * Np * 4
+    return x_bytes + idx_bytes + cb_bytes + out_bytes
 
 
 def flash_attention(

@@ -19,6 +19,11 @@ formulation end-to-end, (b) let benchmarks *measure* that trade-off against
 ``pasm_matmul`` instead of assuming it.
 
 VMEM budget: scratch ``(bm, bn, B)`` f32 = 128·128·16·4 = 1 MiB at defaults.
+
+:func:`pas_conv_kernel_call` is the implicit-GEMM conv variant: the ``x``
+operand is the raw padded image batch and the ``(bm, bk)`` patch tile is
+assembled in VMEM by :func:`repro.kernels.pasm_matmul.patch_tile` — same PAS
+phase and post-pass, no ``(B·P, K)`` patch matrix in HBM.
 """
 from __future__ import annotations
 
@@ -30,27 +35,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.pasm_matmul import ConvGeom, patch_tile
 
-__all__ = ["pas_matmul_kernel_call"]
+__all__ = ["pas_matmul_kernel_call", "pas_conv_kernel_call"]
 
 
-def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
-    b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _zero():
-        s_ref[...] = jnp.zeros_like(s_ref)
-
-    x = x_ref[...]  # (bm, bk)
+def _pas_step(
+    x_tile, idx_ref, cb_ref, b_ref, o_ref, s_ref, *, k, n_k: int, bins: int,
+    relu: bool,
+):
+    """The shared per-k-step body of BOTH entry points: PAS-phase one-hot
+    accumulate into the VMEM bin scratch, then the post-pass multiply (plus
+    the fused bias/ReLU epilogue) at the last k step only.  ``o_ref`` may
+    carry a leading length-1 batch axis (the conv grid)."""
     idx = idx_ref[...]  # (bk, bn)
-    bm, bk = x.shape
+    bm, bk = x_tile.shape
     bn = idx.shape[1]
     # PAS phase: one-hot selection network. (bk, bn, B) → (bk, bn·B) so the
     # accumulate runs as a single MXU matmul per tile.
     onehot = (idx[:, :, None] == jax.lax.broadcasted_iota(jnp.uint8, (1, 1, bins), 2))
-    onehot = onehot.astype(x.dtype).reshape(bk, bn * bins)
-    s_ref[...] += jnp.dot(x, onehot, preferred_element_type=jnp.float32).reshape(
+    onehot = onehot.astype(x_tile.dtype).reshape(bk, bn * bins)
+    s_ref[...] += jnp.dot(x_tile, onehot, preferred_element_type=jnp.float32).reshape(
         bm, bn, bins
     )
 
@@ -65,7 +70,21 @@ def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
             y = y + b_ref[...]  # (1, bn) broadcasts over rows
         if relu:
             y = jnp.maximum(y, 0.0)
-        o_ref[...] = y
+        o_ref[...] = y.reshape(o_ref.shape)
+
+
+def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
+    b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    _pas_step(
+        x_ref[...], idx_ref, cb_ref, b_ref, o_ref, s_ref,
+        k=k, n_k=n_k, bins=bins, relu=relu,
+    )
 
 
 def pas_matmul_kernel_call(
@@ -112,6 +131,88 @@ def pas_matmul_kernel_call(
         scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+def _conv_kernel(
+    x_ref, idx_ref, cb_ref, *rest, geom: ConvGeom, bins: int, n_k: int,
+    relu: bool, bm: int, bk: int, gs: int, gs_pad: int,
+):
+    """Implicit-GEMM body: gather the patch tile instead of reading an
+    explicit x block, then the same :func:`_pas_step`."""
+    b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    patch = patch_tile(
+        x_ref[0], pl.program_id(1) * bm, k * bk,
+        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+    )
+    _pas_step(
+        patch, idx_ref, cb_ref, b_ref, o_ref, s_ref,
+        k=k, n_k=n_k, bins=bins, relu=relu,
+    )
+
+
+def pas_conv_kernel_call(
+    x: jax.Array,
+    idx: jax.Array,
+    codebook: jax.Array,
+    bias: "jax.Array | None" = None,
+    *,
+    geom: ConvGeom,
+    gs: int,
+    gs_pad: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    relu: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Implicit-GEMM conv on the paper-faithful two-phase formulation.
+
+    ``x (B, img...)`` padded per ``geom`` · ``idx (Kp, Np)`` · ``codebook
+    (1, B)`` → ``(B, Pp, Np) f32`` (real rows sliced by the caller).  Single
+    dictionary only, like :func:`pas_matmul_kernel_call`.
+    """
+    B_img = x.shape[0]
+    G, B = codebook.shape
+    assert G == 1, "PAS-formulation kernel is paper-faithful: one dictionary"
+    Np = idx.shape[1]
+    Kp = idx.shape[0]
+    assert Kp == gs_pad and gs_pad % bk == 0, (Kp, gs_pad, bk)
+    n_k = Kp // bk
+    Pp = (geom.P + bm - 1) // bm * bm
+
+    img_block = (1,) + x.shape[1:]
+    in_specs = [
+        pl.BlockSpec(img_block, lambda b, i, j, k: (b, 0, 0, 0)),
+        pl.BlockSpec((bk, bn), lambda b, i, j, k: (k, j)),
+        pl.BlockSpec((1, B), lambda b, i, j, k: (0, 0)),
+    ]
+    operands = [x, idx, codebook]
+    if bias is not None:
+        assert bias.shape == (1, Np), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda b, i, j, k: (0, j)))
+        operands.append(bias)
+
+    return pl.pallas_call(
+        functools.partial(
+            _conv_kernel, geom=geom, bins=B, n_k=n_k, relu=relu,
+            bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+        ),
+        grid=(B_img, Pp // bm, Np // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B_img, Pp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(*operands)

@@ -19,10 +19,24 @@ Weight gather strategies (``gather=``):
   * ``"take"``    — vector gather from the VMEM codebook (default).
   * ``"onehot"``  — ``one_hot(idx) @ codebook``: guaranteed Mosaic lowering on
                     older toolchains, costs B extra VPU ops per element.
+
+Two entry points share the kernel body:
+
+  * :func:`pasm_matmul_kernel_call` — the plain GEMM: ``x`` is an explicit
+    ``(M, K)`` operand (the conv path materializes an im2col patch matrix in
+    HBM first).
+  * :func:`pasm_conv_kernel_call` — **implicit-GEMM convolution**: ``x`` is
+    the raw (spatially padded) image batch; each ``(bm, bk)`` patch tile is
+    assembled *inside* the kernel from the VMEM-resident image
+    (:func:`patch_tile`), so no ``(B·P, K)`` patch matrix ever exists in HBM.
+    The grid grows a leading batch dimension and the output is per-image
+    ``(B, P, N)``.  Identical tile plan + accumulation order ⇒ bit-exact
+    with the explicit path (asserted in tests/test_conv_implicit.py).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +45,38 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["pasm_matmul_kernel_call"]
+__all__ = ["pasm_matmul_kernel_call", "pasm_conv_kernel_call", "ConvGeom",
+           "patch_tile"]
+
+
+class ConvGeom(NamedTuple):
+    """Static conv geometry the implicit-GEMM kernels close over.
+
+    Built by :func:`repro.core.conv.conv_geom`; hashable so it rides jit
+    static args and ``custom_vjp`` nondiff args.  ``pad`` is the spatial
+    zero-pad already applied to the image the kernel sees
+    (``((lo_h, hi_h), (lo_w, hi_w))`` — SAME windowing happens *outside*,
+    the kernel only ever gathers in-bounds).
+    """
+
+    nhwc: bool  # channels-minor (kkc) vs paper (ckk) reduction order
+    ky: int
+    kx: int
+    stride: int
+    oh: int
+    ow: int
+    c_in: int
+    pad: tuple
+
+    @property
+    def P(self) -> int:
+        """Output pixels per image."""
+        return self.oh * self.ow
+
+    @property
+    def conv_k(self) -> int:
+        """The true im2col reduction length ``c_in·ky·kx``."""
+        return self.c_in * self.ky * self.kx
 
 
 def _dequant_tile(idx_tile, cb_row, gather: str, dtype):
@@ -55,24 +100,63 @@ def _unpack_int4_tile(packed):
     return out.reshape(packed.shape[0] * 2, packed.shape[1])
 
 
-def _kernel(
-    x_ref, idx_ref, cb_ref, *rest, packed: bool, gather: str, n_k: int, relu: bool
+def patch_tile(img, m0, q0, *, geom: ConvGeom, bm: int, bk: int, gs: int,
+               gs_pad: int):
+    """Assemble one ``(bm, bk)`` im2col tile from the VMEM-resident image.
+
+    ``img`` is a single padded image (``(H, W, C)`` when ``geom.nhwc`` else
+    ``(C, H, W)``); rows are output pixels ``[m0, m0+bm)``, columns are
+    *padded* GEMM reduction positions ``[q0, q0+bk)``.  Each padded position
+    is unmapped to its logical ``(c, ky, kx)`` patch element:
+
+      ``g = q // gs_pad`` picks the codebook group, ``r = q % gs_pad`` the
+      row within it; rows with ``r >= gs`` are the tile-plan K-pad and rows
+      with ``g·gs + r >= conv_k`` the §3 pack-time K-pad — both read **zero**
+      (the in-kernel analogue of the zero patch columns the explicit path
+      pads in), pairing with the reserved zero-codebook bin.  M-pad rows
+      (``p >= P``) clamp to the last pixel and are sliced off outside.
+    """
+    p = m0 + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    p = jnp.minimum(p, geom.P - 1)
+    oy, ox = p // geom.ow, p % geom.ow
+    q = q0 + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    g, r = q // gs_pad, q % gs_pad
+    ql = g * gs + jnp.minimum(r, gs - 1)
+    valid = (r < gs) & (ql < geom.conv_k)
+    ql = jnp.minimum(ql, geom.conv_k - 1)
+    if geom.nhwc:  # channels-minor (ky, kx, c)
+        dy = ql // (geom.kx * geom.c_in)
+        dx = (ql // geom.c_in) % geom.kx
+        c = ql % geom.c_in
+    else:  # paper (c, ky, kx) loop order
+        c = ql // (geom.ky * geom.kx)
+        dy = (ql // geom.kx) % geom.ky
+        dx = ql % geom.kx
+    iy = oy * geom.stride + dy  # (bm, bk) via broadcast
+    ix = ox * geom.stride + dx
+    c = jnp.broadcast_to(c, iy.shape)
+    vals = img[iy, ix, c] if geom.nhwc else img[c, iy, ix]
+    return jnp.where(valid, vals, jnp.zeros((), img.dtype))
+
+
+def _fused_dequant_step(
+    x_tile, idx_ref, cb_ref, b_ref, o_ref, *, k, n_k: int, packed: bool,
+    gather: str, relu: bool,
 ):
-    b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _zero():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+    """The shared per-k-step body of BOTH entry points: unpack+dequant the
+    idx tile, accumulate ``x_tile @ w``, and fuse the bias-add / ReLU
+    epilogue into the last-k-step write-through — so a conv layer with
+    bias+activation stays a single pallas_call.  ``o_ref`` may carry a
+    leading length-1 batch axis (the conv grid); the accumulate reshapes to
+    it and ``(1, bn)`` bias broadcasting covers both ranks.
+    """
     idx_tile = idx_ref[...]
     if packed:
         idx_tile = _unpack_int4_tile(idx_tile)
-    w = _dequant_tile(idx_tile, cb_ref[0], gather, x_ref.dtype)
-    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    w = _dequant_tile(idx_tile, cb_ref[0], gather, x_tile.dtype)
+    acc = jnp.dot(x_tile, w, preferred_element_type=jnp.float32)
+    o_ref[...] += acc.reshape(o_ref.shape)
 
-    # fused epilogue: bias-add / ReLU in the last-k-step write-through, so a
-    # conv layer with bias+activation stays a single pallas_call
     if b_ref is not None or relu:
 
         @pl.when(k == n_k - 1)
@@ -83,6 +167,22 @@ def _kernel(
             if relu:
                 y = jnp.maximum(y, 0.0)
             o_ref[...] = y
+
+
+def _kernel(
+    x_ref, idx_ref, cb_ref, *rest, packed: bool, gather: str, n_k: int, relu: bool
+):
+    b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _fused_dequant_step(
+        x_ref[...], idx_ref, cb_ref, b_ref, o_ref,
+        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu,
+    )
 
 
 def pasm_matmul_kernel_call(
@@ -138,6 +238,96 @@ def pasm_matmul_kernel_call(
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+def _conv_kernel(
+    x_ref, idx_ref, cb_ref, *rest, geom: ConvGeom, packed: bool, gather: str,
+    n_k: int, relu: bool, bm: int, bk: int, gs: int, gs_pad: int,
+):
+    """Implicit-GEMM body: gather the patch tile instead of reading an
+    explicit x block, then the same :func:`_fused_dequant_step`."""
+    b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    patch = patch_tile(
+        x_ref[0], pl.program_id(1) * bm, k * bk,
+        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+    )
+    _fused_dequant_step(
+        patch, idx_ref, cb_ref, b_ref, o_ref,
+        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu,
+    )
+
+
+def pasm_conv_kernel_call(
+    x: jax.Array,
+    idx: jax.Array,
+    codebook: jax.Array,
+    bias: "jax.Array | None" = None,
+    *,
+    geom: ConvGeom,
+    packed: bool,
+    gs: int,
+    gs_pad: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    gather: str = "take",
+    relu: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Implicit-GEMM conv pallas_call: the image IS the ``x`` operand.
+
+    ``x (B, img...)`` spatially padded per ``geom`` · ``idx (Kp or Kp//2, Np)``
+    · ``codebook (G, B)`` → ``(B, Pp, Np) f32`` where ``Pp`` rounds ``geom.P``
+    up to ``bm`` (real rows sliced off by the caller).  One whole padded
+    image is the per-grid-step ``x`` block — resident in VMEM across the
+    entire ``(i, j, k)`` tile loop of its batch element, so HBM streams the
+    image once per reuse window instead of ``ky·kx/stride²``× as patch rows.
+    Preconditions (enforced by ops.py): ``gs_pad % bk == 0``, ``Np % bn == 0``,
+    bias ``(1, Np)``.
+    """
+    B_img = x.shape[0]
+    G, B = codebook.shape
+    Np = idx.shape[1]
+    Kp = idx.shape[0] * (2 if packed else 1)
+    assert Kp == G * gs_pad, (Kp, G, gs_pad)
+    assert gs_pad % bk == 0, (gs_pad, bk)
+    n_k = Kp // bk
+    Pp = (geom.P + bm - 1) // bm * bm
+    blocks_per_group = gs_pad // bk
+
+    img_block = (1,) + x.shape[1:]
+    idx_block = (bk // 2, bn) if packed else (bk, bn)
+    in_specs = [
+        pl.BlockSpec(img_block, lambda b, i, j, k: (b, 0, 0, 0)),
+        pl.BlockSpec(idx_block, lambda b, i, j, k: (k, j)),
+        pl.BlockSpec((1, B), lambda b, i, j, k: (k // blocks_per_group, 0)),
+    ]
+    operands = [x, idx, codebook]
+    if bias is not None:
+        assert bias.shape == (1, Np), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda b, i, j, k: (0, j)))
+        operands.append(bias)
+
+    return pl.pallas_call(
+        functools.partial(
+            _conv_kernel, geom=geom, packed=packed, gather=gather, n_k=n_k,
+            relu=relu, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+        ),
+        grid=(B_img, Pp // bm, Np // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B_img, Pp, Np), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(*operands)

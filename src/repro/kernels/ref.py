@@ -6,7 +6,41 @@ import jax.numpy as jnp
 
 from repro.core import pasm as _pasm
 
-__all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref", "apply_epilogue"]
+__all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref", "apply_epilogue",
+           "im2col_patches"]
+
+
+def im2col_patches(
+    x: jax.Array, *, nhwc: bool, ky: int, kx: int, stride: int,
+    oh: int, ow: int, c_in: int, pad: tuple,
+) -> jax.Array:
+    """Explicit batched im2col, geometry resolved: ``(B, img) → (B·P, K)``.
+
+    THE definition of patch extraction — NCHW flattens in the paper's
+    ``(c, ky, kx)`` loop order, NHWC channels-minor ``(ky, kx, c)``;
+    ``pad = ((lo_h, hi_h), (lo_w, hi_w))`` is the spatial zero-pad.  Both
+    the conv front-end (:func:`repro.core.conv._im2col`) and the implicit
+    path's col2im backward (``ops._geom_patches``) delegate here, and the
+    in-kernel ``patch_tile`` gather is oracled against it, so forward and
+    backward can never drift.  Pure jnp, no pallas dependency.
+    """
+    ph, pw = pad
+    if any(ph) or any(pw):
+        cfg = ((0, 0), ph, pw, (0, 0)) if nhwc else ((0, 0), (0, 0), ph, pw)
+        x = jnp.pad(x, cfg)
+    kyr, kxr = jnp.arange(ky), jnp.arange(kx)
+    oyr = jnp.arange(oh) * stride
+    oxr = jnp.arange(ow) * stride
+    if nhwc:
+        rows = oyr[:, None, None, None] + kyr[None, None, :, None]  # (oh,1,KY,1)
+        cols = oxr[None, :, None, None] + kxr[None, None, None, :]  # (1,ow,1,KX)
+        patches = x[:, rows, cols, :]  # (B, oh, ow, KY, KX, C)
+    else:
+        c = jnp.arange(c_in)[None, None, :, None, None]
+        rows = oyr[:, None, None, None, None] + kyr[None, None, None, :, None]
+        cols = oxr[None, :, None, None, None] + kxr[None, None, None, None, :]
+        patches = x[:, c, rows, cols]  # (B, oh, ow, C, KY, KX)
+    return patches.reshape(x.shape[0] * oh * ow, c_in * ky * kx)
 
 
 def apply_epilogue(y: jax.Array, bias, relu: bool) -> jax.Array:

@@ -36,7 +36,8 @@ from repro.models.common import Initializer
 __all__ = ["stages", "feature_shape", "init_params", "quantize", "forward",
            "forward_dense"]
 
-_IMPLS = ("einsum", "kernel", "pas_kernel")  # CNNConfig.impl == conv2d engine
+#  CNNConfig.impl == conv2d engine (kernel_implicit = implicit-GEMM Pallas)
+_IMPLS = ("einsum", "kernel", "kernel_implicit", "pas_kernel")
 
 
 def stages(cfg: CNNConfig) -> list:
@@ -81,12 +82,17 @@ def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16) -> dict:
     """K-means weight-share every conv layer: one PASM dictionary per layer.
 
     Each dense ConvParams becomes a ``shared`` one (bias stays dense — §4:
-    bias/activation not shared); ``cfg.packed`` additionally int4-packs the
-    dictionary indices into the stack layout's GEMM order.
+    bias/activation not shared); ``cfg.groups > 1`` gives every layer that
+    many reduction-axis dictionaries (beyond-paper accuracy knob) and
+    ``cfg.packed`` additionally int4-packs the dictionary indices into the
+    stack layout's GEMM order.
     """
     convs = []
     for p in params["conv"]:
-        q = _conv.ConvParams.quantize(p.kernel, cfg.bins, bias=p.bias, iters=iters)
+        q = _conv.ConvParams.quantize(
+            p.kernel, cfg.bins, bias=p.bias, iters=iters, groups=cfg.groups,
+            layout=cfg.layout,
+        )
         if cfg.packed:
             q = q.pack(layout=cfg.layout)
         convs.append(q)
@@ -116,12 +122,16 @@ def forward(
     """Quantized forward: images (in ``cfg.layout`` order) → logits.
 
     ``cfg.impl`` picks the conv engine per DESIGN.md §2/§3: ``kernel`` runs
-    the fused-dequant ``pasm_matmul``, ``pas_kernel`` the paper-faithful
-    two-phase ``pas_matmul`` (both with the bias/ReLU epilogue fused into the
-    pallas_call), ``einsum`` the pure-XLA reference port.
+    the fused-dequant ``pasm_matmul`` over an explicit im2col patch matrix,
+    ``kernel_implicit`` the implicit-GEMM ``pasm_conv2d`` (patch tiles
+    assembled in VMEM, no patch matrix in HBM), ``pas_kernel`` the
+    paper-faithful two-phase ``pas_matmul`` (all with the bias/ReLU epilogue
+    fused into the pallas_call), ``einsum`` the pure-XLA reference port.
     """
     if cfg.impl not in _IMPLS:
-        raise ValueError(f"impl must be einsum|kernel|pas_kernel, got {cfg.impl!r}")
+        raise ValueError(
+            f"impl must be one of {'|'.join(_IMPLS)}, got {cfg.impl!r}"
+        )
     x = images
     for p, (conv, pool) in zip(params["conv"], stages(cfg)):
         x = _conv.conv2d(x, p, conv, engine=cfg.impl, interpret=interpret)
