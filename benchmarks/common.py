@@ -1,4 +1,7 @@
-"""Benchmark harness helpers: wall-clock timing of jitted callables."""
+"""Benchmark harness helpers: wall-clock timing of jitted callables, plus the
+one row schema every BENCH_*.json record uses — each row carries the device
+count and mesh shape it ran under, so cross-run trajectories stay comparable
+when a later run changes the device configuration."""
 from __future__ import annotations
 
 import time
@@ -29,3 +32,33 @@ def time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 def emit(name: str, us_per_call: float, derived: str = "", hbm_bytes=None) -> None:
     hbm = "" if hbm_bytes is None else str(hbm_bytes)
     print(f"{name},{us_per_call:.2f},{hbm},{derived}")
+
+
+def bench_row(
+    name: str,
+    us_per_call: float,
+    *,
+    hbm_bytes=None,
+    derived: str = "",
+    mesh_shape=None,
+    **extra,
+) -> dict:
+    """One BENCH_*.json record.  ``devices``/``mesh_shape`` are always
+    present: single-device rows record ``devices=1, mesh_shape=None``,
+    sharded rows the mesh they ran on — without them a ``--devices 8`` run
+    would be indistinguishable from a single-device regression in the
+    cross-run trajectory."""
+    n_dev = 1
+    if mesh_shape is not None:
+        for s in mesh_shape:
+            n_dev *= int(s)
+    row = {
+        "name": name,
+        "us_per_call": us_per_call,
+        "hbm_bytes": hbm_bytes,
+        "derived": derived,
+        "devices": n_dev,
+        "mesh_shape": list(mesh_shape) if mesh_shape is not None else None,
+    }
+    row.update(extra)
+    return row

@@ -25,13 +25,24 @@ tracks the engine trajectory from this PR onward; ``--engine e1,e2`` runs
 *only* the batched suite restricted to those engines (the CI comparison mode
 that gates implicit-vs-explicit modeled HBM bytes).
 
+``--devices N`` runs the *sharded* suite instead, on N host-platform fake
+devices (the flag must be seen before jax initializes, so it is peeked off
+``sys.argv`` below): every conv layer dispatches through ``conv2d(mesh=)``
+over a ``(N, 1)`` data mesh, and each row reports per-device throughput
+(``img/s/dev``) plus the modeled **per-device** HBM bytes
+(``ops.conv_hbm_bytes(shards=)``) next to the single-device figure
+(``hbm_bytes_1dev``) — the CI gate asserts per-device < single-device on
+AlexNet conv1.
+
     PYTHONPATH=src python benchmarks/conv_bench.py [--smoke] [--json [PATH]]
                                                    [--engine e1,e2]
+                                                   [--devices N]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 from pathlib import Path
@@ -40,6 +51,31 @@ _ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_ROOT / "src"))
 sys.path.insert(0, str(_ROOT))  # direct-script runs: make `benchmarks` importable
 
+def _peek_devices(argv):
+    """--devices N / --devices=N, read before argparse (and before jax)."""
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+_dev_arg = _peek_devices(sys.argv)
+if _dev_arg is not None:
+    # the fake-device count must be pinned BEFORE the first jax import;
+    # invalid values (non-int, < 1) are left for the argparse check below
+    # rather than crashing deep inside CPU-backend init
+    try:
+        if int(_dev_arg) >= 1:
+            os.environ["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={int(_dev_arg)} "
+                + os.environ.get("XLA_FLAGS", "")
+            )
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    except ValueError:
+        pass
+
 import jax
 import jax.numpy as jnp
 
@@ -47,7 +83,7 @@ from repro.configs.alexnet_conv import PAPER_SPEC
 from repro.core import conv as cv
 from repro.kernels import ops
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import bench_row, emit, time_us
 
 # the ISSUE's realistic layer sizes: AlexNet conv1 and conv2 (geometry-free
 # specs; the image dims ride with the inputs)
@@ -66,10 +102,11 @@ BATCH_ENGINES = ("einsum", "kernel", "kernel_implicit", "pas_kernel")
 _RECORDS: list = []
 
 
-def record(name: str, us_per_call: float, derived: str = "", hbm_bytes=None) -> None:
+def record(name: str, us_per_call: float, derived: str = "", hbm_bytes=None,
+           mesh_shape=None, **extra) -> None:
     emit(name, us_per_call, derived, hbm_bytes=hbm_bytes)
-    _RECORDS.append({"name": name, "us_per_call": us_per_call,
-                     "hbm_bytes": hbm_bytes, "derived": derived})
+    _RECORDS.append(bench_row(name, us_per_call, hbm_bytes=hbm_bytes,
+                              derived=derived, mesh_shape=mesh_shape, **extra))
 
 
 def conv_variants_latency():
@@ -136,6 +173,58 @@ def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
                    hbm_bytes=hbm)
 
 
+def sharded_conv_latency(
+    n_devices: int, smoke: bool = False, engines=("kernel_implicit",)
+):
+    """Realistic layers through ``conv2d(mesh=)`` on an ``(N, 1)`` data mesh.
+
+    One image per device at smoke scale (4 per device otherwise), so the
+    per-device work matches the single-device smoke row.  Each row carries
+    per-device throughput (``img/s/dev`` — wall time covers all shards, so
+    device-seconds are ``t·N``) and the modeled per-device HBM bytes
+    alongside the single-device figure for the same global batch.
+    """
+    from repro.launch.mesh import make_conv_mesh
+
+    mesh = make_conv_mesh((n_devices, 1))
+    batch = n_devices * (1 if smoke else 4)
+    iters = 1 if smoke else 5
+    warmup = 1 if smoke else 2
+    for name, conv, (ih, iw) in REALISTIC_LAYERS:
+        imgs = jax.random.normal(jax.random.PRNGKey(2), (batch, conv.c_in, ih, iw))
+        kern = jax.random.normal(
+            jax.random.PRNGKey(3), (conv.c_out, conv.c_in, conv.ky, conv.kx)
+        ) * conv.K ** -0.5
+        params = cv.ConvParams.quantize(
+            kern, 16, bias=jnp.linspace(-0.1, 0.1, conv.c_out)
+        )
+        t_gemm = params.gemm_tensor(conv.layout)
+        geom = cv.conv_geom(conv, ih, iw)
+        for engine in engines:
+            if engine in ("einsum", "pas_kernel") and smoke and conv.K > 1000:
+                print(f"# skipped conv.sharded.{engine}.{name}: K={conv.K} "
+                      "too large for CI smoke (interpret mode)", file=sys.stderr)
+                continue
+            hbm_dev = hbm_1dev = None
+            if engine != "einsum":
+                kw = dict(implicit=engine == "kernel_implicit", act_bytes=4)
+                hbm_dev = ops.conv_hbm_bytes(
+                    t_gemm, geom, batch, ih, iw, shards=(n_devices, 1), **kw
+                )
+                hbm_1dev = ops.conv_hbm_bytes(t_gemm, geom, batch, ih, iw, **kw)
+            f = jax.jit(lambda i, p=params, c=conv, e=engine:
+                        cv.conv2d(i, p, c, engine=e, mesh=mesh))
+            t = time_us(f, imgs, iters=iters, warmup=warmup)
+            img_s_dev = batch / n_devices / (t * 1e-6)
+            record(
+                f"conv.sharded.{engine}.{name}.bs{batch}.d{n_devices}", t,
+                f"P={batch * geom.P} K={conv.K} M={conv.c_out} "
+                f"img/s/dev={img_s_dev:.1f}",
+                hbm_bytes=hbm_dev, mesh_shape=(n_devices, 1),
+                hbm_bytes_1dev=hbm_1dev,
+            )
+
+
 def cnn_forward_latency(smoke: bool = True):
     """Full AlexNet-style stack forward on the fused-dequant kernel path."""
     from repro.configs import get_cnn_config
@@ -161,13 +250,29 @@ def main() -> None:
                     help="run ONLY the batched suite, restricted to these "
                     f"conv2d engines (choices: {','.join(BATCH_ENGINES)}) — "
                     "the CI implicit-vs-explicit comparison mode")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="run ONLY the sharded suite on N host-platform fake "
+                    "devices (conv2d(mesh=) over an (N, 1) data mesh); rows "
+                    "report per-device throughput and modeled per-device "
+                    "HBM bytes")
     args = ap.parse_args()
-    print("name,us_per_call,hbm_bytes,derived")
+    engines = None
     if args.engine:
         engines = tuple(e.strip() for e in args.engine.split(",") if e.strip())
         bad = [e for e in engines if e not in BATCH_ENGINES]
         if bad:
             ap.error(f"unknown engine(s) {bad}; choices: {BATCH_ENGINES}")
+    print("name,us_per_call,hbm_bytes,derived")
+    if args.devices is not None:
+        if args.devices < 1:
+            ap.error(f"--devices must be >= 1, got {args.devices}")
+        if jax.device_count() < args.devices:
+            ap.error(f"--devices {args.devices}: only {jax.device_count()} "
+                     "devices came up (the XLA_FLAGS peek runs before jax "
+                     "init; is another backend pinned?)")
+        sharded_conv_latency(args.devices, smoke=args.smoke,
+                             engines=engines or ("kernel_implicit",))
+    elif engines:
         batched_conv_latency(smoke=args.smoke, engines=engines)
     else:
         conv_variants_latency()
@@ -179,6 +284,7 @@ def main() -> None:
             "smoke": bool(args.smoke),
             "backend": jax.default_backend(),
             "platform": platform.platform(),
+            "devices": args.devices or 1,
             "records": _RECORDS,
         }
         Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")

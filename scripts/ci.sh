@@ -3,9 +3,14 @@
 # ConvParams/conv2d surface (DeprecationWarnings are errors: the examples must
 # not touch the legacy shims), an interpret-mode smoke of the batched conv
 # benchmark (exercises the Pallas PASM kernels + fused epilogue end to end,
-# and leaves BENCH_conv.json behind so perf is tracked per PR), and the
-# implicit-vs-explicit im2col gate: the implicit engine's modeled HBM bytes
-# must be strictly below the explicit path's on the AlexNet conv1 geometry.
+# and leaves BENCH_conv.json behind so perf is tracked per PR), the
+# implicit-vs-explicit im2col gate (the implicit engine's modeled HBM bytes
+# must be strictly below the explicit path's on the AlexNet conv1 geometry),
+# the sharded conv suite on 8 host-platform fake devices (shard_map
+# bit-exactness — tests/test_conv_sharded.py skips itself on one device, so
+# this run is where it actually executes), and the sharding gate: --devices 8
+# per-device modeled HBM bytes on AlexNet conv1 strictly below the
+# single-device figure for the same global batch.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -50,6 +55,30 @@ assert i["hbm_bytes"] < e["hbm_bytes"], (
 )
 print(f"implicit {i['hbm_bytes']} B < explicit {e['hbm_bytes']} B "
       f"({e['hbm_bytes'] / i['hbm_bytes']:.2f}x reduction) OK")
+PY
+
+echo "== sharded conv: shard_map suite on 8 fake devices =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q tests/test_conv_sharded.py
+
+echo "== smoke: per-device HBM bytes under --devices 8 (AlexNet conv1) =="
+trap 'rm -f BENCH_conv_explicit.json BENCH_conv_implicit.json BENCH_conv_dev8.json' EXIT
+python benchmarks/conv_bench.py --smoke --devices 8 --json BENCH_conv_dev8.json
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_conv_dev8.json"))["records"]}
+r = rows["conv.sharded.kernel_implicit.alexnet_conv1.bs8.d8"]
+assert r["devices"] == 8 and r["mesh_shape"] == [8, 1], r
+per_dev, single = r["hbm_bytes"], r["hbm_bytes_1dev"]
+assert per_dev is not None and single is not None, r
+assert per_dev < single, (
+    f"sharding AlexNet conv1 over 8 devices must model strictly fewer "
+    f"per-device HBM bytes than one device doing the whole batch: "
+    f"per-device={per_dev} single={single}"
+)
+print(f"per-device {per_dev} B < single-device {single} B "
+      f"({single / per_dev:.2f}x reduction over 8 devices) OK")
 PY
 
 echo "CI OK"

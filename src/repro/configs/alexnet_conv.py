@@ -16,7 +16,7 @@ channels-minor im2col), and ``packed`` int4-packs every conv dictionary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core.conv import Conv2D, ConvSpec
 
@@ -36,10 +36,16 @@ class CNNConfig:
     classes: int
     bins: int = 16  # PASM dictionary size, one dictionary per conv layer
     groups: int = 1  # reduction-axis codebook groups per layer (1 = paper rule)
-    impl: str = "kernel"  # einsum | kernel | kernel_implicit | pas_kernel
+    impl: str = "kernel"  # auto | einsum | kernel | kernel_implicit | pas_kernel
     padding: str = "valid_centred"  # stack-wide: valid_centred | valid | same
     layout: str = "NCHW"  # stack-wide: NCHW | NHWC
     packed: bool = False  # int4-pack the conv dictionaries at quantize time
+    # image-block VMEM budget (bytes) for the auto engine's implicit-GEMM
+    # preference; None = the core default (~6 MiB, a 16 MiB-VMEM TPU core)
+    vmem_budget: Optional[int] = None
+    # (n_data, n_model) for launch.mesh.make_conv_mesh — the mesh the stack
+    # shards over (conv2d(mesh=), DESIGN.md §4.1); None = single device
+    mesh_shape: Optional[tuple] = None
     family: str = "cnn"  # models/api dispatch key
 
     def __post_init__(self):
@@ -68,7 +74,15 @@ def _stack(c_in: int, *stages: tuple) -> tuple:
 
 
 def config() -> CNNConfig:
-    """Full AlexNet-style stack at the paper's ImageNet-scale layer sizes."""
+    """Full AlexNet-style stack at the paper's ImageNet-scale layer sizes.
+
+    ``mesh_shape`` pins the production single-pod mesh
+    (:data:`repro.launch.mesh.SINGLE_POD`): batch over 16-way ``data``,
+    output channels over 16-way ``model`` (96/256/384 all divide 16; the
+    1000-class head falls back to replicated per the divisibility rule).
+    """
+    from repro.launch.mesh import SINGLE_POD
+
     return CNNConfig(
         name="alexnet",
         in_chw=(3, 224, 224),
@@ -82,6 +96,7 @@ def config() -> CNNConfig:
         ),
         pools=(2, 2, 1, 1, 2),
         classes=1000,
+        mesh_shape=SINGLE_POD,
     )
 
 

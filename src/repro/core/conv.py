@@ -112,6 +112,8 @@ _PAS_ENGINES = ("pas_kernel", "pas_kernel_implicit", "pas_einsum")
 # ``auto`` only picks the implicit path when one padded image block (the
 # per-grid-step x operand, f32) fits comfortably in VMEM next to the idx /
 # patch / accumulator tiles; larger images fall back to explicit im2col.
+# This module-level default suits a ~16 MiB-VMEM TPU core; per-call targets
+# override it with ``conv2d(vmem_budget=)`` / ``CNNConfig.vmem_budget``.
 _IMPLICIT_VMEM_BUDGET = 6 * 1024 * 1024
 
 # GEMM column order per layout: NCHW flattens patches (and weights) in the
@@ -207,14 +209,22 @@ def conv_geom(conv: Conv2D, ih: int, iw: int):
     )
 
 
-def _implicit_fits(conv: Conv2D, ih: int, iw: int) -> bool:
-    """``auto``'s shapes-tile predicate for the implicit-GEMM path."""
+def _implicit_fits(
+    conv: Conv2D, ih: int, iw: int, budget: Optional[int] = None
+) -> bool:
+    """``auto``'s shapes-tile predicate for the implicit-GEMM path.
+
+    ``budget`` is the per-call image-block VMEM budget in bytes
+    (``conv2d(vmem_budget=)``); ``None`` takes the module default.
+    """
+    if budget is None:
+        budget = _IMPLICIT_VMEM_BUDGET
     oh, plo_h, phi_h = _axis_geometry(ih, conv.ky, conv.stride, conv.padding)
     ow, plo_w, phi_w = _axis_geometry(iw, conv.kx, conv.stride, conv.padding)
     if oh <= 0 or ow <= 0:
         return False
     hp, wp = ih + plo_h + phi_h, iw + plo_w + phi_w
-    return conv.c_in * hp * wp * 4 <= _IMPLICIT_VMEM_BUDGET
+    return conv.c_in * hp * wp * 4 <= budget
 
 
 # ---------------------------------------------------------------------------
@@ -540,7 +550,8 @@ def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
 
 
 def _resolve_engine(
-    engine: str, params: ConvParams, squeeze: bool, conv: Conv2D, ih: int, iw: int
+    engine: str, params: ConvParams, squeeze: bool, conv: Conv2D, ih: int,
+    iw: int, budget: Optional[int] = None,
 ) -> str:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
@@ -560,8 +571,35 @@ def _resolve_engine(
         # einsum reference port (the semantics the kernels are tested against)
         if squeeze:
             return "einsum"
-        return "kernel_implicit" if _implicit_fits(conv, ih, iw) else "kernel"
+        return "kernel_implicit" if _implicit_fits(conv, ih, iw, budget) else "kernel"
     return engine
+
+
+def _einsum_sharded(patches, w, bias, relu: bool, mesh):
+    """The pure-XLA reference engine under shard_map (the dense-params path).
+
+    Rows over ``data``, the N output dim over ``model`` when divisible (else
+    the dense operand replicates) — the same axis mapping (and the same
+    :func:`repro.launch.mesh.n_shard_axis` rule) as the Pallas engines, so
+    dense params shard like dictionary params do.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.ref import apply_epilogue  # pallas-free
+    from repro.launch.mesh import n_shard_axis
+
+    ns = n_shard_axis(mesh, w.shape[1])
+    if bias is None:
+        return shard_map(
+            lambda pt, wl: apply_epilogue(pt @ wl, None, relu),
+            mesh=mesh, in_specs=(P("data", None), P(None, ns)),
+            out_specs=P("data", ns), check_rep=False,
+        )(patches, w)
+    return shard_map(
+        lambda pt, wl, bl: apply_epilogue(pt @ wl, bl, relu),
+        mesh=mesh, in_specs=(P("data", None), P(None, ns), P(ns)),
+        out_specs=P("data", ns), check_rep=False,
+    )(patches, w, bias)
 
 
 def conv2d(
@@ -571,6 +609,8 @@ def conv2d(
     *,
     engine: str = "auto",
     interpret: Optional[bool] = None,
+    mesh=None,
+    vmem_budget: Optional[int] = None,
 ) -> jax.Array:
     """The unified conv entry point: any params kind, any engine, any layout.
 
@@ -579,6 +619,17 @@ def conv2d(
     reduction step, so a batched conv layer is exactly one ``pallas_call`` —
     and on the ``*_implicit`` engines that call consumes the raw (padded)
     image directly, with the im2col tiles assembled in VMEM.
+
+    ``mesh=`` (a ``jax.sharding.Mesh`` with a ``data`` axis, optionally
+    ``model``) runs the layer sharded: the batch over ``data`` (uneven
+    remainders are zero-padded in and sliced off — DESIGN.md §4.1), the
+    output channels over ``model`` when divisible.  Sharded outputs are
+    bit-exact vs the single-device call on every engine but ``pas_einsum``
+    (the single-device reference port, which refuses a mesh).
+
+    ``vmem_budget=`` overrides the ``auto`` engine's implicit-GEMM
+    image-block VMEM budget in bytes (default ``_IMPLICIT_VMEM_BUDGET``),
+    so engine selection is tunable per target core.
     """
     xb, squeeze = _batched4(x)
     nhwc = conv.layout == "NHWC"
@@ -594,8 +645,26 @@ def conv2d(
             f"{(conv.c_out, conv.c_in, conv.ky, conv.kx)}"
         )
     ih, iw = (xb.shape[1], xb.shape[2]) if nhwc else (xb.shape[2], xb.shape[3])
-    eng = _resolve_engine(engine, params, squeeze, conv, ih, iw)
+    eng = _resolve_engine(engine, params, squeeze, conv, ih, iw, vmem_budget)
     bias = params.bias if conv.bias else None
+
+    batch = xb.shape[0]
+    if mesh is not None:
+        if squeeze:
+            raise ValueError(
+                "mesh= shards the batch over the 'data' axis; pass a batched "
+                "4-D input"
+            )
+        if eng == "pas_einsum":
+            raise ValueError(
+                "pas_einsum is the single-device reference port; mesh= runs "
+                "on einsum or the Pallas engines"
+            )
+        from repro.launch.mesh import data_model_sizes  # pallas-free, jax-only
+
+        pad_b = -batch % data_model_sizes(mesh)[0]
+        if pad_b:  # uneven batch remainder: zero images in, sliced off below
+            xb = jnp.pad(xb, ((0, pad_b),) + ((0, 0),) * 3)
 
     if eng in _IMPLICIT_ENGINES:
         from repro.kernels import ops as _kops  # deferred: core must not need pallas
@@ -603,9 +672,11 @@ def conv2d(
         geom = conv_geom(conv, ih, iw)
         t = params.gemm_tensor(conv.layout)
         f = _kops.pasm_conv2d if eng == "kernel_implicit" else _kops.pas_conv2d
-        y = f(xb, t, geom, bias=bias, relu=conv.relu, interpret=interpret)
+        y = f(xb, t, geom, bias=bias, relu=conv.relu, interpret=interpret,
+              mesh=mesh)
         y = y.reshape(-1, conv.c_out)  # (B, P, M) → (B·P, M), after the kernel
-        return _col2im(y, conv, xb.shape[0], geom.oh, geom.ow, squeeze)
+        out = _col2im(y, conv, xb.shape[0], geom.oh, geom.ow, squeeze)
+        return out[:batch] if mesh is not None else out
 
     patches, (oh, ow) = _im2col(xb, conv)
 
@@ -613,7 +684,10 @@ def conv2d(
         w = params.dense_operand(conv.layout)
         if params.pad_k:
             patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
-        y = _epilogue(patches @ w, bias, conv.relu)
+        if mesh is not None:
+            y = _einsum_sharded(patches, w, bias, conv.relu, mesh)
+        else:
+            y = _epilogue(patches @ w, bias, conv.relu)
     elif eng == "pas_einsum":
         y = _pas_einsum(patches, params, conv.layout)
         y = _epilogue(y, bias, conv.relu)
@@ -624,8 +698,10 @@ def conv2d(
         if params.pad_k:
             patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
         f = _kops.pasm_matmul if eng == "kernel" else _kops.pas_matmul
-        y = f(patches, t, bias=bias, relu=conv.relu, interpret=interpret)
-    return _col2im(y, conv, xb.shape[0], oh, ow, squeeze)
+        y = f(patches, t, bias=bias, relu=conv.relu, interpret=interpret,
+              mesh=mesh)
+    out = _col2im(y, conv, xb.shape[0], oh, ow, squeeze)
+    return out[:batch] if mesh is not None else out
 
 
 def _pas_einsum(patches: jax.Array, params: ConvParams, layout: str) -> jax.Array:

@@ -15,18 +15,28 @@ import jax.numpy as jnp
 
 from repro.core import pasm as _pasm
 
-__all__ = ["ste_quantize", "codebook_grads"]
+__all__ = ["assign_bins", "ste_quantize", "codebook_grads"]
+
+
+def assign_bins(w: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-entry bin assignment, any weight shape, ``(B,)`` codebook.
+
+    THE single-dictionary assignment rule: :func:`ste_quantize`'s forward,
+    the conv stack's ``qat_requantize`` freeze, and (per group)
+    :func:`repro.core.pasm.quantize_like` all apply exactly this argmin, so
+    a trained master re-assigns identically everywhere.
+    """
+    return jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
 
 
 @jax.custom_vjp
 def ste_quantize(w: jax.Array, codebook: jax.Array) -> jax.Array:
     """Snap each weight to its nearest codebook entry; identity gradient."""
-    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
-    return codebook[idx]
+    return codebook[assign_bins(w, codebook)]
 
 
 def _ste_fwd(w, codebook):
-    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
+    idx = assign_bins(w, codebook)
     return codebook[idx], (idx, codebook.shape[0])
 
 
@@ -43,7 +53,7 @@ ste_quantize.defvjp(_ste_fwd, _ste_bwd)
 
 def codebook_grads(w: jax.Array, codebook: jax.Array, g: jax.Array) -> jax.Array:
     """Explicit codebook gradient (for tests): Σ_b-binned upstream grads."""
-    idx = jnp.argmin(jnp.abs(w[..., None] - codebook), axis=-1)
+    idx = assign_bins(w, codebook)
     return jax.ops.segment_sum(
         g.reshape(-1), idx.reshape(-1), num_segments=codebook.shape[0]
     )

@@ -5,6 +5,17 @@ plumbing, interpret-mode fallback on CPU, and a custom VJP so PASM layers are
 differentiable (gradient w.r.t. activations flows through the dequantized
 weight; quantized weights are leaves without gradients — QAT uses
 ``repro.core.qat`` on the dense master copy instead).
+
+Every public wrapper additionally takes ``mesh=``: a ``jax.sharding.Mesh``
+with a ``data`` axis (and optionally ``model``) routes the call through
+``shard_map`` — rows/batch shard over ``data``, the output-channel N
+dimension over ``model`` when it divides, and the per-shard call is the SAME
+single-device impl on the *local* shapes.  The reduction axis K is never
+sharded and the k-tile plan (``bk``/``gs_pad``) is a pure function of
+K/groups alone, so every output element sees the identical accumulation
+order on any mesh — sharded outputs are bit-exact vs single-device
+(DESIGN.md §4.1).  Codebooks (and the PAS formulation's in-kernel bin
+counters) stay per-shard-replicated; bias follows the N sharding.
 """
 from __future__ import annotations
 
@@ -42,6 +53,61 @@ def _interpret_default() -> bool:
 
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# mesh plumbing (the shard_map sharded path)
+# ---------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> tuple:
+    """``(n_data, n_model)`` — one definition, in :mod:`repro.launch.mesh`."""
+    from repro.launch.mesh import data_model_sizes
+
+    return data_model_sizes(mesh)
+
+
+def _n_spec(mesh, n: int):
+    """N over ``model`` when divisible, else replicate — the shared
+    :func:`repro.launch.mesh.n_shard_axis` rule (indivisible ``c_out`` keeps
+    idx/bias N-replicated while ``data`` still shards the rows)."""
+    from repro.launch.mesh import n_shard_axis
+
+    return n_shard_axis(mesh, n)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+
+    # check_rep=False: the N-replicated fallback computes identical outputs
+    # on every model-axis device, which the rep checker cannot prove through
+    # a pallas_call.
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _shard_gemm(mesh, n_cols, local_fn, operands, *, x_rank, out_rank,
+                bias=None):
+    """The one shard_map dispatch every sharded wrapper routes through.
+
+    ``operands = (x, idx, codebook)`` (+ ``bias`` appended when given): x
+    shards its leading dim over ``data``, idx rides ``P(None, ns)`` with
+    ``ns`` the shared N rule, the codebook replicates, bias follows the N
+    sharding, and the output puts ``data`` leading / ``ns`` trailing at
+    ``out_rank``.  ``local_fn`` is the per-shard single-device impl —
+    callers keep their own bias/no-bias *impl* split so the sharded call
+    mirrors the single-device branch structure exactly (part of the bitwise
+    guarantee), but the spec plumbing lives only here.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    ns = _n_spec(mesh, n_cols)
+    in_specs = (P("data", *([None] * (x_rank - 1))), P(None, ns), P(None, None))
+    if bias is not None:
+        in_specs += (P(ns),)
+        operands = operands + (bias,)
+    out_spec = P("data", *([None] * (out_rank - 2)), ns)
+    return _shard_map(local_fn, mesh, in_specs, out_spec)(*operands)
 
 
 def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
@@ -254,24 +320,51 @@ def pasm_matmul(
     relu: bool = False,
     gather: str = "take",
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> jax.Array:
     """``x @ t`` with the fused dequant kernel.  x: (..., K) → (..., N) f32.
 
     ``bias (N,)`` / ``relu`` fuse into the kernel's last-k-step write-through
     (one pallas_call per layer, no XLA epilogue).  Differentiable in ``x``,
-    ``t.codebook`` and ``bias``.
+    ``t.codebook`` and ``bias``.  With ``mesh=`` the rows shard over
+    ``data`` (M padded up to the axis size when uneven) and N over ``model``
+    when divisible — bit-exact vs the single-device call.
     """
     if interpret is None:
         interpret = _interpret_default()
-    K = t.shape[0]
+    K, N = t.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
+    if mesh is not None:
+        nd, _ = _mesh_sizes(mesh)
+        M = x2.shape[0]
+        pad_m = -M % nd
+        if pad_m:
+            x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+        if bias is None and not relu:
+            y = _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl: _pasm_matmul(
+                    xl, il, cl, t.packed, gather, interpret
+                ),
+                (x2, t.idx, t.codebook), x_rank=2, out_rank=2,
+            )
+        else:
+            b = jnp.zeros((N,), jnp.float32) if bias is None else bias
+            y = _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl, bl: _pasm_matmul_ep(
+                    xl, il, cl, bl, t.packed, gather, interpret, relu
+                ),
+                (x2, t.idx, t.codebook), x_rank=2, out_rank=2, bias=b,
+            )
+        return y[:M].reshape(*lead, N)
     if bias is None and not relu:
         y = _pasm_matmul(x2, t.idx, t.codebook, t.packed, gather, interpret)
     else:
-        b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
+        b = jnp.zeros((N,), jnp.float32) if bias is None else bias
         y = _pasm_matmul_ep(x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu)
-    return y.reshape(*lead, t.shape[1])
+    return y.reshape(*lead, N)
 
 
 @functools.partial(jax.jit, static_argnames=("relu", "interpret"))
@@ -299,20 +392,46 @@ def pas_matmul(
     bias: Optional[jax.Array] = None,
     relu: bool = False,
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> jax.Array:
     """Paper-faithful PASM two-phase matmul (single dictionary).
 
-    ``bias (N,)`` / ``relu`` fuse into the post-pass write-through.
+    ``bias (N,)`` / ``relu`` fuse into the post-pass write-through.  With
+    ``mesh=`` rows shard over ``data``, N over ``model`` when divisible; the
+    in-kernel PAS bin counters are per-shard VMEM scratch, so they replicate
+    with the kernel itself.
     """
     if interpret is None:
         interpret = _interpret_default()
     idx = _pasm.logical_idx(t)
+    K, N = t.shape
     lead = x.shape[:-1]
-    y = _pas_matmul_impl(
-        x.reshape(-1, t.shape[0]), idx, t.codebook, bias, relu=relu,
-        interpret=interpret,
-    )
-    return y.reshape(*lead, t.shape[1])
+    x2 = x.reshape(-1, K)
+    if mesh is not None:
+        nd, _ = _mesh_sizes(mesh)
+        M = x2.shape[0]
+        pad_m = -M % nd
+        if pad_m:
+            x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+        if bias is None:
+            y = _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl: _pas_matmul_impl(
+                    xl, il, cl, relu=relu, interpret=interpret
+                ),
+                (x2, idx, t.codebook), x_rank=2, out_rank=2,
+            )
+        else:
+            y = _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl, bl: _pas_matmul_impl(
+                    xl, il, cl, bl, relu=relu, interpret=interpret
+                ),
+                (x2, idx, t.codebook), x_rank=2, out_rank=2, bias=bias,
+            )
+        return y[:M].reshape(*lead, N)
+    y = _pas_matmul_impl(x2, idx, t.codebook, bias, relu=relu, interpret=interpret)
+    return y.reshape(*lead, N)
 
 
 # ---------------------------------------------------------------------------
@@ -463,6 +582,7 @@ def pasm_conv2d(
     relu: bool = False,
     gather: str = "take",
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> jax.Array:
     """Implicit-GEMM conv on the fused-dequant kernel: ``(B, img) → (B, P, N)``.
 
@@ -471,10 +591,36 @@ def pasm_conv2d(
     matrix exists in HBM.  ``bias (N,)`` / ``relu`` fuse into the last-k-step
     write-through exactly as in :func:`pasm_matmul`.  Differentiable in
     ``x``, ``t.codebook`` and ``bias`` (the backward pass materializes
-    patches explicitly — col2im — for now).
+    patches explicitly — col2im — for now).  With ``mesh=`` the image batch
+    shards over ``data`` (the batch must already divide the axis — the
+    ``conv2d`` front-end pads uneven remainders) and N over ``model`` when
+    divisible; each shard derives its tile plan from the local shapes.
     """
     if interpret is None:
         interpret = _interpret_default()
+    if mesh is not None:
+        nd, _ = _mesh_sizes(mesh)
+        if x.shape[0] % nd:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide the data axis ({nd}); "
+                "pad the batch first (conv2d(mesh=) handles the remainder)"
+            )
+        if bias is None and not relu:
+            return _shard_gemm(
+                mesh, t.shape[1],
+                lambda xl, il, cl: _pasm_conv(
+                    xl, il, cl, geom, t.packed, gather, interpret
+                ),
+                (x, t.idx, t.codebook), x_rank=4, out_rank=3,
+            )
+        b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
+        return _shard_gemm(
+            mesh, t.shape[1],
+            lambda xl, il, cl, bl: _pasm_conv_ep(
+                xl, il, cl, bl, geom, t.packed, gather, interpret, relu
+            ),
+            (x, t.idx, t.codebook), x_rank=4, out_rank=3, bias=b,
+        )
     if bias is None and not relu:
         return _pasm_conv(x, t.idx, t.codebook, geom, t.packed, gather, interpret)
     b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
@@ -491,14 +637,41 @@ def pas_conv2d(
     bias: Optional[jax.Array] = None,
     relu: bool = False,
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> jax.Array:
     """Implicit-GEMM conv on the paper-faithful two-phase PAS formulation.
 
-    Single dictionary, forward-only — mirrors :func:`pas_matmul`.
+    Single dictionary, forward-only — mirrors :func:`pas_matmul` (and its
+    ``mesh=`` sharding: batch over ``data``, N over ``model`` when
+    divisible, per-shard bin counters).
     """
     if interpret is None:
         interpret = _interpret_default()
     idx = _pasm.logical_idx(t)
+    if mesh is not None:
+        nd, _ = _mesh_sizes(mesh)
+        if x.shape[0] % nd:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide the data axis ({nd}); "
+                "pad the batch first (conv2d(mesh=) handles the remainder)"
+            )
+        if bias is None:
+            return _shard_gemm(
+                mesh, t.shape[1],
+                lambda xl, il, cl: _conv_fwd_impl(
+                    xl, il, cl, geom=geom, packed=False, interpret=interpret,
+                    relu=relu, use_pas=True,
+                ),
+                (x, idx, t.codebook), x_rank=4, out_rank=3,
+            )
+        return _shard_gemm(
+            mesh, t.shape[1],
+            lambda xl, il, cl, bl: _conv_fwd_impl(
+                xl, il, cl, bl, geom=geom, packed=False, interpret=interpret,
+                relu=relu, use_pas=True,
+            ),
+            (x, idx, t.codebook), x_rank=4, out_rank=3, bias=bias,
+        )
     return _conv_fwd_impl(
         x, idx, t.codebook, bias, geom=geom, packed=False, interpret=interpret,
         relu=relu, use_pas=True,
@@ -545,6 +718,7 @@ def conv_hbm_bytes(
     *,
     implicit: bool,
     act_bytes: int = 4,
+    shards: tuple = (1, 1),
 ) -> int:
     """Modeled HBM bytes of one conv layer on the PASM GEMM, tile-plan aware.
 
@@ -559,10 +733,21 @@ def conv_hbm_bytes(
     terms follow the same padded-operand accounting as
     :func:`pasm_hbm_bytes`.  The logical-shape (plan-free) counterpart is
     :func:`repro.core.hwmodel.conv_hbm_traffic`.
+
+    ``shards=(n_data, n_model)`` models the **per-device** bytes of the
+    sharded path: the batch splits over ``data`` (uneven remainders round up
+    — the padded images are real traffic), N over ``model`` when divisible
+    (else the weights replicate, per the sharded dispatch rule), and the
+    codebook replicates on every device.  The tile plan is recomputed from
+    the local shapes, exactly as each shard does.
     """
     K, N = t.shape
     G, B = t.codebook.shape
     P = geom.P
+    n_data, n_model = shards
+    batch = -(-batch // n_data)  # per-device share, remainder rounded up
+    if n_model > 1 and N % n_model == 0:
+        N = N // n_model
     # bm mirrors the kernels: per-image P on the implicit grid, B·P explicit
     bm, bn, bk, gs_pad = _pick_blocks(
         P if implicit else batch * P, K, N, K // G, t.packed

@@ -20,24 +20,40 @@ Usage (see also ``examples/paper_conv.py`` and ``benchmarks/conv_bench.py``)::
     params = cnn.init_params(cfg, key)          # dense ConvParams per stage
     qparams = cnn.quantize(params, cfg)         # per-layer k-means codebooks
     logits = cnn.forward(qparams, images, cfg)  # (B, classes) via Pallas
+
+Sharded (``cfg.mesh_shape`` → ``launch.mesh.make_conv_mesh``)::
+
+    mesh = conv_mesh(cfg)                        # ("data", "model")
+    qparams = cnn.quantize(params, cfg, mesh=mesh)   # pspec-placed weights
+    logits = cnn.forward(qparams, imgs, cfg, mesh=mesh)  # shard_map per layer
+
+QAT (``core/qat.py`` STE through the conv dictionaries)::
+
+    cbs = cnn.qat_codebooks(params, cfg)         # per-layer dictionaries
+    logits = cnn.qat_forward(params, cbs, imgs, cfg)  # STE-snapped forward
+    qparams = cnn.qat_requantize(params, cbs, cfg)    # freeze for serving
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.alexnet_conv import CNNConfig
 from repro.core import conv as _conv
+from repro.core import pasm as _pasm
+from repro.core import qat as _qat
 from repro.models.common import Initializer
 
 __all__ = ["stages", "feature_shape", "init_params", "quantize", "forward",
-           "forward_dense"]
+           "forward_dense", "conv_mesh", "qat_codebooks", "qat_apply",
+           "qat_forward", "qat_requantize"]
 
-#  CNNConfig.impl == conv2d engine (kernel_implicit = implicit-GEMM Pallas)
-_IMPLS = ("einsum", "kernel", "kernel_implicit", "pas_kernel")
+#  CNNConfig.impl == conv2d engine (kernel_implicit = implicit-GEMM Pallas;
+#  auto lets conv2d pick per layer under cfg.vmem_budget)
+_IMPLS = ("auto", "einsum", "kernel", "kernel_implicit", "pas_kernel")
 
 
 def stages(cfg: CNNConfig) -> list:
@@ -78,14 +94,35 @@ def init_params(cfg: CNNConfig, key: jax.Array) -> dict:
     }
 
 
-def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16) -> dict:
+def conv_mesh(cfg: CNNConfig):
+    """``cfg.mesh_shape`` → the stack's ``("data", "model")`` mesh."""
+    from repro.launch.mesh import make_conv_mesh
+
+    return make_conv_mesh(cfg.mesh_shape)
+
+
+def _place(params: dict, mesh) -> dict:
+    """Put every leaf on ``mesh`` per the models/sharding.py CNN rules."""
+    from repro.launch.mesh import axis_sizes
+    from repro.models import sharding as _sharding
+
+    specs = _sharding.conv_param_pspecs(params, axis_sizes(mesh))
+    return jax.tree.map(
+        lambda leaf, s: jax.device_put(leaf, jax.sharding.NamedSharding(mesh, s)),
+        params, specs,
+    )
+
+
+def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16, mesh=None) -> dict:
     """K-means weight-share every conv layer: one PASM dictionary per layer.
 
     Each dense ConvParams becomes a ``shared`` one (bias stays dense — §4:
     bias/activation not shared); ``cfg.groups > 1`` gives every layer that
     many reduction-axis dictionaries (beyond-paper accuracy knob) and
     ``cfg.packed`` additionally int4-packs the dictionary indices into the
-    stack layout's GEMM order.
+    stack layout's GEMM order.  ``mesh=`` places the result per the
+    models/sharding.py CNN rules (c_out over ``model``, codebooks
+    replicated) so per-device weight HBM shrinks with the mesh.
     """
     convs = []
     for p in params["conv"]:
@@ -96,7 +133,8 @@ def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16) -> dict:
         if cfg.packed:
             q = q.pack(layout=cfg.layout)
         convs.append(q)
-    return {"conv": convs, "head": params["head"]}
+    out = {"conv": convs, "head": params["head"]}
+    return _place(out, mesh) if mesh is not None else out
 
 
 def _max_pool(x: jax.Array, p: int, layout: str) -> jax.Array:
@@ -107,9 +145,33 @@ def _max_pool(x: jax.Array, p: int, layout: str) -> jax.Array:
     return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, window, "VALID")
 
 
-def _head(x: jax.Array, head: dict) -> jax.Array:
+def _head(x: jax.Array, head: dict, mesh=None) -> jax.Array:
+    """Dense classifier.  Under ``mesh=`` the matmul runs in shard_map (rows
+    over ``data``, classes over ``model`` when divisible) so the contraction
+    keeps the full feature axis per shard — XLA would otherwise split the
+    model-sharded channel dim into a psum whose reduction order differs from
+    single-device, costing stack-level bit-exactness."""
     B = x.shape[0]
-    return x.reshape(B, -1) @ head["w"] + head["b"]
+    xf = x.reshape(B, -1)
+    if mesh is None:
+        return xf @ head["w"] + head["b"]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import data_model_sizes, n_shard_axis
+    from repro.models.sharding import conv_batch_pad
+
+    nd, _ = data_model_sizes(mesh)
+    pad = conv_batch_pad(B, nd)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    ns = n_shard_axis(mesh, head["w"].shape[1])
+    y = shard_map(
+        lambda xl, wl, bl: xl @ wl + bl,
+        mesh=mesh, in_specs=(P("data", None), P(None, ns), P(ns)),
+        out_specs=P("data", ns), check_rep=False,
+    )(xf, head["w"], head["b"])
+    return y[:B]
 
 
 def forward(
@@ -118,6 +180,7 @@ def forward(
     cfg: CNNConfig,
     *,
     interpret: Optional[bool] = None,
+    mesh=None,
 ) -> jax.Array:
     """Quantized forward: images (in ``cfg.layout`` order) → logits.
 
@@ -127,6 +190,11 @@ def forward(
     assembled in VMEM, no patch matrix in HBM), ``pas_kernel`` the
     paper-faithful two-phase ``pas_matmul`` (all with the bias/ReLU epilogue
     fused into the pallas_call), ``einsum`` the pure-XLA reference port.
+
+    ``mesh=`` runs every conv layer sharded (``conv2d(mesh=)``: batch over
+    ``data``, output channels over ``model``); pooling and the dense head
+    ride the sharded activations under XLA's sharding propagation.
+    ``cfg.vmem_budget`` tunes the ``auto`` engine's implicit-GEMM budget.
     """
     if cfg.impl not in _IMPLS:
         raise ValueError(
@@ -134,15 +202,96 @@ def forward(
         )
     x = images
     for p, (conv, pool) in zip(params["conv"], stages(cfg)):
-        x = _conv.conv2d(x, p, conv, engine=cfg.impl, interpret=interpret)
+        x = _conv.conv2d(x, p, conv, engine=cfg.impl, interpret=interpret,
+                         mesh=mesh, vmem_budget=cfg.vmem_budget)
         x = _max_pool(x, pool, cfg.layout)
-    return _head(x, params["head"])
+    return _head(x, params["head"], mesh=mesh)
 
 
-def forward_dense(params: dict, images: jax.Array, cfg: CNNConfig) -> jax.Array:
+def forward_dense(
+    params: dict, images: jax.Array, cfg: CNNConfig, *, mesh=None
+) -> jax.Array:
     """Reference forward on the dense master weights (no weight sharing)."""
     x = images
     for p, (conv, pool) in zip(params["conv"], stages(cfg)):
-        x = _conv.conv2d(x, p, conv, engine="einsum")
+        x = _conv.conv2d(x, p, conv, engine="einsum", mesh=mesh)
         x = _max_pool(x, pool, cfg.layout)
-    return _head(x, params["head"])
+    return _head(x, params["head"], mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# QAT: core/qat.py's STE through the conv stack's per-layer dictionaries
+# ---------------------------------------------------------------------------
+
+
+def _qat_check_groups(cfg: CNNConfig) -> None:
+    if cfg.groups > 1:
+        raise ValueError(
+            "CNN QAT is single-dictionary (the paper's per-layer rule): "
+            f"cfg.groups={cfg.groups} would train/freeze a different "
+            "quantization scheme than quantize() serves; set groups=1"
+        )
+
+
+def qat_codebooks(params: dict, cfg: CNNConfig, *, iters: int = 16) -> list:
+    """Initial per-layer dictionaries: k-means over each dense master kernel
+    (the same assignment rule :func:`quantize` bakes into ``shared`` params,
+    kept as plain ``(bins,)`` leaves so they can be trained)."""
+    _qat_check_groups(cfg)
+    cbs = []
+    for p in params["conv"]:
+        flat = p.kernel.reshape(1, -1).T  # single group = single dictionary
+        cb, _ = _pasm.kmeans_codebook(flat, cfg.bins, groups=1, iters=iters)
+        cbs.append(cb[0])
+    return cbs
+
+
+def qat_apply(params: dict, codebooks: Sequence[jax.Array]) -> dict:
+    """STE-snap every dense master ConvParams onto its layer dictionary.
+
+    The forward value is the codebook-snapped kernel (what the PASM engines
+    would serve); the gradient flows straight through to the dense master
+    (``qat.ste_quantize``) while each codebook entry accumulates the
+    bin-summed grads of its assigned weights.  Bias stays dense (§4).
+    """
+    convs = [
+        _conv.ConvParams.dense(_qat.ste_quantize(p.kernel, cb), bias=p.bias)
+        for p, cb in zip(params["conv"], codebooks)
+    ]
+    return {"conv": convs, "head": params["head"]}
+
+
+def qat_forward(
+    params: dict,
+    codebooks: Sequence[jax.Array],
+    images: jax.Array,
+    cfg: CNNConfig,
+    *,
+    mesh=None,
+) -> jax.Array:
+    """QAT training forward: dense masters STE-snapped per step, then the
+    dense reference engine (differentiable in masters, codebooks, bias and
+    head — the ROADMAP "CNN QAT" wiring)."""
+    return forward_dense(qat_apply(params, codebooks), images, cfg, mesh=mesh)
+
+
+def qat_requantize(
+    params: dict, codebooks: Sequence[jax.Array], cfg: CNNConfig, *, mesh=None
+) -> dict:
+    """Freeze trained masters onto their dictionaries for serving.
+
+    The nearest-entry re-assignment is :func:`repro.core.qat.assign_bins` —
+    the STE forward's rule, and per group :func:`repro.core.pasm.
+    quantize_like`'s — so the frozen ``shared`` ConvParams' :func:`forward`
+    equals :func:`qat_forward` at the same masters/codebooks.
+    """
+    _qat_check_groups(cfg)
+    convs = []
+    for p, cb in zip(params["conv"], codebooks):
+        idx = _qat.assign_bins(p.kernel, cb).astype(jnp.uint8)
+        q = _conv.ConvParams.shared(idx, cb, bias=p.bias)
+        if cfg.packed:
+            q = q.pack(layout=cfg.layout)
+        convs.append(q)
+    out = {"conv": convs, "head": params["head"]}
+    return _place(out, mesh) if mesh is not None else out

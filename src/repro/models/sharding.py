@@ -4,6 +4,11 @@ Megatron-style TP on the ``model`` axis (column→row pairs per block), EP for
 MoE experts, DP over ``data`` (and ``pod``), ZeRO-1 for optimizer states.
 Rules are path-regex driven so the same table covers dense params and the
 idx/codebook leaves PASM quantization swaps in (DESIGN.md §4).
+
+The CNN conv stack has its own rule set (:func:`conv_param_pspecs` /
+:func:`conv_input_pspecs` / :func:`conv_batch_pad`): output channels over
+``model``, image batches over ``data``, codebooks replicated — matching the
+``conv2d(mesh=)`` sharded dispatch axis-for-axis (DESIGN.md §4.1).
 """
 from __future__ import annotations
 
@@ -22,9 +27,13 @@ __all__ = [
     "batch_axes",
     "input_pspecs",
     "opt_state_pspecs",
+    "conv_param_pspecs",
+    "conv_input_pspecs",
+    "conv_batch_pad",
 ]
 
 MODEL = "model"
+DATA = "data"
 
 
 def batch_axes(multi_pod: bool, global_batch: int, n_data: int = 16, n_pod: int = 2):
@@ -200,3 +209,61 @@ def input_pspecs(specs: dict, batch: tuple) -> dict:
         dims = [batch if batch else None] + [None] * (len(v.shape) - 1)
         out[k] = P(*dims)
     return out
+
+
+# ---------------------------------------------------------------------------
+# CNN conv stack (models/cnn.py): ConvParams dictionaries + head
+# ---------------------------------------------------------------------------
+
+
+def conv_param_pspecs(params: Any, axis_sizes: dict) -> Any:
+    """PartitionSpecs for the CNN param dict (``{"conv": [ConvParams...],
+    "head": {...}}``) — the sharded conv dispatch's weight placement.
+
+    The axis mapping mirrors ``conv2d(mesh=)`` (DESIGN.md §4.1): the GEMM N
+    dimension (``c_out``) shards over ``model`` — that is dim 0 of a 4-D
+    ``kernel``/``idx`` leaf ``(c_out, c_in, ky, kx)`` but dim 1 of a packed
+    2-D ``idx (Kp//2, c_out)`` (the K-major int4 pairing stays intact) —
+    bias and the head follow it, and codebooks replicate (≤ 1 KiB, resident
+    per device; the paper's per-layer dictionary is mesh-wide state).  A
+    ``c_out`` that does not divide ``model`` falls back to replicating that
+    leaf, exactly the sharded dispatch's N-replicated rule, so placement
+    never disagrees with compute.
+    """
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        dims = [None] * nd
+        if re.search(r"codebook$", name):
+            pass  # per-layer dictionary: replicated everywhere
+        elif re.search(r"(kernel|idx)$", name) and nd == 4:
+            dims[0] = MODEL  # (c_out, c_in, ky, kx): output channels
+        elif re.search(r"idx$", name) and nd == 2:
+            dims[1] = MODEL  # packed (Kp//2, c_out): output channels minor
+        elif re.search(r"(bias|head/b)$", name) and nd == 1:
+            dims[0] = MODEL  # per-output-channel vectors ride the N sharding
+        elif re.search(r"head/w$", name) and nd == 2:
+            dims[1] = MODEL  # classifier column-parallel
+        s = P(*dims)
+        if not _divisible(leaf.shape, s, axis_sizes):
+            return P(*([None] * nd))
+        return s
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def conv_input_pspecs(ndim: int = 4) -> P:
+    """Image batches shard over ``data`` on the leading batch dim (both
+    NCHW and NHWC keep batch leading)."""
+    return P(DATA, *([None] * (ndim - 1)))
+
+
+def conv_batch_pad(batch: int, n_data: int) -> int:
+    """Zero-image rows to append so an uneven batch shards over ``data``.
+
+    ``conv2d(mesh=)`` applies this remainder padding internally (and slices
+    the pad rows back off); callers placing inputs ahead of time use it to
+    build the padded global batch.
+    """
+    return -batch % n_data

@@ -1,0 +1,141 @@
+"""CNN QAT: core/qat.py's STE wired to the conv stack's per-layer
+dictionaries (the ROADMAP "CNN QAT" item).
+
+The training loop keeps dense master ConvParams; each step STE-snaps every
+kernel onto its layer dictionary (``cnn.qat_apply``) so the forward serves
+codebook values while gradients flow to the masters unchanged and codebook
+entries accumulate bin-summed grads.  ``cnn.qat_requantize`` is the
+``quantize_like``-style re-assignment that freezes the masters back into
+``shared`` ConvParams for the PASM engines.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_cnn_config
+from repro.core import conv as cv
+from repro.core import pasm, qat
+from repro.models import cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup():
+    cfg = get_cnn_config("alexnet", smoke=True)
+    params = cnn.init_params(cfg, KEY)
+    cbs = cnn.qat_codebooks(params, cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.in_chw))
+    return cfg, params, cbs, imgs
+
+
+def test_qat_codebooks_per_layer():
+    cfg, params, cbs, _ = _setup()
+    assert len(cbs) == len(cfg.layers)
+    for cb in cbs:
+        assert cb.shape == (cfg.bins,)
+
+
+def test_qat_refuses_grouped_codebooks():
+    """QAT is single-dictionary (paper rule); a grouped config must not
+    silently train a different scheme than quantize() serves."""
+    cfg, params, cbs, _ = _setup()
+    gcfg = dataclasses.replace(cfg, groups=2)
+    import pytest
+
+    with pytest.raises(ValueError, match="single-dictionary"):
+        cnn.qat_codebooks(params, gcfg)
+    with pytest.raises(ValueError, match="single-dictionary"):
+        cnn.qat_requantize(params, cbs, gcfg)
+
+
+def test_qat_forward_serves_snapped_weights():
+    """qat_forward == forward_dense at the snapped params, and equals the
+    requantized (shared-dictionary) stack — the inference path it trains."""
+    cfg, params, cbs, imgs = _setup()
+    logits = cnn.qat_forward(params, cbs, imgs, cfg)
+    snapped = cnn.qat_apply(params, cbs)
+    np.testing.assert_array_equal(
+        np.asarray(logits), np.asarray(cnn.forward_dense(snapped, imgs, cfg))
+    )
+    qp = cnn.qat_requantize(params, cbs, cfg)
+    assert all(p.kind == "shared" for p in qp["conv"])
+    served = cnn.forward(qp, imgs, dataclasses.replace(cfg, impl="einsum"))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(logits),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qat_requantize_matches_quantize_like():
+    """The re-assignment rule IS pasm.quantize_like's nearest-entry argmin."""
+    cfg, params, cbs, _ = _setup()
+    qp = cnn.qat_requantize(params, cbs, cfg)
+    for p, q, cb in zip(params["conv"], qp["conv"], cbs):
+        t = pasm.quantize_like(
+            pasm.PASMTensor(
+                idx=jnp.zeros((p.kernel[0].size, p.kernel.shape[0]), jnp.uint8),
+                codebook=cb.reshape(1, -1),
+                shape=(p.kernel[0].size, p.kernel.shape[0]),
+                bins=cfg.bins,
+                bits=pasm.bits_for_bins(cfg.bins),
+                packed=False,
+            ),
+            p.kernel.reshape(p.kernel.shape[0], -1).T,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(q.idx.reshape(q.idx.shape[0], -1).T),
+            np.asarray(t.idx),
+        )
+
+
+def test_qat_gradcheck_ste_identity_and_codebook_bins():
+    """Gradcheck (the ROADMAP acceptance): masters get the straight-through
+    gradient — identical to differentiating the dense forward at the snapped
+    weights — and each codebook entry the bin-sum of its weights' grads."""
+    cfg, params, cbs, imgs = _setup()
+    kernels = [p.kernel for p in params["conv"]]
+
+    def with_kernels(ks):
+        convs = [cv.ConvParams.dense(k, bias=p.bias)
+                 for k, p in zip(ks, params["conv"])]
+        return {"conv": convs, "head": params["head"]}
+
+    def loss_qat(ks, cbs_):
+        return (cnn.qat_forward(with_kernels(ks), cbs_, imgs, cfg) ** 2).mean()
+
+    def loss_dense_at(ws):
+        return (cnn.forward_dense(with_kernels(ws), imgs, cfg) ** 2).mean()
+
+    g_k, g_cb = jax.grad(loss_qat, argnums=(0, 1))(kernels, cbs)
+    snapped = [qat.ste_quantize(k, cb) for k, cb in zip(kernels, cbs)]
+    g_dense = jax.grad(loss_dense_at)(snapped)
+    for a, b in zip(g_k, g_dense):  # STE: dL/dmaster == dL/dw at snap point
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    for k, cb, gk, gcb in zip(kernels, cbs, g_dense, g_cb):
+        want = qat.codebook_grads(k, cb, gk)  # PAS bin-accumulate identity
+        np.testing.assert_allclose(np.asarray(gcb), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_qat_step_reduces_loss():
+    """One SGD burst through the STE stack moves masters AND codebooks."""
+    cfg, params, cbs, imgs = _setup()
+    tgt = jax.nn.one_hot(jnp.arange(2) % cfg.classes, cfg.classes)
+    kernels = [p.kernel for p in params["conv"]]
+
+    def loss(ks, cbs_):
+        convs = [cv.ConvParams.dense(k, bias=p.bias)
+                 for k, p in zip(ks, params["conv"])]
+        logits = cnn.qat_forward(
+            {"conv": convs, "head": params["head"]}, cbs_, imgs, cfg
+        )
+        return jnp.mean((jax.nn.softmax(logits) - tgt) ** 2)
+
+    l0 = float(loss(kernels, cbs))
+    g = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    for _ in range(5):
+        g_k, g_cb = g(kernels, cbs)
+        kernels = [k - 0.5 * gk for k, gk in zip(kernels, g_k)]
+        cbs = [cb - 0.5 * gc for cb, gc in zip(cbs, g_cb)]
+    assert float(loss(kernels, cbs)) < l0

@@ -218,6 +218,41 @@ def test_auto_prefers_implicit_and_falls_back(monkeypatch):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_vmem_budget_knob_tunes_auto():
+    """conv2d(vmem_budget=)/CNNConfig.vmem_budget replace the hard-coded
+    6 MiB image-block budget: a tight budget flips auto to explicit, a
+    roomy one back — outputs identical either way."""
+    import dataclasses as dc
+
+    conv = cv.Conv2D(k=3, c_in=4, c_out=8, stride=1, padding="same")
+    imgs, kern, _ = _mk(conv, hw=(9, 9))
+    shared = cv.ConvParams.quantize(kern, 16)
+    img_bytes = 4 * 11 * 11 * 4  # c_in · (9+SAME pad)² · f32
+    tight, roomy = img_bytes - 1, img_bytes
+    assert cv._resolve_engine("auto", shared, False, conv, 9, 9, tight) == "kernel"
+    assert cv._resolve_engine(
+        "auto", shared, False, conv, 9, 9, roomy
+    ) == "kernel_implicit"
+    got_t = cv.conv2d(imgs, shared, conv, engine="auto", interpret=True,
+                      vmem_budget=tight)
+    got_r = cv.conv2d(imgs, shared, conv, engine="auto", interpret=True,
+                      vmem_budget=roomy)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(got_r))
+    # the CNNConfig knob threads through models/cnn.py forward (impl="auto")
+    from repro.configs import get_cnn_config
+    from repro.models import cnn
+
+    cfg = dc.replace(get_cnn_config("alexnet", smoke=True), impl="auto")
+    params = cnn.quantize(cnn.init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.in_chw))
+    want = cnn.forward(params, xs, cfg, interpret=True)
+    got = cnn.forward(
+        params, xs, dc.replace(cfg, vmem_budget=1), interpret=True
+    )  # forces every layer onto the explicit path — same logits
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # custom VJP (explicit col2im backward)
 # ---------------------------------------------------------------------------
