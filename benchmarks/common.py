@@ -41,13 +41,18 @@ def bench_row(
     hbm_bytes=None,
     derived: str = "",
     mesh_shape=None,
+    engine=None,
+    pool=None,
     **extra,
 ) -> dict:
     """One BENCH_*.json record.  ``devices``/``mesh_shape`` are always
     present: single-device rows record ``devices=1, mesh_shape=None``,
     sharded rows the mesh they ran on — without them a ``--devices 8`` run
     would be indistinguishable from a single-device regression in the
-    cross-run trajectory."""
+    cross-run trajectory.  ``engine``/``pool`` are likewise always present
+    (``None`` when not applicable): the fused-pool rows are only comparable
+    to their unfused counterparts when both record which conv2d engine ran
+    and whether the max-pool was folded into the kernel (``pool > 1``)."""
     n_dev = 1
     if mesh_shape is not None:
         for s in mesh_shape:
@@ -59,6 +64,8 @@ def bench_row(
         "derived": derived,
         "devices": n_dev,
         "mesh_shape": list(mesh_shape) if mesh_shape is not None else None,
+        "engine": engine,
+        "pool": pool,
     }
     row.update(extra)
     return row

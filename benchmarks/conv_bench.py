@@ -13,12 +13,18 @@ Two tiers:
   realistic AlexNet layer sizes (224×224×3→96, 27×27×96→256) with the
   bias/ReLU epilogue fused into the kernels, comparing the einsum port
   against ``pasm_matmul`` (explicit im2col), ``pasm_conv2d``
-  (``kernel_implicit`` — implicit im2col, no patch matrix in HBM) and
-  ``pas_matmul`` (paper-faithful two-phase).  Every batched row carries a
-  modeled ``hbm_bytes`` column (``ops.conv_hbm_bytes``, tile-plan aware) —
-  on CPU the kernels run in interpret mode, so the *bytes* column is the
-  hardware-meaningful trajectory signal and µs only compares formulations
-  on equal footing (``--smoke`` shrinks batch/iters for CI).
+  (``kernel_implicit`` — implicit im2col, no patch matrix in HBM),
+  ``pas_matmul`` (paper-faithful two-phase), and the **fused
+  conv/ReLU/max-pool stage** (``conv.batched.kernel_implicit_pool.*`` —
+  ``conv2d(pool=2)``, one pallas_call storing only the pooled map).  Every
+  row carries a modeled ``hbm_bytes`` column — tile-plan aware
+  (``ops.conv_hbm_bytes``) for the Pallas engines, the analytic
+  ``hwmodel.conv_hbm_traffic`` (dense f32 weight stream) for the einsum
+  rows — plus the ``engine``/``pool`` stamps, so fused and unfused rows
+  stay comparable.  On CPU the kernels run in interpret mode, so the
+  *bytes* column is the hardware-meaningful trajectory signal and µs only
+  compares formulations on equal footing (``--smoke`` shrinks batch/iters
+  for CI).
 
 ``--json [PATH]`` additionally writes every row to ``BENCH_conv.json`` so CI
 tracks the engine trajectory from this PR onward; ``--engine e1,e2`` runs
@@ -81,6 +87,7 @@ import jax.numpy as jnp
 
 from repro.configs.alexnet_conv import PAPER_SPEC
 from repro.core import conv as cv
+from repro.core import hwmodel as hw
 from repro.kernels import ops
 
 from benchmarks.common import bench_row, emit, time_us
@@ -109,6 +116,20 @@ def record(name: str, us_per_call: float, derived: str = "", hbm_bytes=None,
                               derived=derived, mesh_shape=mesh_shape, **extra))
 
 
+def _analytic_hbm(conv, ih, iw, batch, *, bins=16, implicit=False,
+                  dense=False, pool=1):
+    """`hwmodel.conv_hbm_traffic` on a Conv2D spec — the plan-free model that
+    fills rows the tile-aware `ops.conv_hbm_bytes` cannot describe (einsum
+    streams dense f32 weights, not indexed operands)."""
+    geom = cv.conv_geom(conv, ih, iw)
+    (plh, phh), (plw, phw) = geom.pad
+    return hw.conv_hbm_traffic(
+        IH=ih, IW=iw, C=conv.c_in, KY=conv.ky, KX=conv.kx, M=conv.c_out,
+        stride=conv.stride, batch=batch, bins=bins, pad=(plh, phh, plw, phw),
+        act_bytes=4, packed=False, implicit=implicit, pool=pool, dense=dense,
+    )
+
+
 def conv_variants_latency():
     key = jax.random.PRNGKey(0)
     img = jax.random.normal(key, (PAPER_SPEC.C, PAPER_SPEC.IH, PAPER_SPEC.IW))
@@ -116,6 +137,8 @@ def conv_variants_latency():
         jax.random.PRNGKey(1),
         (PAPER_SPEC.M, PAPER_SPEC.C, PAPER_SPEC.KY, PAPER_SPEC.KX),
     )
+    hbm_dense = _analytic_hbm(PAPER_CONV, PAPER_SPEC.IH, PAPER_SPEC.IW, 1,
+                              dense=True)
     for bins in (4, 8, 16):
         p = cv.ConvParams.quantize(kern, bins)
         dense = cv.ConvParams.dense(p.codebook[p.idx.astype(jnp.int32)])
@@ -125,9 +148,14 @@ def conv_variants_latency():
         t_d = time_us(f_direct, img)
         t_w = time_us(f_ws, img)
         t_p = time_us(f_pasm, img)
-        record(f"conv.direct.B{bins}", t_d)
-        record(f"conv.weight_shared.B{bins}", t_w)
-        record(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}")
+        hbm_ws = _analytic_hbm(PAPER_CONV, PAPER_SPEC.IH, PAPER_SPEC.IW, 1,
+                               bins=bins)
+        record(f"conv.direct.B{bins}", t_d, hbm_bytes=hbm_dense,
+               engine="einsum", pool=1)
+        record(f"conv.weight_shared.B{bins}", t_w, hbm_bytes=hbm_ws,
+               engine="einsum", pool=1)
+        record(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}",
+               hbm_bytes=hbm_ws, engine="pas_einsum", pool=1)
 
 
 def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
@@ -160,17 +188,36 @@ def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
                 print(f"# skipped conv.batched.pas_kernel.{name}: K={conv.K} "
                       "too large for CI smoke (interpret mode)", file=sys.stderr)
                 continue
-            # the model describes the Pallas-kernel dataflows only; the XLA
-            # einsum port streams dense f32 weights (no indexed operands)
-            hbm = None if engine == "einsum" else ops.conv_hbm_bytes(
-                t_gemm, geom, batch, ih, iw,
-                implicit=engine == "kernel_implicit", act_bytes=4,
-            )
+            # the tile-aware model describes the Pallas-kernel dataflows; the
+            # XLA einsum port streams dense f32 weights over an explicit
+            # patch matrix, which the analytic hwmodel covers (dense=True)
+            if engine == "einsum":
+                hbm = _analytic_hbm(conv, ih, iw, batch, dense=True)
+            else:
+                hbm = ops.conv_hbm_bytes(
+                    t_gemm, geom, batch, ih, iw,
+                    implicit=engine == "kernel_implicit", act_bytes=4,
+                )
             f = jax.jit(lambda i, p=params, c=conv, e=engine:
                         cv.conv2d(i, p, c, engine=e))
             t = time_us(f, imgs, iters=iters, warmup=warmup)
             record(f"conv.batched.{engine}.{name}.bs{batch}", t, derived,
-                   hbm_bytes=hbm)
+                   hbm_bytes=hbm, engine=engine, pool=1)
+
+        if "kernel_implicit" in engines:
+            # the fused conv/ReLU/max-pool stage (PR 5): ONE pallas_call,
+            # pooled in-kernel — the AlexNet pool=2 window of both layers
+            pool = 2
+            geom_p = cv.conv_geom(conv, ih, iw, pool=pool)
+            hbm_p = ops.conv_hbm_bytes(t_gemm, geom_p, batch, ih, iw,
+                                       implicit=True, act_bytes=4)
+            f = jax.jit(lambda i, p=params, c=conv, q=pool:
+                        cv.conv2d(i, p, c, engine="kernel_implicit", pool=q,
+                                  pool_impl="fused"))
+            t = time_us(f, imgs, iters=iters, warmup=warmup)
+            record(f"conv.batched.kernel_implicit_pool.{name}.bs{batch}", t,
+                   f"{derived} pool={pool}", hbm_bytes=hbm_p,
+                   engine="kernel_implicit", pool=pool)
 
 
 def sharded_conv_latency(
@@ -221,7 +268,7 @@ def sharded_conv_latency(
                 f"P={batch * geom.P} K={conv.K} M={conv.c_out} "
                 f"img/s/dev={img_s_dev:.1f}",
                 hbm_bytes=hbm_dev, mesh_shape=(n_devices, 1),
-                hbm_bytes_1dev=hbm_1dev,
+                hbm_bytes_1dev=hbm_1dev, engine=engine, pool=1,
             )
 
 
@@ -236,7 +283,26 @@ def cnn_forward_latency(smoke: bool = True):
     imgs = jax.random.normal(jax.random.PRNGKey(1), (batch, *cfg.in_chw))
     iters = 1 if smoke else 5
     t = time_us(lambda i: cnn.forward(params, i, cfg), imgs, iters=iters, warmup=1)
-    record(f"cnn.forward.{cfg.name}.bs{batch}", t, f"layers={len(cfg.layers)}")
+    # stack-level modeled bytes: resolve each stage's engine and pool
+    # dispatch through cv.conv_plan — the same rule conv2d routes through —
+    # so the row never claims a fused (or implicit) dataflow the measured
+    # run didn't take
+    hbm = 0
+    _, H, W = cfg.in_chw
+    for p, (conv, pool) in zip(params["conv"], cnn.stages(cfg)):
+        eng, fused = cv.conv_plan(p, conv, H, W, engine=cfg.impl, pool=pool,
+                                  pool_impl=cfg.pool_impl,
+                                  vmem_budget=cfg.vmem_budget)
+        geom = cv.conv_geom(conv, H, W, pool=pool if fused else 1)
+        hbm += ops.conv_hbm_bytes(p.gemm_tensor(cfg.layout), geom, batch, H, W,
+                                  implicit="implicit" in eng, act_bytes=4)
+        if not fused and pool > 1:
+            # the separate reduce_window pass: read pre-pool, store pooled
+            hbm += batch * conv.c_out * 4 * (
+                geom.oh * geom.ow + (geom.oh // pool) * (geom.ow // pool))
+        H, W = geom.oh // pool, geom.ow // pool
+    record(f"cnn.forward.{cfg.name}.bs{batch}", t, f"layers={len(cfg.layers)}",
+           hbm_bytes=hbm, engine=cfg.impl, pool=None)  # per-stage pools vary
 
 
 def main() -> None:

@@ -6,6 +6,9 @@
 # and leaves BENCH_conv.json behind so perf is tracked per PR), the
 # implicit-vs-explicit im2col gate (the implicit engine's modeled HBM bytes
 # must be strictly below the explicit path's on the AlexNet conv1 geometry),
+# the fused conv/ReLU/max-pool suite + gate (the fused stage's modeled bytes
+# strictly below implicit-unfused plus the separate reduce_window pass on
+# conv1, read from the BENCH_conv.json engine/pool-stamped rows),
 # the sharded conv suite on 8 host-platform fake devices (shard_map
 # bit-exactness — tests/test_conv_sharded.py skips itself on one device, so
 # this run is where it actually executes), and the sharding gate: --devices 8
@@ -55,6 +58,27 @@ assert i["hbm_bytes"] < e["hbm_bytes"], (
 )
 print(f"implicit {i['hbm_bytes']} B < explicit {e['hbm_bytes']} B "
       f"({e['hbm_bytes'] / i['hbm_bytes']:.2f}x reduction) OK")
+PY
+
+echo "== fused conv/ReLU/max-pool: suite + HBM-bytes gate (AlexNet conv1) =="
+python -m pytest -q tests/test_conv_pool.py
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_conv.json"))["records"]}
+fused = rows["conv.batched.kernel_implicit_pool.alexnet_conv1.bs1"]
+unfused = rows["conv.batched.kernel_implicit.alexnet_conv1.bs1"]
+assert fused["engine"] == "kernel_implicit" and fused["pool"] == 2, fused
+assert unfused["pool"] == 1, unfused
+assert fused["hbm_bytes"] is not None and unfused["hbm_bytes"] is not None
+# the unfused path additionally pays the separate reduce_window pass: read
+# the full pre-pool map, store the pooled one (conv1 valid_centred:
+# 54x54 -> 27x27 over 96 channels, f32)
+pool_pass = 54 * 54 * 96 * 4 + 27 * 27 * 96 * 4
+assert fused["hbm_bytes"] < unfused["hbm_bytes"] + pool_pass, (fused, unfused)
+print(f"fused conv/ReLU/pool {fused['hbm_bytes']} B < implicit-unfused "
+      f"{unfused['hbm_bytes']} B + separate pool pass {pool_pass} B "
+      f"({(unfused['hbm_bytes'] + pool_pass) / fused['hbm_bytes']:.2f}x) OK")
 PY
 
 echo "== sharded conv: shard_map suite on 8 fake devices =="

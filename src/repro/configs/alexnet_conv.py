@@ -43,6 +43,11 @@ class CNNConfig:
     # image-block VMEM budget (bytes) for the auto engine's implicit-GEMM
     # preference; None = the core default (~6 MiB, a 16 MiB-VMEM TPU core)
     vmem_budget: Optional[int] = None
+    # conv2d(pool_impl=) policy for the per-stage max-pools: "auto" fuses the
+    # pool into the conv kernel epilogue where possible (one pallas_call per
+    # conv/ReLU/pool stage), "unfused" keeps the separate reduce_window,
+    # "fused" demands fusion (raises where impossible) — bit-exact either way
+    pool_impl: str = "auto"
     # (n_data, n_model) for launch.mesh.make_conv_mesh — the mesh the stack
     # shards over (conv2d(mesh=), DESIGN.md §4.1); None = single device
     mesh_shape: Optional[tuple] = None

@@ -82,8 +82,11 @@ __all__ = [
     "conv2d",
     "conv_out_hw",
     "conv_geom",
+    "conv_plan",
+    "max_pool2d",
     "PADDINGS",
     "LAYOUTS",
+    "POOL_IMPLS",
     # legacy surface (deprecation shims / kept helpers)
     "ConvSpec",
     "out_hw",
@@ -108,6 +111,11 @@ ENGINES = (
 )
 _IMPLICIT_ENGINES = ("kernel_implicit", "pas_kernel_implicit")
 _PAS_ENGINES = ("pas_kernel", "pas_kernel_implicit", "pas_einsum")
+# conv2d(pool=) fusion policy: "auto" fuses the max-pool into the kernel
+# epilogue whenever the engine/geometry allow (reduce_window fallback
+# otherwise — bit-exact either way), "fused" demands the fused path (raises
+# when impossible), "unfused" always runs the separate reduce_window.
+POOL_IMPLS = ("auto", "fused", "unfused")
 
 # ``auto`` only picks the implicit path when one padded image block (the
 # per-grid-step x operand, f32) fits comfortably in VMEM next to the idx /
@@ -186,12 +194,14 @@ def conv_out_hw(ih: int, iw: int, conv: Conv2D) -> tuple:
     return oh, ow
 
 
-def conv_geom(conv: Conv2D, ih: int, iw: int):
+def conv_geom(conv: Conv2D, ih: int, iw: int, pool: int = 1):
     """The static geometry the implicit-GEMM kernels consume.
 
     Resolves the spec against an ``ih × iw`` image into the hashable
     :class:`repro.kernels.ops.ConvGeom` (output dims + spatial pad + the
-    layout's reduction order) that rides jit static args.
+    layout's reduction order) that rides jit static args.  ``pool > 1``
+    requests the fused max-pool epilogue: the kernels walk window-major rows
+    and store the pooled ``(oh//pool, ow//pool)`` map (DESIGN.md §3.2).
     """
     from repro.kernels import ops as _kops  # deferred: core must not need pallas
 
@@ -206,6 +216,7 @@ def conv_geom(conv: Conv2D, ih: int, iw: int):
         ow=ow,
         c_in=conv.c_in,
         pad=((plo_h, phi_h), (plo_w, phi_w)),
+        pool=pool,
     )
 
 
@@ -544,6 +555,38 @@ def _epilogue(y: jax.Array, bias: Optional[jax.Array], relu: bool) -> jax.Array:
     return apply_epilogue(y, bias, relu)
 
 
+def max_pool2d(x: jax.Array, pool: int, layout: str) -> jax.Array:
+    """Non-overlapping max pool, VALID (floor) windowing, layout-aware.
+
+    The unfused reference (and fallback path) of ``conv2d(pool=)``; accepts
+    a batched 4-D feature map or a single squeezed 3-D one.  The window init
+    is the dtype's max-monoid identity: ``jnp.iinfo(dtype).min`` for
+    integer/quantized activations (the former unconditional ``-jnp.inf``
+    would fail the integer ``reduce_window`` dtype check), ``-inf`` for
+    floats (``jnp.finfo(...).min`` would stop XLA from recognizing the max
+    monoid and lose the ``reduce_window_max`` primitive — and with it the
+    VJP).  Every window is fully covered (non-overlapping VALID), so the
+    init never leaks into the output either way.
+    """
+    if pool == 1:
+        return x
+    # a NumPy scalar of the operand dtype: the value must equal THAT dtype's
+    # max identity for jax to recognize the monoid (reduce_window_max, which
+    # carries the VJP) — a weak python int or a mismatched-dtype init falls
+    # into the generic non-differentiable reduce_window
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = x.dtype.type(jnp.iinfo(x.dtype).min)
+    else:
+        init = x.dtype.type(-jnp.inf)
+    if x.ndim == 4:
+        window = (1, pool, pool, 1) if layout == "NHWC" else (1, 1, pool, pool)
+    elif x.ndim == 3:
+        window = (pool, pool, 1) if layout == "NHWC" else (1, pool, pool)
+    else:
+        raise ValueError(f"max_pool2d needs a 3-D or 4-D feature map, got {x.shape}")
+    return jax.lax.reduce_window(x, init, jax.lax.max, window, window, "VALID")
+
+
 # ---------------------------------------------------------------------------
 # the entry point
 # ---------------------------------------------------------------------------
@@ -573,6 +616,68 @@ def _resolve_engine(
             return "einsum"
         return "kernel_implicit" if _implicit_fits(conv, ih, iw, budget) else "kernel"
     return engine
+
+
+def _pool_fusible(eng: str, conv: Conv2D, ih: int, iw: int, pool: int,
+                  mesh) -> bool:
+    """``conv2d(pool=)``'s ``auto`` fuse predicate.
+
+    Fuses when: a Pallas engine; the pooled output is non-empty (floor
+    windowing needs at least one whole window per axis); a pool-aligned tile
+    plan exists (``lcm(pool², 8) ≤ 256`` rows — the kernels reduce whole
+    windows per block); and — on the *explicit* engines only — no mesh:
+    their shard_map splits the patch-row dim, whose shard boundaries could
+    land mid-window.  The implicit engines shard whole images over ``data``,
+    so pool windows never cross a shard and they fuse under a mesh too.
+    Everything this refuses runs the bit-exact ``reduce_window`` fallback.
+    """
+    if pool == 1 or eng in ("einsum", "pas_einsum"):
+        return False
+    oh, ow = conv_out_hw(ih, iw, conv)
+    if oh < pool or ow < pool:
+        return False
+    from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+    if not _kops.pool_plan_exists(pool):  # no pool-aligned block plan
+        return False
+    if mesh is not None and eng not in _IMPLICIT_ENGINES:
+        return False
+    return True
+
+
+def conv_plan(
+    params: "ConvParams", conv: Conv2D, ih: int, iw: int, *,
+    engine: str = "auto", pool: int = 1, pool_impl: str = "auto",
+    vmem_budget: Optional[int] = None, mesh=None, batched: bool = True,
+) -> tuple:
+    """The ``(engine, fused_pool)`` pair :func:`conv2d` would dispatch.
+
+    Public so benches/models can model a stage's dataflow (engine choice,
+    whether the max-pool folds into the kernel) without re-implementing the
+    dispatch rules — :func:`conv2d` itself routes through this, so the two
+    can never drift apart.
+    """
+    eng = _resolve_engine(engine, params, not batched, conv, ih, iw,
+                          vmem_budget)
+    fused = (pool > 1 and pool_impl != "unfused"
+             and _pool_fusible(eng, conv, ih, iw, pool, mesh))
+    return eng, fused
+
+
+def _pool_order_patches(patches: jax.Array, batch: int, oh: int, ow: int,
+                        pool: int) -> jax.Array:
+    """Row-major ``(B·P, K)`` patches → window-major ``(B·P_out·pool², K)``.
+
+    The explicit fused-pool GEMM's row contract: each consecutive ``pool²``
+    rows form one pool window (so the kernel's epilogue max is a pure
+    reshape), floor-remainder pixels are dropped before the GEMM ever runs —
+    the same rows the implicit kernel's window-major ``patch_tile`` walks.
+    """
+    K = patches.shape[1]
+    ohp, owp = oh // pool, ow // pool
+    pm = patches.reshape(batch, oh, ow, K)[:, : ohp * pool, : owp * pool]
+    pm = pm.reshape(batch, ohp, pool, owp, pool, K).transpose(0, 1, 3, 2, 4, 5)
+    return pm.reshape(batch * ohp * owp * pool * pool, K)
 
 
 def _einsum_sharded(patches, w, bias, relu: bool, mesh):
@@ -611,6 +716,8 @@ def conv2d(
     interpret: Optional[bool] = None,
     mesh=None,
     vmem_budget: Optional[int] = None,
+    pool: int = 1,
+    pool_impl: str = "auto",
 ) -> jax.Array:
     """The unified conv entry point: any params kind, any engine, any layout.
 
@@ -619,6 +726,15 @@ def conv2d(
     reduction step, so a batched conv layer is exactly one ``pallas_call`` —
     and on the ``*_implicit`` engines that call consumes the raw (padded)
     image directly, with the im2col tiles assembled in VMEM.
+
+    ``pool > 1`` appends a non-overlapping ``(pool, pool)`` max-pool (VALID
+    floor windowing — :func:`max_pool2d` semantics).  ``pool_impl="auto"``
+    fuses it into the kernel epilogue whenever :func:`_pool_fusible` allows
+    — the whole conv/ReLU/pool stage is then ONE ``pallas_call`` storing
+    only the pooled map (DESIGN.md §3.2) — and falls back to the separate
+    ``reduce_window`` otherwise; the two paths are bit-exact.  ``"fused"``
+    demands the fused path (raises when impossible), ``"unfused"`` forces
+    the fallback.
 
     ``mesh=`` (a ``jax.sharding.Mesh`` with a ``data`` axis, optionally
     ``model``) runs the layer sharded: the batch over ``data`` (uneven
@@ -631,6 +747,11 @@ def conv2d(
     image-block VMEM budget in bytes (default ``_IMPLICIT_VMEM_BUDGET``),
     so engine selection is tunable per target core.
     """
+    if pool_impl not in POOL_IMPLS:
+        raise ValueError(f"pool_impl must be one of {POOL_IMPLS}, got {pool_impl!r}")
+    if int(pool) != pool or pool < 1:
+        raise ValueError(f"pool must be a positive integer window, got {pool!r}")
+    pool = int(pool)  # accept integral floats; downstream math needs an int
     xb, squeeze = _batched4(x)
     nhwc = conv.layout == "NHWC"
     c_axis = -1 if nhwc else 1
@@ -645,8 +766,18 @@ def conv2d(
             f"{(conv.c_out, conv.c_in, conv.ky, conv.kx)}"
         )
     ih, iw = (xb.shape[1], xb.shape[2]) if nhwc else (xb.shape[2], xb.shape[3])
-    eng = _resolve_engine(engine, params, squeeze, conv, ih, iw, vmem_budget)
+    eng, fuse_pool = conv_plan(
+        params, conv, ih, iw, engine=engine, pool=pool, pool_impl=pool_impl,
+        vmem_budget=vmem_budget, mesh=mesh, batched=not squeeze,
+    )
     bias = params.bias if conv.bias else None
+    if pool_impl == "fused" and pool > 1 and not fuse_pool:
+        raise ValueError(
+            f"pool_impl='fused' but engine {eng!r} cannot fuse pool={pool} "
+            "here (einsum engines, sub-window outputs, oversize windows and "
+            "mesh-sharded explicit patch rows all need the reduce_window "
+            "fallback — pool_impl='auto' picks it automatically)"
+        )
 
     batch = xb.shape[0]
     if mesh is not None:
@@ -669,16 +800,22 @@ def conv2d(
     if eng in _IMPLICIT_ENGINES:
         from repro.kernels import ops as _kops  # deferred: core must not need pallas
 
-        geom = conv_geom(conv, ih, iw)
+        geom = conv_geom(conv, ih, iw, pool=pool if fuse_pool else 1)
         t = params.gemm_tensor(conv.layout)
         f = _kops.pasm_conv2d if eng == "kernel_implicit" else _kops.pas_conv2d
         y = f(xb, t, geom, bias=bias, relu=conv.relu, interpret=interpret,
               mesh=mesh)
         y = y.reshape(-1, conv.c_out)  # (B, P, M) → (B·P, M), after the kernel
-        out = _col2im(y, conv, xb.shape[0], geom.oh, geom.ow, squeeze)
+        if fuse_pool:  # the kernel already stored the pooled map
+            out = _col2im(y, conv, xb.shape[0], geom.ohp, geom.owp, squeeze)
+        else:
+            out = _col2im(y, conv, xb.shape[0], geom.oh, geom.ow, squeeze)
+            out = max_pool2d(out, pool, conv.layout)
         return out[:batch] if mesh is not None else out
 
     patches, (oh, ow) = _im2col(xb, conv)
+    if fuse_pool:  # explicit fused pool: window-major rows for the kernels
+        patches = _pool_order_patches(patches, xb.shape[0], oh, ow, pool)
 
     if eng == "einsum":
         w = params.dense_operand(conv.layout)
@@ -699,8 +836,12 @@ def conv2d(
             patches = jnp.pad(patches, ((0, 0), (0, params.pad_k)))
         f = _kops.pasm_matmul if eng == "kernel" else _kops.pas_matmul
         y = f(patches, t, bias=bias, relu=conv.relu, interpret=interpret,
-              mesh=mesh)
-    out = _col2im(y, conv, xb.shape[0], oh, ow, squeeze)
+              mesh=mesh, pool=pool if fuse_pool else 1)
+    if fuse_pool:
+        out = _col2im(y, conv, xb.shape[0], oh // pool, ow // pool, squeeze)
+    else:
+        out = _col2im(y, conv, xb.shape[0], oh, ow, squeeze)
+        out = max_pool2d(out, pool, conv.layout)
     return out[:batch] if mesh is not None else out
 
 

@@ -322,6 +322,7 @@ def conv_hbm_traffic(
     *, IH: int, IW: int, C: int, KY: int, KX: int, M: int, stride: int = 1,
     batch: int = 1, bins: int = 16, pad: tuple = (0, 0, 0, 0),
     act_bytes: int = 4, packed: bool = True, implicit: bool = True,
+    pool: int = 1, dense: bool = False,
 ) -> int:
     """Logical-shape HBM bytes of one conv layer on the PASM GEMM.
 
@@ -336,6 +337,14 @@ def conv_hbm_traffic(
     * ``implicit=True``: the padded image streams once per reuse window —
       ``B·C·Hp·Wp`` elements, full stop.
 
+    ``pool > 1`` models the **fused conv/ReLU/max-pool stage** (DESIGN.md
+    §3.2): the store shrinks to the pooled ``(OH//pool)·(OW//pool)`` map and
+    the explicit patch stream drops the floor-remainder pixels — the
+    pre-pool map's separate store + re-read simply vanishes.  ``dense=True``
+    models the einsum reference instead: a dense f32 weight stream
+    (``K·M·4`` B, no indices, no codebook), so BENCH_conv.json einsum rows
+    carry comparable bytes.
+
     Plan-free counterpart of the tile-aware
     :func:`repro.kernels.ops.conv_hbm_bytes` (which additionally rounds to
     the kernels' padded operands).
@@ -344,10 +353,15 @@ def conv_hbm_traffic(
     hp, wp = IH + plh + phh, IW + plw + phw
     OH = (hp - KY) // stride + 1
     OW = (wp - KX) // stride + 1
-    P, K = OH * OW, C * KY * KX
-    idx_bytes = K * M // 2 if packed else K * M
-    cb_bytes = bins * 4
-    out_bytes = batch * P * M * 4  # f32 store
+    K = C * KY * KX
+    OHp, OWp = OH // pool, OW // pool
+    P = OHp * OWp * pool * pool  # GEMM rows; == OH·OW when pool == 1
+    if dense:
+        idx_bytes, cb_bytes = K * M * 4, 0  # dense f32 weights, no dictionary
+    else:
+        idx_bytes = K * M // 2 if packed else K * M
+        cb_bytes = bins * 4
+    out_bytes = batch * OHp * OWp * M * 4  # f32 store (pooled when pool > 1)
     if implicit:
         x_bytes = batch * C * hp * wp * act_bytes
     else:

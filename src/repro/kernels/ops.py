@@ -20,6 +20,7 @@ counters) stay per-shard-replicated; bias follows the N sharding.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -44,6 +45,7 @@ __all__ = [
     "matmul_flops",
     "pasm_hbm_bytes",
     "conv_hbm_bytes",
+    "pool_plan_exists",
 ]
 
 
@@ -141,6 +143,60 @@ def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
     return bm, bn, bk, gs_pad
 
 
+def _pool_row_align(pool: int) -> int:
+    """Rows a pooled block must be a multiple of: ``lcm(pool², 8)`` — whole
+    pool windows (the epilogue max is a ``(bm/pool², pool², bn)`` reshape)
+    at MXU row alignment."""
+    pw = pool * pool
+    return pw * 8 // math.gcd(pw, 8)
+
+
+def pool_plan_exists(pool: int) -> bool:
+    """Whether a pool-aligned tile plan exists (``lcm(pool², 8) ≤ 256``
+    rows).  THE source of truth shared by :func:`_pool_bm` and
+    ``conv2d``'s fuse dispatch (:func:`repro.core.conv._pool_fusible`), so
+    the two can never drift apart."""
+    return pool == 1 or _pool_row_align(pool) <= 256
+
+
+def _pool_bm(bm: int, pool: int) -> int:
+    """Align ``bm`` to whole pool windows for the fused max-pool epilogue.
+
+    Returns the largest :func:`_pool_row_align` multiple ≤ the unpooled
+    ``bm`` (at least one window row group).  ``conv2d``'s dispatch only
+    fuses when :func:`pool_plan_exists`, so the ValueError is a guard
+    against direct misuse, not a reachable fallback.
+    """
+    if pool == 1:
+        return bm
+    a = _pool_row_align(pool)
+    if not pool_plan_exists(pool):
+        raise ValueError(
+            f"no pool-aligned tile plan for pool={pool}: lcm(pool², 8)={a} "
+            "exceeds the 256-row block cap — use the unfused reduce_window "
+            "fallback (conv2d pool dispatch does this automatically)"
+        )
+    return max(a, bm - bm % a)
+
+
+def _check_pool_operand(x, pool: int, mesh) -> None:
+    """The shared ``pool=`` preconditions of the explicit GEMM wrappers:
+    single-device only (sharded patch-row boundaries could split pool
+    windows — ``conv2d(mesh=)`` falls back to ``reduce_window``), and a 2-D
+    window-major operand (``pool²`` consecutive rows per window)."""
+    if mesh is not None:
+        raise ValueError(
+            "pool= fuses single-device only on the explicit GEMM path "
+            "(sharded patch-row boundaries could split pool windows); "
+            "conv2d(mesh=) falls back to reduce_window instead"
+        )
+    if x.ndim != 2 or x.shape[0] % (pool * pool):
+        raise ValueError(
+            "pool= needs a 2-D window-major x (pool² consecutive rows "
+            f"per window), got shape {x.shape} with pool={pool}"
+        )
+
+
 def _pad_weight_operands(idx, codebook, bn, gs_pad, packed):
     """K-pad (idx, codebook) per group and N-pad idx to the tile plan.
 
@@ -201,20 +257,23 @@ def _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("packed", "logical_k", "gather", "interpret", "use_ref", "relu"),
+    static_argnames=(
+        "packed", "logical_k", "gather", "interpret", "use_ref", "relu", "pool"
+    ),
 )
 def _pasm_matmul_fwd_impl(
     x, idx, codebook, bias=None, *, packed, logical_k, gather, interpret, use_ref,
-    relu=False,
+    relu=False, pool=1,
 ):
     if use_ref:
         y = _ref.pasm_matmul_ref(x, idx, codebook, packed=packed)
-        return _ref.apply_epilogue(y, bias, relu)
+        return _ref.max_pool_rows(_ref.apply_epilogue(y, bias, relu), pool)
     G, B = codebook.shape
     group_size = logical_k // G
     bm, bn, bk, gs_pad = _pick_blocks(
         x.shape[0], logical_k, idx.shape[1], group_size, packed
     )
+    bm = _pool_bm(bm, pool)
     xp, idxp, cbp, (M, N, Kp) = _pad_operands(x, idx, codebook, bm, bn, gs_pad, packed)
     bias_row = None
     if bias is not None:
@@ -232,9 +291,10 @@ def _pasm_matmul_fwd_impl(
         bk=bk,
         gather=gather,
         relu=relu,
+        pool=pool,
         interpret=interpret,
     )
-    return out[:M, :N]
+    return out[: M // (pool * pool), :N]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -277,9 +337,10 @@ def _pasm_bwd(packed, gather, interpret, res, g):
 _pasm_matmul.defvjp(_pasm_fwd, _pasm_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu):
-    """The fused-epilogue variant: bias/ReLU applied inside the kernel."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu, pool):
+    """The fused-epilogue variant: bias/ReLU (and the ``pool`` max-reduce
+    over window-major rows) applied inside the kernel."""
     return _pasm_matmul_fwd_impl(
         x,
         idx,
@@ -291,18 +352,33 @@ def _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu):
         interpret=interpret,
         use_ref=False,
         relu=relu,
+        pool=pool,
     )
 
 
-def _pasm_ep_fwd(x, idx, codebook, bias, packed, gather, interpret, relu):
-    y = _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu)
-    # y is a residual only for the ReLU mask — don't pin it otherwise
-    return y, (x, idx, codebook, bias, y if relu else None)
+def _pasm_ep_fwd(x, idx, codebook, bias, packed, gather, interpret, relu, pool):
+    y = _pasm_matmul_ep(x, idx, codebook, bias, packed, gather, interpret, relu,
+                        pool)
+    # y is a residual only for the ReLU mask (pool == 1: the pooled output
+    # can't recover the pre-pool mask — the backward recomputes it instead)
+    return y, (x, idx, codebook, bias, y if relu and pool == 1 else None)
 
 
-def _pasm_ep_bwd(packed, gather, interpret, relu, res, g):
+def _pasm_ep_bwd(packed, gather, interpret, relu, pool, res, g):
     x, idx, codebook, bias, y = res
-    if relu:
+    if pool > 1:
+        # the fused forward never materializes the pre-pool activations —
+        # recompute them and route g through the pool argmax + ReLU masks
+        # (max_pool_rows' own VJP defines the argmax routing)
+        w = _ref.dequant_ref(idx, codebook, packed=packed).astype(x.dtype)
+        y_lin = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        _, vjp_post = jax.vjp(
+            lambda yl: _ref.max_pool_rows(_ref.apply_epilogue(yl, bias, relu),
+                                          pool),
+            y_lin,
+        )
+        g, = vjp_post(g)
+    elif relu:
         g = g * (y > 0).astype(g.dtype)  # mask through the fused ReLU
     dx, _, dcb = _pasm_bwd(packed, gather, interpret, (x, idx, codebook), g)
     dbias = g.sum(axis=0).astype(bias.dtype)
@@ -321,6 +397,7 @@ def pasm_matmul(
     gather: str = "take",
     interpret: Optional[bool] = None,
     mesh=None,
+    pool: int = 1,
 ) -> jax.Array:
     """``x @ t`` with the fused dequant kernel.  x: (..., K) → (..., N) f32.
 
@@ -329,12 +406,26 @@ def pasm_matmul(
     ``t.codebook`` and ``bias``.  With ``mesh=`` the rows shard over
     ``data`` (M padded up to the axis size when uneven) and N over ``model``
     when divisible — bit-exact vs the single-device call.
+
+    ``pool > 1`` fuses a non-overlapping max-pool into the same
+    write-through: ``x`` must be 2-D with **window-major** rows (each
+    consecutive ``pool²`` rows one pool window — the explicit conv path's
+    ``_pool_order_patches`` ordering) and the result is the pooled
+    ``(M/pool², N)``.  Single-device only: sharded patch-row boundaries
+    could split windows, so ``conv2d(mesh=)`` keeps the ``reduce_window``
+    fallback there.
     """
     if interpret is None:
         interpret = _interpret_default()
     K, N = t.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
+    if pool > 1:
+        _check_pool_operand(x, pool, mesh)
+        b = jnp.zeros((N,), jnp.float32) if bias is None else bias
+        return _pasm_matmul_ep(
+            x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu, pool
+        )
     if mesh is not None:
         nd, _ = _mesh_sizes(mesh)
         M = x2.shape[0]
@@ -354,7 +445,7 @@ def pasm_matmul(
             y = _shard_gemm(
                 mesh, N,
                 lambda xl, il, cl, bl: _pasm_matmul_ep(
-                    xl, il, cl, bl, t.packed, gather, interpret, relu
+                    xl, il, cl, bl, t.packed, gather, interpret, relu, 1
                 ),
                 (x2, t.idx, t.codebook), x_rank=2, out_rank=2, bias=b,
             )
@@ -363,15 +454,19 @@ def pasm_matmul(
         y = _pasm_matmul(x2, t.idx, t.codebook, t.packed, gather, interpret)
     else:
         b = jnp.zeros((N,), jnp.float32) if bias is None else bias
-        y = _pasm_matmul_ep(x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu)
+        y = _pasm_matmul_ep(
+            x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu, 1
+        )
     return y.reshape(*lead, N)
 
 
-@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
-def _pas_matmul_impl(x, idx, codebook, bias=None, *, relu=False, interpret):
+@functools.partial(jax.jit, static_argnames=("relu", "pool", "interpret"))
+def _pas_matmul_impl(x, idx, codebook, bias=None, *, relu=False, pool=1,
+                     interpret):
     M, K = x.shape
     N = idx.shape[1]
     bm, bn, bk, gs_pad = _pick_blocks(M, K, N, K, packed=False)
+    bm = _pool_bm(bm, pool)
     xp, idxp, cbp, (M, N, _) = _pad_operands(
         x, idx, codebook, bm, bn, gs_pad, packed=False
     )
@@ -380,9 +475,10 @@ def _pas_matmul_impl(x, idx, codebook, bias=None, *, relu=False, interpret):
         bias_row = jnp.pad(bias.astype(jnp.float32), (0, idxp.shape[1] - N))
         bias_row = bias_row.reshape(1, -1)
     out = pas_matmul_kernel_call(
-        xp, idxp, cbp, bias_row, bm=bm, bn=bn, bk=bk, relu=relu, interpret=interpret
+        xp, idxp, cbp, bias_row, bm=bm, bn=bn, bk=bk, relu=relu, pool=pool,
+        interpret=interpret,
     )
-    return out[:M, :N]
+    return out[: M // (pool * pool), :N]
 
 
 def pas_matmul(
@@ -393,13 +489,16 @@ def pas_matmul(
     relu: bool = False,
     interpret: Optional[bool] = None,
     mesh=None,
+    pool: int = 1,
 ) -> jax.Array:
     """Paper-faithful PASM two-phase matmul (single dictionary).
 
-    ``bias (N,)`` / ``relu`` fuse into the post-pass write-through.  With
-    ``mesh=`` rows shard over ``data``, N over ``model`` when divisible; the
-    in-kernel PAS bin counters are per-shard VMEM scratch, so they replicate
-    with the kernel itself.
+    ``bias (N,)`` / ``relu`` fuse into the post-pass write-through, and
+    ``pool > 1`` max-reduces window-major row groups there too (2-D x only,
+    single-device — same contract as :func:`pasm_matmul`).  With ``mesh=``
+    rows shard over ``data``, N over ``model`` when divisible; the in-kernel
+    PAS bin counters are per-shard VMEM scratch, so they replicate with the
+    kernel itself.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -407,6 +506,11 @@ def pas_matmul(
     K, N = t.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
+    if pool > 1:
+        _check_pool_operand(x, pool, mesh)
+        return _pas_matmul_impl(
+            x2, idx, t.codebook, bias, relu=relu, pool=pool, interpret=interpret
+        )
     if mesh is not None:
         nd, _ = _mesh_sizes(mesh)
         M = x2.shape[0]
@@ -475,15 +579,19 @@ def _conv_fwd_impl(
     K/N/groups in :func:`_pick_blocks`, so the implicit kernel walks the
     exact k-tile sequence of the explicit path — that is what makes it
     bit-exact against explicit im2col.  Only ``bm`` differs: it is picked
-    from the *per-image* ``P`` (the conv grid is per-image), so small-P
+    from the *per-image* row count (the conv grid is per-image), so small-P
     layers don't pad each image's output up to a batch-derived 128 rows.
+    ``geom.pool > 1`` switches the rows to window-major (``geom.P_rows``)
+    and aligns ``bm`` to whole pool windows — the k-tile sequence is
+    untouched, so the fused pool stays bit-exact vs conv + reduce_window.
     """
     G, _ = codebook.shape
     K = idx.shape[0] * (2 if packed else 1)
     N = idx.shape[1]
-    P = geom.P
+    P = geom.P_rows
     gs = K // G
     bm, bn, bk, gs_pad = _pick_blocks(P, K, N, gs, packed)
+    bm = _pool_bm(bm, geom.pool)
     idxp, cbp, _ = _pad_weight_operands(idx, codebook, bn, gs_pad, packed)
     xp = _pad_image(x, geom)
     bias_row = None
@@ -501,22 +609,55 @@ def _conv_fwd_impl(
             gs_pad=gs_pad, bm=bm, bn=bn, bk=bk, gather=gather, relu=relu,
             interpret=interpret,
         )
-    return out[:, :P, :N]
+    return out[:, : geom.P_out, :N]
+
+
+def _pool_rowmajor_ref(y, geom, batch):
+    """Row-major conv output ``(B·P, N) → (B·P_out, N)`` pooled reference.
+
+    The backward's oracle for the fused pool: floor-crops to whole windows,
+    max-reduces each ``(pool, pool)`` window.  The pooled VJPs differentiate
+    through this, so ``jnp.max``'s own VJP defines the argmax cotangent
+    routing (remainder rows/cols the fused kernel never computes get zero).
+    """
+    p = geom.pool
+    N = y.shape[-1]
+    yb = y.reshape(batch, geom.oh, geom.ow, N)
+    yb = yb[:, : geom.ohp * p, : geom.owp * p]
+    yb = yb.reshape(batch, geom.ohp, p, geom.owp, p, N)
+    return yb.max(axis=(2, 4)).reshape(batch * geom.P_out, N)
 
 
 def _conv_bwd_core(geom, packed, gather, interpret, relu, res, g):
     """Backward through the implicit conv via explicit col2im (initial scope):
-    materialize patches, reuse the GEMM VJP, scatter back through im2colᵀ."""
-    x, idx, codebook, y = res
+    materialize patches, reuse the GEMM VJP, scatter back through im2colᵀ.
+
+    With ``geom.pool > 1`` the fused forward never stores the pre-pool
+    activations, so they are recomputed here (patches @ w + epilogue) and
+    ``g`` routes through the pool argmax + ReLU masks before the GEMM VJP.
+    The returned cotangent ``g2`` is always the one at the *linear* conv
+    output, so the caller's ``dbias = g2.sum(axis=0)`` holds on both paths.
+    """
+    x, idx, codebook, bias, y = res
     g2 = g.reshape(-1, g.shape[-1])
-    if relu:
-        g2 = g2 * (y.reshape(g2.shape) > 0).astype(g2.dtype)
     K = idx.shape[0] * (2 if packed else 1)
     patches, vjp_patch = jax.vjp(
         functools.partial(_geom_patches, geom=geom), x
     )
     if K != geom.conv_k:  # §3 pack-time K-pad rows carry zero activations
         patches = jnp.pad(patches, ((0, 0), (0, K - geom.conv_k)))
+    if geom.pool > 1:
+        w = _ref.dequant_ref(idx, codebook, packed=packed).astype(patches.dtype)
+        y_lin = jnp.dot(patches, w, preferred_element_type=jnp.float32)
+        _, vjp_post = jax.vjp(
+            lambda yl: _pool_rowmajor_ref(
+                _ref.apply_epilogue(yl, bias, relu), geom, x.shape[0]
+            ),
+            y_lin,
+        )
+        g2, = vjp_post(g2)
+    elif relu:
+        g2 = g2 * (y.reshape(g2.shape) > 0).astype(g2.dtype)
     dp, _, dcb = _pasm_bwd(packed, gather, interpret, (patches, idx, codebook), g2)
     dx, = vjp_patch(dp[:, : geom.conv_k])
     return dx, dcb, g2
@@ -538,7 +679,7 @@ def _pasm_conv_fwd(x, idx, codebook, geom, packed, gather, interpret):
 def _pasm_conv_bwd(geom, packed, gather, interpret, res, g):
     x, idx, codebook = res
     dx, dcb, _ = _conv_bwd_core(
-        geom, packed, gather, interpret, False, (x, idx, codebook, None), g
+        geom, packed, gather, interpret, False, (x, idx, codebook, None, None), g
     )
     return dx, None, dcb
 
@@ -557,14 +698,15 @@ def _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu)
 
 def _pasm_conv_ep_fwd(x, idx, codebook, bias, geom, packed, gather, interpret, relu):
     y = _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu)
-    # y is a residual only for the ReLU mask — don't pin it otherwise
-    return y, (x, idx, codebook, bias, y if relu else None)
+    # y is a residual only for the ReLU mask (and only when unpooled — the
+    # pooled output can't recover the pre-pool mask; the backward recomputes)
+    return y, (x, idx, codebook, bias, y if relu and geom.pool == 1 else None)
 
 
 def _pasm_conv_ep_bwd(geom, packed, gather, interpret, relu, res, g):
     x, idx, codebook, bias, y = res
     dx, dcb, g2 = _conv_bwd_core(
-        geom, packed, gather, interpret, relu, (x, idx, codebook, y), g
+        geom, packed, gather, interpret, relu, (x, idx, codebook, bias, y), g
     )
     dbias = g2.sum(axis=0).astype(bias.dtype)
     return dx, None, dcb, dbias
@@ -589,9 +731,14 @@ def pasm_conv2d(
     One ``pallas_call`` over the (spatially padded) image batch — the im2col
     patch tiles are assembled inside the kernel, so no ``(B·P, K)`` patch
     matrix exists in HBM.  ``bias (N,)`` / ``relu`` fuse into the last-k-step
-    write-through exactly as in :func:`pasm_matmul`.  Differentiable in
-    ``x``, ``t.codebook`` and ``bias`` (the backward pass materializes
-    patches explicitly — col2im — for now).  With ``mesh=`` the image batch
+    write-through exactly as in :func:`pasm_matmul`, and ``geom.pool > 1``
+    additionally max-reduces each ``(pool, pool)`` output window there — the
+    whole conv/ReLU/pool stage is ONE pallas_call and the pre-pool
+    activations never touch HBM.  Differentiable in ``x``, ``t.codebook``
+    and ``bias`` (the backward pass materializes patches explicitly — col2im
+    — and recomputes the pre-pool map for the argmax routing, for now).
+    Pool windows live inside single images, so the fused pool shards over
+    ``data`` unchanged.  With ``mesh=`` the image batch
     shards over ``data`` (the batch must already divide the axis — the
     ``conv2d`` front-end pads uneven remainders) and N over ``model`` when
     divisible; each shard derives its tile plan from the local shapes.
@@ -605,7 +752,7 @@ def pasm_conv2d(
                 f"batch {x.shape[0]} does not divide the data axis ({nd}); "
                 "pad the batch first (conv2d(mesh=) handles the remainder)"
             )
-        if bias is None and not relu:
+        if bias is None and not relu and geom.pool == 1:
             return _shard_gemm(
                 mesh, t.shape[1],
                 lambda xl, il, cl: _pasm_conv(
@@ -621,7 +768,9 @@ def pasm_conv2d(
             ),
             (x, t.idx, t.codebook), x_rank=4, out_rank=3, bias=b,
         )
-    if bias is None and not relu:
+    # geom.pool > 1 always rides the epilogue variant: its VJP owns the
+    # pooled (argmax-routed) backward
+    if bias is None and not relu and geom.pool == 1:
         return _pasm_conv(x, t.idx, t.codebook, geom, t.packed, gather, interpret)
     b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
     return _pasm_conv_ep(
@@ -740,18 +889,27 @@ def conv_hbm_bytes(
     (else the weights replicate, per the sharded dispatch rule), and the
     codebook replicates on every device.  The tile plan is recomputed from
     the local shapes, exactly as each shard does.
+
+    ``geom.pool > 1`` models the **fused conv/ReLU/max-pool stage**: the
+    GEMM walks the window-major ``P_rows`` (floor-remainder pixels never
+    computed) and the store shrinks to the pooled ``P_out`` map — the
+    pre-pool activations never touch HBM, which is exactly the bytes the
+    separate ``reduce_window`` pass would have re-read and re-written.
     """
     K, N = t.shape
     G, B = t.codebook.shape
-    P = geom.P
+    P = geom.P_rows
+    pw = geom.pool * geom.pool
     n_data, n_model = shards
     batch = -(-batch // n_data)  # per-device share, remainder rounded up
     if n_model > 1 and N % n_model == 0:
         N = N // n_model
-    # bm mirrors the kernels: per-image P on the implicit grid, B·P explicit
+    # bm mirrors the kernels: per-image rows on the implicit grid, batch-wide
+    # rows explicit, aligned to whole pool windows when the pool is fused
     bm, bn, bk, gs_pad = _pick_blocks(
         P if implicit else batch * P, K, N, K // G, t.packed
     )
+    bm = _pool_bm(bm, geom.pool)
     Kp = G * gs_pad
     Np = _round_up(N, bn)
     idx_bytes = (Kp // 2 if t.packed else Kp) * Np
@@ -761,11 +919,11 @@ def conv_hbm_bytes(
         (plh, phh), (plw, phw) = geom.pad
         hp, wp = ih + plh + phh, iw + plw + phw
         x_bytes = batch * geom.c_in * hp * wp * act_bytes
-        out_bytes = batch * _round_up(P, bm) * Np * 4
+        out_bytes = batch * _round_up(geom.P_out, bm // pw) * Np * 4
     else:
         Mp = _round_up(batch * P, bm)
         x_bytes = 2 * Mp * Kp * act_bytes  # im2col store + kernel stream
-        out_bytes = Mp * Np * 4
+        out_bytes = (Mp // pw) * Np * 4
     return x_bytes + idx_bytes + cb_bytes + out_bytes
 
 

@@ -36,18 +36,22 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 from repro.kernels.pasm_matmul import ConvGeom, patch_tile
+from repro.kernels.ref import max_pool_rows
 
 __all__ = ["pas_matmul_kernel_call", "pas_conv_kernel_call"]
 
 
 def _pas_step(
     x_tile, idx_ref, cb_ref, b_ref, o_ref, s_ref, *, k, n_k: int, bins: int,
-    relu: bool,
+    relu: bool, pool: int = 1,
 ):
     """The shared per-k-step body of BOTH entry points: PAS-phase one-hot
     accumulate into the VMEM bin scratch, then the post-pass multiply (plus
     the fused bias/ReLU epilogue) at the last k step only.  ``o_ref`` may
-    carry a leading length-1 batch axis (the conv grid)."""
+    carry a leading length-1 batch axis (the conv grid).  ``pool > 1``
+    max-reduces each group of ``pool²`` window-major rows in the post-pass
+    write-through (the fused max-pool epilogue) — the bin scratch already
+    holds the whole pre-pool block, so no extra accumulator is needed."""
     idx = idx_ref[...]  # (bk, bn)
     bm, bk = x_tile.shape
     bn = idx.shape[1]
@@ -70,10 +74,11 @@ def _pas_step(
             y = y + b_ref[...]  # (1, bn) broadcasts over rows
         if relu:
             y = jnp.maximum(y, 0.0)
-        o_ref[...] = y.reshape(o_ref.shape)
+        o_ref[...] = max_pool_rows(y, pool).reshape(o_ref.shape)
 
 
-def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
+def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool,
+            pool: int):
     b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
     k = pl.program_id(2)
 
@@ -83,7 +88,7 @@ def _kernel(x_ref, idx_ref, cb_ref, *rest, bins: int, n_k: int, relu: bool):
 
     _pas_step(
         x_ref[...], idx_ref, cb_ref, b_ref, o_ref, s_ref,
-        k=k, n_k=n_k, bins=bins, relu=relu,
+        k=k, n_k=n_k, bins=bins, relu=relu, pool=pool,
     )
 
 
@@ -97,18 +102,23 @@ def pas_matmul_kernel_call(
     bn: int = 128,
     bk: int = 512,
     relu: bool = False,
+    pool: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
     """``x (M,K) · idx (K,N) · codebook (1,B) → (M,N) f32`` (single dictionary).
 
     Paper-faithful: one dictionary per layer (groups == 1).  ``bias (1, N)``
-    and ``relu`` fuse into the post-pass.  Shape preconditions as for
+    and ``relu`` fuse into the post-pass; ``pool > 1`` expects window-major
+    rows and max-reduces each ``pool²`` group there too, returning the
+    pooled ``(M/pool², N)``.  Shape preconditions as for
     :func:`pasm_matmul_kernel_call`.
     """
     M, K = x.shape
     N = idx.shape[1]
     G, B = codebook.shape
     assert G == 1, "PAS-formulation kernel is paper-faithful: one dictionary"
+    pw = pool * pool
+    assert bm % pw == 0 and M % pw == 0, (bm, M, pool)
     n_k = K // bk
 
     in_specs = [
@@ -123,11 +133,11 @@ def pas_matmul_kernel_call(
         operands.append(bias)
 
     return pl.pallas_call(
-        functools.partial(_kernel, bins=B, n_k=n_k, relu=relu),
+        functools.partial(_kernel, bins=B, n_k=n_k, relu=relu, pool=pool),
         grid=(M // bm, N // bn, n_k),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_specs=pl.BlockSpec((bm // pw, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M // pw, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
@@ -155,7 +165,7 @@ def _conv_kernel(
     )
     _pas_step(
         patch, idx_ref, cb_ref, b_ref, o_ref, s_ref,
-        k=k, n_k=n_k, bins=bins, relu=relu,
+        k=k, n_k=n_k, bins=bins, relu=relu, pool=geom.pool,
     )
 
 
@@ -177,8 +187,9 @@ def pas_conv_kernel_call(
     """Implicit-GEMM conv on the paper-faithful two-phase formulation.
 
     ``x (B, img...)`` padded per ``geom`` · ``idx (Kp, Np)`` · ``codebook
-    (1, B)`` → ``(B, Pp, Np) f32`` (real rows sliced by the caller).  Single
-    dictionary only, like :func:`pas_matmul_kernel_call`.
+    (1, B)`` → ``(B, Pp, Np) f32`` (real rows sliced by the caller; pooled
+    when ``geom.pool > 1``, the fused max-pool epilogue riding the
+    post-pass).  Single dictionary only, like :func:`pas_matmul_kernel_call`.
     """
     B_img = x.shape[0]
     G, B = codebook.shape
@@ -186,8 +197,11 @@ def pas_conv_kernel_call(
     Np = idx.shape[1]
     Kp = idx.shape[0]
     assert Kp == gs_pad and gs_pad % bk == 0, (Kp, gs_pad, bk)
+    pw = geom.pool * geom.pool
+    assert bm % pw == 0, (bm, geom.pool)
+    bmp = bm // pw  # stored (pooled) rows per block
     n_k = Kp // bk
-    Pp = (geom.P + bm - 1) // bm * bm
+    Pp = (geom.P_out + bmp - 1) // bmp * bmp
 
     img_block = (1,) + x.shape[1:]
     in_specs = [
@@ -206,9 +220,9 @@ def pas_conv_kernel_call(
             _conv_kernel, geom=geom, bins=B, n_k=n_k, relu=relu,
             bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
         ),
-        grid=(B_img, Pp // bm, Np // bn, n_k),
+        grid=(B_img, Pp // bmp, Np // bn, n_k),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_specs=pl.BlockSpec((1, bmp, bn), lambda b, i, j, k: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((B_img, Pp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn, B), jnp.float32)],
         compiler_params=CompilerParams(

@@ -44,6 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.ref import max_pool_rows
 
 __all__ = ["pasm_matmul_kernel_call", "pasm_conv_kernel_call", "ConvGeom",
            "patch_tile"]
@@ -56,7 +57,11 @@ class ConvGeom(NamedTuple):
     static args and ``custom_vjp`` nondiff args.  ``pad`` is the spatial
     zero-pad already applied to the image the kernel sees
     (``((lo_h, hi_h), (lo_w, hi_w))`` — SAME windowing happens *outside*,
-    the kernel only ever gathers in-bounds).
+    the kernel only ever gathers in-bounds).  ``pool > 1`` fuses a
+    non-overlapping ``(pool, pool)`` max-pool into the kernel epilogue:
+    GEMM rows switch to **window-major** order (each consecutive ``pool²``
+    rows are one pool window) and the output is the pooled ``P_out`` map —
+    pre-pool activations never leave VMEM (DESIGN.md §3.2).
     """
 
     nhwc: bool  # channels-minor (kkc) vs paper (ckk) reduction order
@@ -67,16 +72,39 @@ class ConvGeom(NamedTuple):
     ow: int
     c_in: int
     pad: tuple
+    pool: int = 1  # fused non-overlapping max-pool window (1 = no pooling)
 
     @property
     def P(self) -> int:
-        """Output pixels per image."""
+        """Pre-pool output pixels per image."""
         return self.oh * self.ow
 
     @property
     def conv_k(self) -> int:
         """The true im2col reduction length ``c_in·ky·kx``."""
         return self.c_in * self.ky * self.kx
+
+    @property
+    def ohp(self) -> int:
+        """Pooled output height (floor / VALID windowing)."""
+        return self.oh // self.pool
+
+    @property
+    def owp(self) -> int:
+        """Pooled output width (floor / VALID windowing)."""
+        return self.ow // self.pool
+
+    @property
+    def P_out(self) -> int:
+        """Stored output pixels per image (``== P`` when ``pool == 1``)."""
+        return self.ohp * self.owp
+
+    @property
+    def P_rows(self) -> int:
+        """GEMM rows per image: window pixels only — floor-dropped remainder
+        rows/cols of the pre-pool map are never computed (``== P`` when
+        ``pool == 1``)."""
+        return self.P_out * self.pool * self.pool
 
 
 def _dequant_tile(idx_tile, cb_row, gather: str, dtype):
@@ -114,11 +142,24 @@ def patch_tile(img, m0, q0, *, geom: ConvGeom, bm: int, bk: int, gs: int,
       with ``g·gs + r >= conv_k`` the §3 pack-time K-pad — both read **zero**
       (the in-kernel analogue of the zero patch columns the explicit path
       pads in), pairing with the reserved zero-codebook bin.  M-pad rows
-      (``p >= P``) clamp to the last pixel and are sliced off outside.
+      clamp to the last pixel/window and are sliced off outside.
+
+    With ``geom.pool > 1`` rows are **window-major**: row ``m`` is within-
+    window offset ``s = m % pool²`` of pooled pixel ``pp = m // pool²``, so
+    each consecutive ``pool²`` rows form one pool window and the fused
+    epilogue can max-reduce them with a pure reshape.  M-pad rows clamp at
+    *window* granularity (``pp`` clamps, ``s`` keeps cycling), so a pad
+    window replays the last valid window — never a mix of valid and garbage
+    rows, which is what makes the pooled write-through safe without any
+    ``-inf`` row masking.  ``pool == 1`` degenerates to the row-major pixel
+    unmapping exactly (``pp = m``, ``s = 0``).
     """
-    p = m0 + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
-    p = jnp.minimum(p, geom.P - 1)
-    oy, ox = p // geom.ow, p % geom.ow
+    m = m0 + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    pw = geom.pool * geom.pool
+    pp = jnp.minimum(m // pw, geom.P_out - 1)
+    s = m % pw
+    oy = (pp // geom.owp) * geom.pool + s // geom.pool
+    ox = (pp % geom.owp) * geom.pool + s % geom.pool
     q = q0 + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
     g, r = q // gs_pad, q % gs_pad
     ql = g * gs + jnp.minimum(r, gs - 1)
@@ -140,8 +181,8 @@ def patch_tile(img, m0, q0, *, geom: ConvGeom, bm: int, bk: int, gs: int,
 
 
 def _fused_dequant_step(
-    x_tile, idx_ref, cb_ref, b_ref, o_ref, *, k, n_k: int, packed: bool,
-    gather: str, relu: bool,
+    x_tile, idx_ref, cb_ref, b_ref, o_ref, acc_ref=None, *, k, n_k: int,
+    packed: bool, gather: str, relu: bool, pool: int = 1,
 ):
     """The shared per-k-step body of BOTH entry points: unpack+dequant the
     idx tile, accumulate ``x_tile @ w``, and fuse the bias-add / ReLU
@@ -149,39 +190,67 @@ def _fused_dequant_step(
     bias+activation stays a single pallas_call.  ``o_ref`` may carry a
     leading length-1 batch axis (the conv grid); the accumulate reshapes to
     it and ``(1, bn)`` bias broadcasting covers both ranks.
+
+    ``pool > 1`` additionally max-reduces each group of ``pool²``
+    window-major rows in the write-through (after bias/ReLU, matching the
+    unfused conv→epilogue→``reduce_window`` order), so the stored block is
+    the pooled ``(bm/pool², bn)`` shape and the pre-pool activations never
+    leave VMEM.  The pre-pool accumulator then lives in the ``acc_ref``
+    VMEM scratch instead of ``o_ref`` (their shapes differ).
     """
     idx_tile = idx_ref[...]
     if packed:
         idx_tile = _unpack_int4_tile(idx_tile)
     w = _dequant_tile(idx_tile, cb_ref[0], gather, x_tile.dtype)
     acc = jnp.dot(x_tile, w, preferred_element_type=jnp.float32)
-    o_ref[...] += acc.reshape(o_ref.shape)
+    if pool == 1:
+        o_ref[...] += acc.reshape(o_ref.shape)
 
-    if b_ref is not None or relu:
+        if b_ref is not None or relu:
 
-        @pl.when(k == n_k - 1)
-        def _finish():
-            y = o_ref[...]
-            if b_ref is not None:
-                y = y + b_ref[...]  # (1, bn) broadcasts over rows
-            if relu:
-                y = jnp.maximum(y, 0.0)
-            o_ref[...] = y
+            @pl.when(k == n_k - 1)
+            def _finish():
+                y = o_ref[...]
+                if b_ref is not None:
+                    y = y + b_ref[...]  # (1, bn) broadcasts over rows
+                if relu:
+                    y = jnp.maximum(y, 0.0)
+                o_ref[...] = y
+
+        return
+    acc_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _finish_pooled():
+        y = acc_ref[...]
+        if b_ref is not None:
+            y = y + b_ref[...]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = max_pool_rows(y, pool).reshape(o_ref.shape)
 
 
 def _kernel(
-    x_ref, idx_ref, cb_ref, *rest, packed: bool, gather: str, n_k: int, relu: bool
+    x_ref, idx_ref, cb_ref, *rest, packed: bool, gather: str, n_k: int,
+    relu: bool, pool: int,
 ):
+    if pool > 1:
+        acc_ref, rest = rest[-1], rest[:-1]
+    else:
+        acc_ref = None
     b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _zero():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        if pool > 1:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            o_ref[...] = jnp.zeros_like(o_ref)
 
     _fused_dequant_step(
-        x_ref[...], idx_ref, cb_ref, b_ref, o_ref,
-        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu,
+        x_ref[...], idx_ref, cb_ref, b_ref, o_ref, acc_ref,
+        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu, pool=pool,
     )
 
 
@@ -198,14 +267,19 @@ def pasm_matmul_kernel_call(
     bk: int = 512,
     gather: str = "take",
     relu: bool = False,
+    pool: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call; shape plumbing/padding lives in :mod:`repro.kernels.ops`.
 
     ``x (M, K) · idx (K or K//2, N) · codebook (G, B) → (M, N) f32``.
     ``bias (1, N)`` and ``relu`` are the fused epilogue, applied inside the
-    last reduction step.  Preconditions (enforced by ops.py):
-    M % bm == N % bn == K % bk == 0, group_size % bk == 0, bk even when packed.
+    last reduction step.  ``pool > 1`` expects **window-major** x rows (each
+    consecutive ``pool²`` rows one max-pool window — the conv2d front-end's
+    ordering) and returns the pooled ``(M/pool², N)``, max-reduced in the
+    same write-through.  Preconditions (enforced by ops.py):
+    M % bm == N % bn == K % bk == 0, group_size % bk == 0, bk even when
+    packed, bm % pool² == 0.
     """
     M, K = x.shape
     N = idx.shape[1]
@@ -213,6 +287,8 @@ def pasm_matmul_kernel_call(
     G, B = codebook.shape
     group_size = K // G
     assert group_size % bk == 0, (group_size, bk)
+    pw = pool * pool
+    assert bm % pw == 0 and M % pw == 0, (bm, M, pool)
     n_k = K // bk
 
     # index maps return BLOCK indices (scaled by block_shape internally)
@@ -231,11 +307,14 @@ def pasm_matmul_kernel_call(
         operands.append(bias)
 
     return pl.pallas_call(
-        functools.partial(_kernel, packed=packed, gather=gather, n_k=n_k, relu=relu),
+        functools.partial(
+            _kernel, packed=packed, gather=gather, n_k=n_k, relu=relu, pool=pool
+        ),
         grid=(M // bm, N // bn, n_k),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_specs=pl.BlockSpec((bm // pw, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M // pw, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)] if pool > 1 else [],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
@@ -249,20 +328,27 @@ def _conv_kernel(
 ):
     """Implicit-GEMM body: gather the patch tile instead of reading an
     explicit x block, then the same :func:`_fused_dequant_step`."""
+    if geom.pool > 1:
+        acc_ref, rest = rest[-1], rest[:-1]
+    else:
+        acc_ref = None
     b_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
     k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _zero():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        if geom.pool > 1:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            o_ref[...] = jnp.zeros_like(o_ref)
 
     patch = patch_tile(
         x_ref[0], pl.program_id(1) * bm, k * bk,
         geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
     )
     _fused_dequant_step(
-        patch, idx_ref, cb_ref, b_ref, o_ref,
-        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu,
+        patch, idx_ref, cb_ref, b_ref, o_ref, acc_ref,
+        k=k, n_k=n_k, packed=packed, gather=gather, relu=relu, pool=geom.pool,
     )
 
 
@@ -286,13 +372,16 @@ def pasm_conv_kernel_call(
     """Implicit-GEMM conv pallas_call: the image IS the ``x`` operand.
 
     ``x (B, img...)`` spatially padded per ``geom`` · ``idx (Kp or Kp//2, Np)``
-    · ``codebook (G, B)`` → ``(B, Pp, Np) f32`` where ``Pp`` rounds ``geom.P``
-    up to ``bm`` (real rows sliced off by the caller).  One whole padded
-    image is the per-grid-step ``x`` block — resident in VMEM across the
-    entire ``(i, j, k)`` tile loop of its batch element, so HBM streams the
-    image once per reuse window instead of ``ky·kx/stride²``× as patch rows.
-    Preconditions (enforced by ops.py): ``gs_pad % bk == 0``, ``Np % bn == 0``,
-    bias ``(1, Np)``.
+    · ``codebook (G, B)`` → ``(B, Pp, Np) f32`` where ``Pp`` rounds
+    ``geom.P_out`` up to the per-block *output* rows (real rows sliced off by
+    the caller).  One whole padded image is the per-grid-step ``x`` block —
+    resident in VMEM across the entire ``(i, j, k)`` tile loop of its batch
+    element, so HBM streams the image once per reuse window instead of
+    ``ky·kx/stride²``× as patch rows.  With ``geom.pool > 1`` the grid walks
+    window-major pre-pool rows (``bm`` per block) but stores only the pooled
+    ``bm/pool²`` rows — the fused conv/ReLU/max-pool stage.  Preconditions
+    (enforced by ops.py): ``gs_pad % bk == 0``, ``Np % bn == 0``,
+    ``bm % pool² == 0``, bias ``(1, Np)``.
     """
     B_img = x.shape[0]
     G, B = codebook.shape
@@ -300,8 +389,11 @@ def pasm_conv_kernel_call(
     Kp = idx.shape[0] * (2 if packed else 1)
     assert Kp == G * gs_pad, (Kp, G, gs_pad)
     assert gs_pad % bk == 0, (gs_pad, bk)
+    pw = geom.pool * geom.pool
+    assert bm % pw == 0, (bm, geom.pool)
+    bmp = bm // pw  # stored (pooled) rows per block
     n_k = Kp // bk
-    Pp = (geom.P + bm - 1) // bm * bm
+    Pp = (geom.P_out + bmp - 1) // bmp * bmp
     blocks_per_group = gs_pad // bk
 
     img_block = (1,) + x.shape[1:]
@@ -322,10 +414,13 @@ def pasm_conv_kernel_call(
             _conv_kernel, geom=geom, packed=packed, gather=gather, n_k=n_k,
             relu=relu, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
         ),
-        grid=(B_img, Pp // bm, Np // bn, n_k),
+        grid=(B_img, Pp // bmp, Np // bn, n_k),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_specs=pl.BlockSpec((1, bmp, bn), lambda b, i, j, k: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((B_img, Pp, Np), jnp.float32),
+        scratch_shapes=(
+            [pltpu.VMEM((bm, bn), jnp.float32)] if geom.pool > 1 else []
+        ),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.core import pasm as _pasm
 
 __all__ = ["pasm_matmul_ref", "pas_matmul_ref", "dequant_ref", "apply_epilogue",
-           "im2col_patches"]
+           "im2col_patches", "max_pool_rows"]
 
 
 def im2col_patches(
@@ -55,6 +55,20 @@ def apply_epilogue(y: jax.Array, bias, relu: bool) -> jax.Array:
     if relu:
         y = jnp.maximum(y, 0)
     return y
+
+
+def max_pool_rows(y: jax.Array, pool: int) -> jax.Array:
+    """Window-major row pooling: ``(R·pool², N) → (R, N)`` max per group.
+
+    The oracle of the kernels' fused max-pool epilogue (each consecutive
+    ``pool²`` rows are one non-overlapping pool window) — also the function
+    the pooled custom VJPs differentiate through, so the backward's argmax
+    routing is *defined* by this reduction.
+    """
+    if pool == 1:
+        return y
+    pw = pool * pool
+    return y.reshape(y.shape[0] // pw, pw, y.shape[1]).max(axis=1)
 
 
 def dequant_ref(idx: jax.Array, codebook: jax.Array, *, packed: bool) -> jax.Array:

@@ -7,8 +7,10 @@ paper's one-dictionary-per-layer rule), followed by a dense classifier head
 (fully-connected layers are outside the paper's conv accelerator and stay
 dense).  Every stage is one :class:`repro.core.conv.ConvParams` +
 :class:`~repro.core.conv.Conv2D` pair dispatched through
-:func:`repro.core.conv.conv2d`; on the Pallas engines bias+ReLU fuse into the
-kernel, so each batched conv layer is a single ``pallas_call``.
+:func:`repro.core.conv.conv2d`; on the Pallas engines bias+ReLU — and the
+stage's max-pool (``conv2d(pool=)``, DESIGN.md §3.2) — fuse into the kernel,
+so each batched conv/ReLU/pool stage is a single ``pallas_call`` whose store
+is already the pooled map.
 
 ``cfg.padding``/``cfg.layout`` apply stack-wide (``same``+``NHWC`` gives
 torchvision-exact geometry on the TPU-native layout); ``cfg.packed``
@@ -137,12 +139,12 @@ def quantize(params: dict, cfg: CNNConfig, *, iters: int = 16, mesh=None) -> dic
     return _place(out, mesh) if mesh is not None else out
 
 
-def _max_pool(x: jax.Array, p: int, layout: str) -> jax.Array:
-    """Non-overlapping max pool, VALID (floor) windowing, layout-aware."""
-    if p == 1:
-        return x
-    window = (1, p, p, 1) if layout == "NHWC" else (1, 1, p, p)
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, window, "VALID")
+# NOTE: the former ``_max_pool`` helper is gone — conv stages pass ``pool=``
+# straight to :func:`repro.core.conv.conv2d` (fused into the kernel epilogue
+# where possible), and the standalone fallback is the public
+# :func:`repro.core.conv.max_pool2d` (dtype-correct window init: ``iinfo``
+# minimum for integer/quantized maps, ``-inf`` — the differentiable max
+# identity — for floats).
 
 
 def _head(x: jax.Array, head: dict, mesh=None) -> jax.Array:
@@ -191,9 +193,16 @@ def forward(
     paper-faithful two-phase ``pas_matmul`` (all with the bias/ReLU epilogue
     fused into the pallas_call), ``einsum`` the pure-XLA reference port.
 
+    Each stage's max-pool rides ``conv2d(pool=)``: on the Pallas engines the
+    pool fuses into the conv kernel's epilogue (one ``pallas_call`` per
+    conv/ReLU/pool stage, pre-pool activations never in HBM — DESIGN.md
+    §3.2), with the bit-exact ``reduce_window`` fallback wherever fusion is
+    impossible; ``cfg.pool_impl`` pins the policy.
+
     ``mesh=`` runs every conv layer sharded (``conv2d(mesh=)``: batch over
-    ``data``, output channels over ``model``); pooling and the dense head
-    ride the sharded activations under XLA's sharding propagation.
+    ``data``, output channels over ``model``); the fused pool shards with
+    the images (windows live inside one image), the fallback and the dense
+    head ride the sharded activations under XLA's sharding propagation.
     ``cfg.vmem_budget`` tunes the ``auto`` engine's implicit-GEMM budget.
     """
     if cfg.impl not in _IMPLS:
@@ -203,8 +212,8 @@ def forward(
     x = images
     for p, (conv, pool) in zip(params["conv"], stages(cfg)):
         x = _conv.conv2d(x, p, conv, engine=cfg.impl, interpret=interpret,
-                         mesh=mesh, vmem_budget=cfg.vmem_budget)
-        x = _max_pool(x, pool, cfg.layout)
+                         mesh=mesh, vmem_budget=cfg.vmem_budget, pool=pool,
+                         pool_impl=cfg.pool_impl)
     return _head(x, params["head"], mesh=mesh)
 
 
@@ -214,8 +223,8 @@ def forward_dense(
     """Reference forward on the dense master weights (no weight sharing)."""
     x = images
     for p, (conv, pool) in zip(params["conv"], stages(cfg)):
-        x = _conv.conv2d(x, p, conv, engine="einsum", mesh=mesh)
-        x = _max_pool(x, pool, cfg.layout)
+        x = _conv.conv2d(x, p, conv, engine="einsum", mesh=mesh, pool=pool)
+        # einsum is pure XLA: conv2d pools via the reduce_window fallback
     return _head(x, params["head"], mesh=mesh)
 
 

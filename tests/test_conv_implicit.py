@@ -201,6 +201,35 @@ def test_implicit_jaxpr_has_no_patch_matrix(engine):
     assert _patch_reshapes(pre_e, P, K)
 
 
+def test_fused_pool_cnn_forward_one_pallas_call_per_stage():
+    """PR 5 regression: with the fused pool config, every conv/ReLU/pool
+    stage of ``cnn.forward`` lowers to exactly ONE pallas_call and no
+    ``reduce_window`` appears between conv stages (the smoke stack pools
+    every stage, including the odd 13×13 → 6×6 floor of layer 2); forcing
+    ``pool_impl='unfused'`` restores one reduce_window per stage, so the
+    assertion is meaningful."""
+    import dataclasses as dc
+
+    from repro.configs import get_cnn_config
+    from repro.models import cnn
+
+    cfg = dc.replace(get_cnn_config("alexnet", smoke=True),
+                     impl="kernel_implicit")
+    params = cnn.quantize(cnn.init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.in_chw))
+
+    def names_of(c):
+        return [e.primitive.name for e in _iter_eqns(jax.make_jaxpr(
+            lambda x: cnn.forward(params, x, c, interpret=True))(imgs).jaxpr)]
+
+    names = names_of(cfg)
+    assert names.count("pallas_call") == len(cfg.layers), names
+    assert not any("reduce_window" in n or "select_and" in n for n in names)
+    names_u = names_of(dc.replace(cfg, pool_impl="unfused"))
+    assert names_u.count("pallas_call") == len(cfg.layers)
+    assert sum("reduce_window" in n for n in names_u) == len(cfg.layers)
+
+
 def test_auto_prefers_implicit_and_falls_back(monkeypatch):
     conv = cv.Conv2D(k=3, c_in=4, c_out=8, stride=1, padding="same")
     imgs, kern, _ = _mk(conv, hw=(9, 9))

@@ -21,6 +21,9 @@ Covers the multi_layer_refactor acceptance criteria:
 * the AlexNet-style stack forward runs end-to-end under shard_map with the
   models/sharding.py pspecs (idx/bias really sharded — no replicated
   fallback), bit-exact vs the single-device stack.
+* the fused conv/ReLU/max-pool stage (PR 5) under a mesh: implicit engines
+  fuse and stay bit-exact (pool windows live inside ``data``-sharded
+  images), the explicit engine's ``auto`` falls back to ``reduce_window``.
 * ``models/sharding.py`` CNN pspec rules and ``ops.conv_hbm_bytes(shards=)``
   per-device traffic accounting.
 """
@@ -109,6 +112,43 @@ def test_sharded_bitexact_nhwc_stride():
         got = cv.conv2d(imgs, p, conv, engine=engine, interpret=True, mesh=mesh)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
                                       err_msg=engine)
+
+
+def test_sharded_fused_pool_bitexact():
+    """The fused conv/ReLU/max-pool stage under a mesh (PR 5): the implicit
+    engines fuse — pool windows live inside ``data``-sharded images — and
+    stay bit-exact vs the single-device fused call on (4, 1) and (2, 2)
+    meshes, uneven batch included; the explicit engine's ``auto`` dispatch
+    falls back to reduce_window (shard boundaries could split its patch
+    rows) and still matches, while demanding fusion there raises."""
+    conv = cv.Conv2D(k=3, c_in=5, c_out=8, stride=1, padding="same", relu=True)
+    imgs, kern, bias = _mk(conv)
+    p = cv.ConvParams.quantize(kern, 16, bias=bias)
+    want = cv.conv2d(imgs, p, conv, engine="kernel_implicit", interpret=True,
+                     pool=2, pool_impl="fused")
+    for mesh_shape in ((4, 1), (2, 2)):
+        mesh = _mesh(mesh_shape)
+        got = cv.conv2d(imgs, p, conv, engine="kernel_implicit",
+                        interpret=True, pool=2, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=str(mesh_shape))
+    mesh = _mesh((4, 1))
+    # uneven batch: compare against the padded single-device fused run (the
+    # sharded semantic, as in test_uneven_batch_remainder)
+    imgs6 = imgs[:6]
+    got6 = cv.conv2d(imgs6, p, conv, engine="kernel_implicit", interpret=True,
+                     pool=2, mesh=mesh)
+    padded = jnp.pad(imgs6, ((0, 2),) + ((0, 0),) * 3)
+    want6 = cv.conv2d(padded, p, conv, engine="kernel_implicit",
+                      interpret=True, pool=2)[:6]
+    np.testing.assert_array_equal(np.asarray(got6), np.asarray(want6))
+    # explicit engine under a mesh: auto falls back, bit-exact either way
+    got_e = cv.conv2d(imgs, p, conv, engine="kernel", interpret=True, pool=2,
+                      mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want))
+    with pytest.raises(ValueError, match="fused"):
+        cv.conv2d(imgs, p, conv, engine="kernel", interpret=True, pool=2,
+                  pool_impl="fused", mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
