@@ -6,23 +6,53 @@ shape, the bytes a decode step must move under dense-bf16 vs PASM-uint8 vs
 PASM-int4 storage, the implied v5e memory-roofline time, and measured
 wall-times of the dequant (weight-shared) and PAS (paper-faithful)
 formulations on this host.
+
+Run directly it also emits ``BENCH_dense.json``: per transformer-layer rows
+(modeled weight-stream bytes from :func:`repro.core.hwmodel
+.dense_weight_stream_bytes`, with ``bins``/``bits``/``groups`` and the
+container's ``compression_ratio`` stamped on every quantized row), plus
+measured ``nn.layers.linear`` timings over :class:`~repro.core.params
+.PasmParams` on this host — the dense-side counterpart of
+``conv_bench.py``/BENCH_conv.json, gated by scripts/ci.sh (packed must model
+strictly fewer bytes than dense bf16).
+
+    PYTHONPATH=src python benchmarks/pasm_roofline.py [--smoke] [--json [PATH]]
 """
 from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))  # direct-script runs: make `benchmarks` importable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import pas, pasm
+from repro.core import hwmodel, pas, pasm
+from repro.core.params import PasmParams
 from repro.kernels import ops
+from repro.nn import layers as L
 from repro.roofline import HBM_BW
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import bench_row, emit, time_us
 
 SHAPES = [
     ("qwen3.ffn", 5120, 25_600),
     ("kimi.expert", 7168, 2048),
     ("stablelm.attn", 2560, 2560),
 ]
+
+_RECORDS: list = []
+
+
+def record(name, us, derived="", **kw) -> None:
+    _RECORDS.append(bench_row(name, us, derived=derived, **kw))
+    emit(name, us, derived, kw.get("hbm_bytes"))
 
 
 def weight_bytes_table():
@@ -72,3 +102,101 @@ def kernel_oracle_check():
     want = ref.pasm_matmul_ref(x, t.idx, t.codebook, packed=t.packed)
     err = float(jnp.abs(got - want).max())
     emit("pasm_kernel.allclose", 0.0, f"max_err={err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# BENCH_dense.json: modeled weight-stream bytes + measured linear() timings
+# ---------------------------------------------------------------------------
+
+
+def dense_layer_byte_rows(*, decode_T: int = 1) -> None:
+    """Modeled HBM bytes per layer storage kind (hwmodel, no execution).
+
+    One row per (layer shape × storage): dense bf16, PASM uint8 (B=16),
+    PASM int4-packed (B=16, G=1) and grouped int4 (G=8) — decode regime
+    (``T = decode_T`` tokens), where the weight stream dominates.
+    """
+    for name, K, N in SHAPES:
+        dense = hwmodel.dense_hbm_traffic(T=decode_T, K=K, N=N, dense=True)
+        record(f"dense_bytes.{name}.dense_bf16", 0.0, "modeled, decode T=1",
+               hbm_bytes=dense, bins=None, bits=None, groups=None)
+        for label, bins, groups, packed in (
+            ("uint8", 256, 1, False),
+            ("int4", 16, 1, True),
+            ("int4_g8", 16, 8, True),
+        ):
+            b = hwmodel.dense_hbm_traffic(
+                T=decode_T, K=K, N=N, bins=bins, groups=groups, packed=packed
+            )
+            w_dense = hwmodel.dense_weight_stream_bytes(K, N, dense=True)
+            w_q = hwmodel.dense_weight_stream_bytes(
+                K, N, bins=bins, groups=groups, packed=packed
+            )
+            record(
+                f"dense_bytes.{name}.{label}", 0.0,
+                f"modeled, decode T=1; weight stream {w_dense / w_q:.2f}x smaller",
+                hbm_bytes=b, bins=bins, bits=4 if packed else 8, groups=groups,
+                compression_ratio=round(w_dense / w_q, 3),
+            )
+
+
+def linear_formulation_rows(*, smoke: bool = True) -> None:
+    """Measured: one transformer FFN-ish linear through every PasmParams path."""
+    K, N, T = (512, 1024, 16) if smoke else (2048, 8192, 64)
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * K ** -0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, K))
+    shared = PasmParams.quantize(w, bins=16)
+    packed = shared.pack()
+    grouped = PasmParams.quantize(w, bins=16, groups=8)
+    iters = 3 if smoke else 20
+
+    t_dense = time_us(jax.jit(lambda x: L.linear(x, w, "dense")), x, iters=iters)
+    record(f"dense_linear.dense.K{K}N{N}", t_dense,
+           hbm_bytes=hwmodel.dense_hbm_traffic(T=T, K=K, N=N, dense=True),
+           bins=None, bits=None, groups=None)
+    for label, p, impl in (
+        ("dequant", shared, "dequant"),
+        ("kernel", shared, "kernel"),
+        ("kernel_packed", packed, "kernel"),
+        ("kernel_g8", grouped, "kernel"),
+        ("pas_kernel", shared, "pas_kernel"),
+    ):
+        t = time_us(jax.jit(lambda x, p=p, i=impl: L.linear(x, p, i)), x,
+                    iters=iters)
+        record(
+            f"dense_linear.{label}.K{K}N{N}", t,
+            f"vs dense {t / t_dense:.2f}x",
+            hbm_bytes=hwmodel.dense_hbm_traffic(
+                T=T, K=K, N=N, bins=p.bins, groups=p.groups, packed=p.packed
+            ),
+            bins=p.bins, bits=p.bits, groups=p.groups,
+            compression_ratio=round(p.compression_ratio, 3),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: small measured shapes, few iterations")
+    ap.add_argument("--json", nargs="?", const="BENCH_dense.json", default=None,
+                    metavar="PATH", help="also write rows to a JSON file "
+                    "(default BENCH_dense.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,hbm_bytes,derived")
+    dense_layer_byte_rows()
+    linear_formulation_rows(smoke=args.smoke)
+    if args.json:
+        payload = {
+            "benchmark": "dense",
+            "smoke": bool(args.smoke),
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "devices": 1,
+            "records": _RECORDS,
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {len(_RECORDS)} records to {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

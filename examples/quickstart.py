@@ -1,17 +1,20 @@
-"""Quickstart: the PASM identity end to end in 60 lines.
+"""Quickstart: the PASM identity end to end in 80 lines.
 
 1. Reproduce the paper's Fig 4 / Fig 6 worked example.
 2. Weight-share a real weight matrix (k-means dictionary, Han et al. style).
 3. Run the fused Pallas PASM kernel against the weight-shared baseline.
 4. Show the HBM weight-byte reduction that motivates PASM on TPU.
+5. PasmParams: the one container from conv to transformer — per-layer
+   compression ratios and the unified linear() dispatch.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import pas, pasm
+from repro.core import PasmParams, pas, pasm
 from repro.kernels import ops, ref
+from repro.nn import layers as L
 
 # -- 1. the paper's worked example (Figures 4 and 6) ------------------------
 x = jnp.array([26.7, 3.4, 4.8, 17.7, 6.1])
@@ -49,3 +52,27 @@ print(
     f"\ndecode-step weight traffic: {dense_bytes} B (bf16) → {pasm_bytes} B (PASM)"
     f" = {dense_bytes / pasm_bytes:.1f}x less HBM traffic in the bandwidth-bound regime"
 )
+
+# -- 5. PasmParams: one container, every layer -------------------------------
+# The same tagged quantize/pack container drives conv2d AND every dense
+# matmul in the zoo (nn.layers.linear → kernels/ops).  Per-layer report:
+D, F = 256, 1024
+layers = {
+    "attn.wqkv": PasmParams.quantize(
+        jax.random.normal(jax.random.PRNGKey(2), (D, 3 * D)), bins=16
+    ).pack(),
+    "ffn.w1": PasmParams.quantize(
+        jax.random.normal(jax.random.PRNGKey(3), (D, F)), bins=16, groups=4
+    ),
+    "ffn.w2": PasmParams.dense(jax.random.normal(jax.random.PRNGKey(4), (F, D))),
+}
+print("\nPasmParams per-layer compression (vs bf16):")
+for name, p in layers.items():
+    print(
+        f"  {name:10s} kind={p.kind:6s} bins={p.bins} bits={p.bits} "
+        f"groups={p.groups}  {p.compression_ratio:.2f}x"
+    )
+xt = jax.random.normal(jax.random.PRNGKey(5), (4, D))
+y_fused = L.linear(xt, layers["attn.wqkv"], "kernel")  # fused Pallas dequant
+y_ref = L.linear(xt, layers["attn.wqkv"], "dequant")  # XLA gather→matmul oracle
+print(f"linear(kernel) vs dequant max err: {jnp.abs(y_fused - y_ref).max():.2e}")

@@ -9,11 +9,15 @@
 # the fused conv/ReLU/max-pool suite + gate (the fused stage's modeled bytes
 # strictly below implicit-unfused plus the separate reduce_window pass on
 # conv1, read from the BENCH_conv.json engine/pool-stamped rows),
-# the sharded conv suite on 8 host-platform fake devices (shard_map
-# bit-exactness — tests/test_conv_sharded.py skips itself on one device, so
-# this run is where it actually executes), and the sharding gate: --devices 8
-# per-device modeled HBM bytes on AlexNet conv1 strictly below the
-# single-device figure for the same global batch.
+# the PasmParams suite (dense | shared | packed | grouped linear dispatch
+# through the Pallas kernels + the Whisper-tiny voice smoke), the sharded
+# conv + params suites on 8 host-platform fake devices (shard_map
+# bit-exactness — both skip their mesh tests on one device, so this run is
+# where they actually execute), the dense weight-stream gate (BENCH_dense.json
+# from pasm_roofline.py: a packed transformer FFN layer must model strictly
+# fewer weight-stream bytes than dense bf16), and the sharding gate:
+# --devices 8 per-device modeled HBM bytes on AlexNet conv1 strictly below
+# the single-device figure for the same global batch.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -81,9 +85,31 @@ print(f"fused conv/ReLU/pool {fused['hbm_bytes']} B < implicit-unfused "
       f"({(unfused['hbm_bytes'] + pool_pass) / fused['hbm_bytes']:.2f}x) OK")
 PY
 
-echo "== sharded conv: shard_map suite on 8 fake devices =="
+echo "== PasmParams: dense-kernel dispatch + Whisper-voice smoke =="
+python -m pytest -q tests/test_params.py
+
+echo "== sharded conv + params: shard_map suites on 8 fake devices =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m pytest -q tests/test_conv_sharded.py
+    python -m pytest -q tests/test_conv_sharded.py tests/test_params.py
+
+echo "== smoke: dense weight-stream bytes (BENCH_dense.json gate) =="
+python benchmarks/pasm_roofline.py --smoke --json
+test -s BENCH_dense.json && echo "BENCH_dense.json written"
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_dense.json"))["records"]}
+dense = rows["dense_bytes.qwen3.ffn.dense_bf16"]
+packed = rows["dense_bytes.qwen3.ffn.int4"]
+assert packed["bins"] == 16 and packed["bits"] == 4 and packed["groups"] == 1, packed
+assert dense["hbm_bytes"] is not None and packed["hbm_bytes"] is not None
+assert packed["hbm_bytes"] < dense["hbm_bytes"], (
+    f"a packed transformer FFN layer must model strictly fewer weight-stream "
+    f"bytes than dense bf16: packed={packed['hbm_bytes']} dense={dense['hbm_bytes']}"
+)
+print(f"FFN packed {packed['hbm_bytes']} B < dense bf16 {dense['hbm_bytes']} B "
+      f"(weight stream {packed['compression_ratio']}x smaller) OK")
+PY
 
 echo "== smoke: per-device HBM bytes under --devices 8 (AlexNet conv1) =="
 trap 'rm -f BENCH_conv_explicit.json BENCH_conv_implicit.json BENCH_conv_dev8.json' EXIT

@@ -18,9 +18,37 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-from repro.core.conv import Conv2D, ConvSpec
+from typing import NamedTuple
 
-PAPER_SPEC = ConvSpec(IH=5, IW=5, C=15, KY=3, KX=3, M=2, stride=1)
+from repro.core.conv import Conv2D
+
+
+class PaperAccel(NamedTuple):
+    """The paper's §4 accelerator dims (image geometry + layer shape).
+
+    Image H/W live here — NOT in :class:`Conv2D` — because this names the
+    paper's fixed evaluation configuration (Figs 14–22), where the 5×5 image
+    is part of the spec.
+    """
+
+    IH: int = 5
+    IW: int = 5
+    C: int = 15
+    KY: int = 3
+    KX: int = 3
+    M: int = 2
+    stride: int = 1
+
+    def conv(self, *, relu: bool = False, bias: bool = False) -> Conv2D:
+        """The geometry-free layer spec (paper kernel-centred windowing)."""
+        return Conv2D(
+            k=(self.KY, self.KX), c_in=self.C, c_out=self.M,
+            stride=self.stride, padding="valid_centred", layout="NCHW",
+            bias=bias, relu=relu,
+        )
+
+
+PAPER_SPEC = PaperAccel()
 PAPER_BINS = (4, 8, 16)
 PAPER_BITWIDTHS = (8, 32)  # kernel bit-widths evaluated in the paper
 

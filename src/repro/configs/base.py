@@ -78,10 +78,12 @@ class ArchConfig:
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
     hybrid: Optional[HybridConfig] = None
-    # modality frontend stubs (assignment: precomputed embeddings)
+    # modality frontends (vit: precomputed patch embeddings; audio: real
+    # log-mel + PASM conv stem — repro.models.encdec)
     frontend: str = "none"  # none | vit | audio
     frontend_tokens: int = 0  # patches / frames per example
-    frontend_dim: int = 0  # stub embedding dim (projected to d_model)
+    frontend_dim: int = 0  # vit embedding dim (projected to d_model)
+    n_mels: int = 80  # audio: log-mel channels into the conv stem
     encoder_layers: int = 0  # enc-dec (whisper): encoder depth
     max_seq: int = 8192  # learned-pos archs only (whisper)
     scan_layers: bool = True

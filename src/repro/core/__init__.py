@@ -1,6 +1,21 @@
-"""Core PASM library: the paper's contribution as composable JAX modules."""
+"""Core PASM library: the paper's contribution as composable JAX modules.
+
+One weight-shared container is exported here: :class:`PasmParams` (with the
+dispatch helpers every model layer routes through).  The low-level
+:class:`~repro.core.pasm.PASMTensor` GEMM operand and its helpers stay on
+the ``repro.core.pasm`` submodule — reach for them only when handing
+operands to the Pallas kernels directly.
+"""
+from repro.core.params import (  # noqa: F401
+    PasmParams,
+    as_params,
+    dense_stack,
+    dense_weight,
+    embed_lookup,
+    is_quantized,
+    matmul,
+)
 from repro.core.pasm import (  # noqa: F401
-    PASMTensor,
     bits_for_bins,
     dequantize,
     kmeans_codebook,

@@ -51,30 +51,29 @@ matching ``(K, M)`` GEMM operand.  The explicit engines materialize that
 patch matrix in HBM; the ``*_implicit`` engines assemble patch tiles inside
 the kernel from the VMEM-resident image (DESIGN.md §3).
 
-Migration table (the old surface is kept as thin deprecation shims):
+:class:`ConvParams` is the conv-geometry face of the one weight-shared
+container: quantize/pack/groups/§3-K-pad semantics live in
+:class:`repro.core.params.PasmParams`, and ConvParams delegates to it after
+flattening kernels into the layout's ``(K, c_out)`` order — a dense FFN
+weight and a conv kernel share one pack rule, one reserved-zero-bin pad,
+one byte model.
 
-  =====================================================  ======================
-  old call                                               new call
-  =====================================================  ======================
-  ``conv2d_direct(img, kern, bias, spec=s, relu=r)``     ``conv2d(img, ConvParams.dense(kern, bias=bias), Conv2D(k=(s.KY, s.KX), c_in=s.C, c_out=s.M, stride=s.stride, relu=r))``
-  ``conv2d_weight_shared(img, idx, cb, bias, spec=s)``   ``conv2d(img, ConvParams.shared(idx, cb, bias=bias), Conv2D(...))``
-  ``conv2d_pasm(img, idx, cb, bias, spec=s)``            same, with ``engine="pas_kernel"`` (batched) / ``"pas_einsum"`` (reference)
-  ``quantize_conv_weights(kern, bins)``                  ``ConvParams.quantize(kern, bins)``
-  ``conv_pasm_tensor(idx, cb)``                          ``ConvParams.shared(idx, cb).gemm_tensor("NCHW")``
-  ``ConvSpec(IH, IW, C, KY, KX, M, stride)``             ``Conv2D(k, c_in, c_out, stride, ...)`` (geometry lives with the data)
-  =====================================================  ======================
+The PR-1 ``ConvSpec``/``conv2d_direct``/``conv2d_weight_shared``/
+``conv2d_pasm`` surface (deprecation-shimmed since PR 2) is gone; the
+migration table lives in DESIGN.md §2.  ``quantize_conv_weights`` survives
+as the paper's one-dictionary-per-layer helper.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
-from typing import NamedTuple, Optional, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pasm as _pasm
+from repro.core.params import PasmParams
 
 __all__ = [
     "Conv2D",
@@ -84,18 +83,10 @@ __all__ = [
     "conv_geom",
     "conv_plan",
     "max_pool2d",
+    "quantize_conv_weights",
     "PADDINGS",
     "LAYOUTS",
     "POOL_IMPLS",
-    # legacy surface (deprecation shims / kept helpers)
-    "ConvSpec",
-    "out_hw",
-    "im2col",
-    "conv_pasm_tensor",
-    "conv2d_direct",
-    "conv2d_weight_shared",
-    "conv2d_pasm",
-    "quantize_conv_weights",
 ]
 
 PADDINGS = ("valid_centred", "valid", "same")
@@ -358,9 +349,9 @@ class ConvParams:
             )
         order = _ORDER[layout]
         flat = _flatten_kernel(kernel, order)  # (K, c_out)
-        cb, idx = _pasm.kmeans_codebook(flat, bins, groups=groups, iters=iters)
+        p = PasmParams.quantize(flat, bins, groups=groups, iters=iters)
         return cls.shared(
-            _unflatten_kernel(idx, order, tuple(kernel.shape)), cb,
+            _unflatten_kernel(p.idx, order, tuple(kernel.shape)), p.codebook,
             bias=bias, order=order,
         )
 
@@ -378,37 +369,25 @@ class ConvParams:
                 f"pack() needs shared params (got {self.kind!r}); "
                 "quantize() dense kernels first"
             )
-        if self.bins > 16:
-            raise ValueError(f"int4 packing needs bins <= 16, got {self.bins}")
         if layout not in LAYOUTS:
             raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
         order = _ORDER[layout]
         self._check_order(order)
-        flat = _flatten_kernel(self.idx, order)  # (K, c_out)
-        if self.groups > 1 and (flat.shape[0] // self.groups) % 2:
-            # nibble pairs must not straddle a group boundary
-            raise ValueError(
-                "packed int4 needs an even per-group reduction length, got "
-                f"K={flat.shape[0]} over {self.groups} groups"
-            )
-        codebook, bins, pad_k = self.codebook, self.bins, 0
-        if flat.shape[0] % 2:
-            pad_k = 1
-            if bins < 16:
-                codebook = jnp.pad(codebook.reshape(-1), (0, 1))  # reserved 0-bin
-                pad_bin, bins = bins, bins + 1
-            else:
-                pad_bin = 0  # inert anyway: conv2d zero-pads the patch column
-            flat = jnp.pad(flat, ((0, 1), (0, 0)), constant_values=pad_bin)
+        # flatten into the GEMM layout, then the geometry-free container owns
+        # the pack rule (bins gate, grouped evenness, §3 reserved-zero-bin pad)
+        base = PasmParams.shared(
+            _flatten_kernel(self.idx, order), self.codebook
+        ).pack()
         return ConvParams(
-            idx=_pasm.pack_int4(flat),
-            codebook=codebook,
+            idx=base.idx,
+            codebook=(base.codebook.reshape(-1) if self.codebook.ndim == 1
+                      else base.codebook),
             bias=self.bias,
             kind="packed",
             kshape=self.kshape,
-            bins=bins,
+            bins=base.bins,
             order=order,
-            pad_k=pad_k,
+            pad_k=base.pad_k,
         )
 
     # -- views --------------------------------------------------------------
@@ -437,32 +416,43 @@ class ConvParams:
                 f"needs {order!r}; {fix} for this layout"
             )
 
+    def _as_pasm(self, order: str) -> PasmParams:
+        """The geometry-free container view, idx flattened into ``order``.
+
+        The bridge that makes ConvParams a thin wrapper: GEMM-operand and
+        dense-matrix construction live on :class:`PasmParams`; this just
+        supplies the conv-specific flatten.
+        """
+        if self.kind == "packed":
+            return PasmParams(
+                idx=self.idx,
+                codebook=self._grouped_codebook(),
+                bias=self.bias,
+                kind="packed",
+                shape=(self.idx.shape[0] * 2 - self.pad_k, self.c_out),
+                bins=self.bins,
+                pad_k=self.pad_k,
+            )
+        if self.kind == "shared":
+            return PasmParams(
+                idx=_flatten_kernel(self.idx, order),
+                codebook=self._grouped_codebook(),
+                bias=self.bias,
+                kind="shared",
+                shape=(int(self.idx[0].size), self.c_out),
+                bins=self.bins,
+            )
+        return PasmParams.dense(
+            _flatten_kernel(self.kernel, order), bias=self.bias
+        )
+
     def gemm_tensor(self, layout: str = "NCHW") -> _pasm.PASMTensor:
         """The dictionary as the ``(K, M)`` Pallas GEMM operand for ``layout``."""
         order = _ORDER[layout]
-        if self.kind == "packed":
-            self._check_order(order)
-            K = self.idx.shape[0] * 2
-            return _pasm.PASMTensor(
-                idx=self.idx,
-                codebook=self._grouped_codebook(),
-                shape=(K, self.c_out),
-                bins=self.bins,
-                bits=4,
-                packed=True,
-            )
-        if self.kind != "shared":
+        if self.kind == "dense":
             raise ValueError("dense params have no dictionary; use engine='einsum'")
         self._check_order(order)
-        idx = _flatten_kernel(self.idx, order)  # (K, M)
-        return _pasm.PASMTensor(
-            idx=idx,
-            codebook=self._grouped_codebook(),
-            shape=tuple(idx.shape),
-            bins=self.bins,
-            bits=_pasm.bits_for_bins(self.bins),
-            packed=False,
-        )
+        return self._as_pasm(order).gemm_tensor()
 
     def dense_operand(self, layout: str = "NCHW") -> jax.Array:
         """The ``(K(+pad_k), M)`` dense GEMM operand (einsum reference path).
@@ -866,62 +856,8 @@ def _pas_einsum(patches: jax.Array, params: ConvParams, layout: str) -> jax.Arra
 
 
 # ---------------------------------------------------------------------------
-# legacy surface: ConvSpec + the three conv2d_* shims
+# kept helper: the paper's one-dictionary quantizer on raw kernels
 # ---------------------------------------------------------------------------
-
-
-class ConvSpec(NamedTuple):
-    """Paper's accelerator dims (§4: IH=IW=5, C=15, KY=KX=3, M=2, stride=1).
-
-    Deprecated: image geometry now lives with the data — see :class:`Conv2D`.
-    """
-
-    IH: int = 5
-    IW: int = 5
-    C: int = 15
-    KY: int = 3
-    KX: int = 3
-    M: int = 2
-    stride: int = 1
-
-
-def out_hw(spec: ConvSpec) -> tuple:
-    """Output dims under the paper's kernel-centred loop bounds (Fig 1)."""
-    conv = _spec_to_conv2d(spec)
-    return conv_out_hw(spec.IH, spec.IW, conv)
-
-
-def _spec_to_conv2d(spec: ConvSpec, relu: bool = False, bias: bool = False) -> Conv2D:
-    return Conv2D(
-        k=(spec.KY, spec.KX),
-        c_in=spec.C,
-        c_out=spec.M,
-        stride=spec.stride,
-        padding="valid_centred",
-        layout="NCHW",
-        bias=bias,
-        relu=relu,
-    )
-
-
-def _check_spec(images: jax.Array, spec: ConvSpec) -> None:
-    if tuple(images.shape[1:]) != (spec.C, spec.IH, spec.IW):
-        raise ValueError(f"image {images.shape[1:]} does not match spec {spec}")
-
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; use {new} (migration table in repro/core/conv.py)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def im2col(images: jax.Array, spec: ConvSpec) -> jax.Array:
-    """images (B, C, IH, IW) → patches (B·OH·OW, C·KY·KX), paper loop order."""
-    _check_spec(images, spec)
-    patches, _ = _im2col(images, _spec_to_conv2d(spec))
-    return patches
 
 
 def quantize_conv_weights(
@@ -929,83 +865,11 @@ def quantize_conv_weights(
 ) -> tuple:
     """K-means weight-share a conv kernel: one dictionary per layer (paper §4).
 
-    Returns ``(codebook (B,), bin_idx (M, C, KY, KX) uint8)``.
+    Returns ``(codebook (B,), bin_idx (M, C, KY, KX) uint8)`` — the raw
+    pieces for callers that build their own :meth:`ConvParams.shared`.  The
+    clustering itself is :meth:`PasmParams.quantize` over the kernel
+    flattened to a single column, so conv and dense layers share one
+    quantizer.
     """
-    flat = kernel.reshape(1, -1)  # single group = single dictionary
-    cb, idx = _pasm.kmeans_codebook(flat.T, bins, groups=1, iters=iters)
-    return cb[0], idx.reshape(kernel.shape).astype(jnp.uint8)
-
-
-def conv_pasm_tensor(bin_idx: jax.Array, codebook: jax.Array) -> _pasm.PASMTensor:
-    """Deprecated: ``ConvParams.shared(idx, cb).gemm_tensor("NCHW")``."""
-    _deprecated("conv_pasm_tensor", "ConvParams.shared(...).gemm_tensor(...)")
-    return ConvParams.shared(bin_idx, codebook).gemm_tensor("NCHW")
-
-
-def conv2d_direct(
-    image: jax.Array,
-    kernel: jax.Array,
-    bias: Optional[jax.Array] = None,
-    *,
-    spec: ConvSpec,
-    relu: bool = False,
-) -> jax.Array:
-    """Deprecated shim: non-weight-shared accelerator (Fig 1) → :func:`conv2d`."""
-    _deprecated("conv2d_direct", "conv2d(x, ConvParams.dense(...), Conv2D(...))")
-    images, _ = _batched4(image)
-    _check_spec(images, spec)
-    params = ConvParams.dense(kernel, bias=bias)
-    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
-    return conv2d(image, params, conv, engine="einsum")
-
-
-def conv2d_weight_shared(
-    image: jax.Array,
-    bin_idx: jax.Array,
-    codebook: jax.Array,
-    bias: Optional[jax.Array] = None,
-    *,
-    spec: ConvSpec,
-    relu: bool = False,
-    engine: str = "auto",
-    interpret: Optional[bool] = None,
-) -> jax.Array:
-    """Deprecated shim: weight-shared accelerator (Figs 3/4) → :func:`conv2d`."""
-    _deprecated("conv2d_weight_shared", "conv2d(x, ConvParams.shared(...), Conv2D(...))")
-    images, _ = _batched4(image)
-    _check_spec(images, spec)
-    if engine not in ("auto", "einsum", "kernel"):
-        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
-    params = ConvParams.shared(bin_idx, codebook, bias=bias)
-    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
-    return conv2d(image, params, conv, engine=engine, interpret=interpret)
-
-
-def conv2d_pasm(
-    image: jax.Array,
-    bin_idx: jax.Array,
-    codebook: jax.Array,
-    bias: Optional[jax.Array] = None,
-    *,
-    spec: ConvSpec,
-    relu: bool = False,
-    engine: str = "auto",
-    interpret: Optional[bool] = None,
-) -> jax.Array:
-    """Deprecated shim: weight-shared-with-PASM accelerator (Fig 13).
-
-    Maps the seed routing onto :func:`conv2d`: the einsum reference becomes
-    ``engine="pas_einsum"``, the Pallas path ``engine="pas_kernel"``.
-    """
-    _deprecated("conv2d_pasm", 'conv2d(..., engine="pas_kernel")')
-    images, squeeze = _batched4(image)
-    _check_spec(images, spec)
-    if engine not in ("auto", "einsum", "kernel"):
-        raise ValueError(f"engine must be auto|einsum|kernel, got {engine!r}")
-    if engine == "auto":
-        eng = "pas_einsum" if squeeze else "pas_kernel"
-    else:
-        eng = {"einsum": "pas_einsum", "kernel": "pas_kernel"}[engine]
-    params = ConvParams.shared(bin_idx, codebook, bias=bias)
-    conv = _spec_to_conv2d(spec, relu=relu, bias=bias is not None)
-    return conv2d(image, params, conv, engine=eng, interpret=interpret)
+    p = PasmParams.quantize(kernel.reshape(-1, 1), bins, iters=iters)
+    return p.codebook[0], p.idx.reshape(kernel.shape).astype(jnp.uint8)

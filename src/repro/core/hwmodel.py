@@ -45,6 +45,8 @@ __all__ = [
     "conv_latency_cycles",
     "conv_latency_ratio",
     "conv_hbm_traffic",
+    "dense_hbm_traffic",
+    "dense_weight_stream_bytes",
     "im2col_inflation",
     "fpga_resources",
     "PAPER_CLAIMS",
@@ -367,3 +369,45 @@ def conv_hbm_traffic(
     else:
         x_bytes = 2 * batch * P * K * act_bytes  # im2col store + kernel stream
     return x_bytes + idx_bytes + cb_bytes + out_bytes
+
+
+# ---------------------------------------------------------------------------
+# 5. dense-layer HBM traffic model (the weight-stream argument beyond conv)
+# ---------------------------------------------------------------------------
+
+
+def dense_weight_stream_bytes(
+    K: int, N: int, *, bins: int = 16, groups: int = 1,
+    packed: bool = True, dense: bool = False, dense_dtype_bytes: int = 2,
+) -> int:
+    """HBM bytes a ``(K, N)`` weight matrix streams per GEMM pass.
+
+    The paper's memory argument applied to a transformer linear layer
+    (``PasmParams`` dense kind vs shared/packed): a dense bf16 stream costs
+    ``K·N·2`` B; the PASM stream is ``log2(B)``-bit indices (int4-``packed``
+    halves uint8) plus the ``(G, B)`` f32 dictionary — the same accounting
+    :attr:`repro.core.params.PasmParams.nbytes_weights` reports for the
+    stored tree, as a closed-form model for the roofline benches.
+    """
+    if dense:
+        return K * N * dense_dtype_bytes
+    return (K * N // 2 if packed else K * N) + groups * bins * 4
+
+
+def dense_hbm_traffic(
+    *, T: int, K: int, N: int, bins: int = 16, groups: int = 1,
+    act_bytes: int = 2, packed: bool = True, dense: bool = False,
+) -> int:
+    """Logical-shape HBM bytes of one dense (linear) layer on the PASM GEMM.
+
+    ``T`` tokens of ``(T, K)`` activations stream in, the weight matrix
+    streams per :func:`dense_weight_stream_bytes`, and the ``(T, N)`` result
+    stores back — the decode-time regime where the weight stream dominates
+    and weight sharing pays (DESIGN.md §2, extended from conv to the
+    transformer FFN/attention projections).
+    """
+    w = dense_weight_stream_bytes(
+        K, N, bins=bins, groups=groups, packed=packed, dense=dense,
+        dense_dtype_bytes=2,
+    )
+    return T * K * act_bytes + w + T * N * act_bytes

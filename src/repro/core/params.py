@@ -1,0 +1,486 @@
+"""PasmParams — the one weight-shared parameter container, conv to dense.
+
+The paper's weight-sharing (per-layer codebooks of B shared values + small
+integer indices, Garland & Gregg 2018) applies to ANY weight-bearing matmul:
+a conv layer lowers onto a GEMM via im2col, a transformer FFN/attention
+projection *is* a GEMM, an MoE expert is a stack of them.  This module holds
+the geometry-free container those all share:
+
+* :class:`PasmParams` — a tagged weight: ``dense`` (a plain ``(…, K, N)``
+  matrix), weight-``shared`` (uint8 bin indices + a ``(…, G, B)`` codebook,
+  one dictionary per layer when ``G == 1`` — the paper rule — or one per
+  reduction-axis segment), or int4-``packed`` (two 4-bit indices per byte
+  along K, §3 K-pad applied at pack time so odd reductions work).  Leading
+  stack dims (scan-over-layers L, MoE experts E) ride the data fields while
+  the logical ``(K, N)`` stays static metadata, so ``lax.scan``/``vmap``
+  slicing works unchanged.
+* :func:`matmul` — THE dispatch every dense layer routes through
+  (:func:`repro.nn.layers.linear` is a thin alias): plain arrays and
+  ``dense`` params always take the XLA dot; quantized params pick
+  ``impl="dequant"`` (gather+dot oracle), ``"kernel"`` (fused-dequant Pallas
+  GEMM) or ``"pas_kernel"`` (paper-faithful two-phase PAS), with the fused
+  bias/ReLU epilogue and the same ``mesh=`` shard_map path conv uses — the
+  kernels are distribution-safe, not just the dequant fallback.
+* :func:`embed_lookup` / :func:`dense_weight` / :func:`dense_stack` — the
+  non-GEMM views (embedding row gather, tied-head dense matrix, stacked
+  expert dequant) so model code contains zero container ``isinstance``.
+
+:class:`repro.core.pasm.PASMTensor` survives underneath as the low-level
+Pallas GEMM *operand* (physical, pad-inclusive shapes); ``PasmParams`` is
+the parameter-tree container (logical shapes + the ``pad_k`` book-keeping),
+and :meth:`PasmParams.gemm_tensor` bridges the two.
+:class:`repro.core.conv.ConvParams` is the conv-geometry wrapper over this
+container — it flattens kernels into ``(K, c_out)`` in its layout's order
+and delegates quantize/pack/GEMM-operand construction here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pasm as _pasm
+
+__all__ = [
+    "PasmParams",
+    "KINDS",
+    "MATMUL_IMPLS",
+    "as_params",
+    "is_quantized",
+    "matmul",
+    "embed_lookup",
+    "dense_weight",
+    "dense_stack",
+]
+
+KINDS = ("dense", "shared", "packed")
+# matmul impl names (PASMQuant.impl values): plain arrays / dense params take
+# the XLA dot under every impl — quantized params dispatch on it.
+MATMUL_IMPLS = ("dense", "dequant", "kernel", "pas_kernel")
+
+Weight = Union[jax.Array, "PasmParams", _pasm.PASMTensor]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["w", "idx", "codebook", "bias"],
+    meta_fields=["kind", "shape", "bins", "pad_k"],
+)
+@dataclasses.dataclass(frozen=True)
+class PasmParams:
+    """Tagged matmul weights: ``dense`` | weight-``shared`` | int4-``packed``.
+
+    ``dense``   ``w (…, K, N)``; ``idx``/``codebook`` None.
+    ``shared``  ``idx (…, K, N) uint8`` bin indices + ``codebook (…, G, B)``
+                f32 shared values — ``G == 1`` is the paper's one dictionary
+                per layer; ``G > 1`` splits the reduction axis into ``G``
+                segments with one dictionary each (beyond-paper accuracy
+                knob, e.g. per-expert grouped codebooks).
+    ``packed``  ``idx (…, (K+pad_k)//2, N) uint8`` — two 4-bit indices per
+                byte along K; ``pad_k`` records the §3 K-pad row appended so
+                an odd reduction packs (mapped to a reserved all-zero
+                codebook bin when representable — callers pad the matching
+                activation column with zeros, which :func:`matmul` does
+                automatically).
+    ``bias``    ``(…, N)`` or None on every kind — never shared (paper §4).
+    ``shape``   the logical ``(K, N)`` (static metadata; leading stack dims
+                live on the data fields so scan/vmap slicing works).
+    """
+
+    w: Optional[jax.Array] = None
+    idx: Optional[jax.Array] = None
+    codebook: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None
+    kind: str = "dense"
+    shape: tuple = ()
+    bins: Optional[int] = None
+    pad_k: int = 0
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def dense(cls, w: jax.Array, *, bias: Optional[jax.Array] = None):
+        """Non-weight-shared params from a plain ``(…, K, N)`` matrix."""
+        if w.ndim < 2:
+            raise ValueError(f"dense params need a (…, K, N) matrix, got {w.shape}")
+        return cls(w=w, bias=bias, kind="dense", shape=tuple(w.shape[-2:]))
+
+    @classmethod
+    def shared(
+        cls,
+        idx: jax.Array,
+        codebook: jax.Array,
+        *,
+        bias: Optional[jax.Array] = None,
+    ):
+        """Weight-shared params from existing bin indices + dictionary.
+
+        ``idx (…, K, N)`` uint8; ``codebook (B,)`` (the single-dictionary
+        paper rule) or ``(…, G, B)`` with one dictionary per reduction-axis
+        segment.  Leading dims of ``idx`` and ``codebook`` must agree.
+        """
+        if idx.ndim < 2:
+            raise ValueError(f"idx must be (…, K, N), got {idx.shape}")
+        if codebook.ndim == 1:
+            codebook = codebook[None]  # (B,) ≡ the single-dictionary rule
+        if codebook.ndim != idx.ndim:
+            raise ValueError(
+                f"codebook rank {codebook.shape} does not match idx "
+                f"{idx.shape}: leading stack dims must agree"
+            )
+        K = int(idx.shape[-2])
+        G = int(codebook.shape[-2])
+        if K % G:
+            raise ValueError(f"K={K} not divisible by codebook groups={G}")
+        return cls(
+            idx=idx.astype(jnp.uint8),
+            codebook=codebook,
+            bias=bias,
+            kind="shared",
+            shape=tuple(idx.shape[-2:]),
+            bins=int(codebook.shape[-1]),
+        )
+
+    @classmethod
+    def quantize(
+        cls,
+        w: jax.Array,
+        bins: int = 16,
+        *,
+        groups: int = 1,
+        bias: Optional[jax.Array] = None,
+        iters: int = 16,
+    ):
+        """K-means weight-share a dense ``(…, K, N)`` matrix.
+
+        ``groups=1`` (default) is the paper rule — one dictionary per layer;
+        ``groups > 1`` splits the reduction axis.  Leading stack dims are
+        quantized per slice (one codebook set per layer/expert).  Does not
+        pack — call :meth:`pack` for the int4 payload.
+        """
+        if w.ndim < 2:
+            raise ValueError(f"quantize needs a (…, K, N) matrix, got {w.shape}")
+        K, N = w.shape[-2:]
+        lead = tuple(w.shape[:-2])
+        flat = w.reshape((-1, K, N))
+        cbs, idxs = jax.vmap(
+            lambda m: _pasm.kmeans_codebook(m, bins, groups=groups, iters=iters)
+        )(flat)
+        return cls.shared(
+            idxs.reshape(lead + (K, N)),
+            cbs.reshape(lead + (groups, bins)),
+            bias=bias,
+        )
+
+    def pack(self) -> "PasmParams":
+        """int4-pack the dictionary indices (two 4-bit indices per byte).
+
+        Halves weight-payload bytes.  An odd ``K`` gets the §3 K-pad first:
+        one pad row is appended, mapped to a reserved all-zero codebook bin
+        when representable (``bins < 16``) or to bin 0 otherwise — exact
+        either way, because :func:`matmul` pairs the pad row with a zero
+        activation column (``pad_k``).  This is the same reserved-zero-bin
+        rule :func:`repro.kernels.ops._pad_weight_operands` applies to its
+        tile-plan K padding.
+        """
+        if self.kind != "shared":
+            raise ValueError(
+                f"pack() needs shared params (got {self.kind!r}); "
+                "quantize() dense weights first"
+            )
+        if self.bins > 16:
+            raise ValueError(f"int4 packing needs bins <= 16, got {self.bins}")
+        K, N = self.shape
+        G = self.groups
+        if G > 1 and (K // G) % 2:
+            # nibble pairs must not straddle a group boundary
+            raise ValueError(
+                "packed int4 needs an even per-group reduction length, got "
+                f"K={K} over {G} groups"
+            )
+        idx, codebook, bins, pad_k = self.idx, self.codebook, self.bins, 0
+        if K % 2:
+            pad_k = 1
+            if bins < 16:
+                codebook = jnp.pad(
+                    codebook, [(0, 0)] * (codebook.ndim - 1) + [(0, 1)]
+                )  # reserved 0-bin
+                pad_bin, bins = bins, bins + 1
+            else:
+                pad_bin = 0  # inert anyway: matmul zero-pads the x column
+            idx = jnp.pad(
+                idx,
+                [(0, 0)] * (idx.ndim - 2) + [(0, 1), (0, 0)],
+                constant_values=pad_bin,
+            )
+        lead = idx.shape[:-2]
+        if lead:
+            flat = idx.reshape((-1,) + idx.shape[-2:])
+            idx = jax.vmap(_pasm.pack_int4)(flat).reshape(
+                lead + ((K + pad_k) // 2, N)
+            )
+        else:
+            idx = _pasm.pack_int4(idx)
+        return PasmParams(
+            idx=idx,
+            codebook=codebook,
+            bias=self.bias,
+            kind="packed",
+            shape=self.shape,
+            bins=bins,
+            pad_k=pad_k,
+        )
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def groups(self) -> int:
+        """Codebook groups along the reduction axis (1 = paper rule)."""
+        return 1 if self.codebook is None else int(self.codebook.shape[-2])
+
+    @property
+    def packed(self) -> bool:
+        return self.kind == "packed"
+
+    @property
+    def bits(self) -> Optional[int]:
+        """Index bit-width (None for dense params)."""
+        if self.kind == "dense":
+            return None
+        return 4 if self.packed else _pasm.bits_for_bins(self.bins)
+
+    def gemm_tensor(self) -> _pasm.PASMTensor:
+        """The dictionary as the physical Pallas GEMM operand.
+
+        The returned :class:`~repro.core.pasm.PASMTensor` shape is the
+        PHYSICAL ``(K + pad_k, N)`` — callers (i.e. :func:`matmul`) pad the
+        activation's trailing K columns by ``pad_k`` to match.
+        """
+        if self.kind == "dense":
+            raise ValueError(
+                "dense params have no dictionary; use the dense matmul path"
+            )
+        K, N = self.shape
+        return _pasm.PASMTensor(
+            idx=self.idx,
+            codebook=self.codebook.astype(jnp.float32),
+            shape=(K + self.pad_k, N),
+            bins=self.bins,
+            bits=4 if self.packed else _pasm.bits_for_bins(self.bins),
+            packed=self.packed,
+        )
+
+    def dense_matrix(self, dtype=None) -> jax.Array:
+        """The logical dense ``(…, K, N)`` weight (§3 pad rows removed).
+
+        Dtype defaults to the stored dtype for ``dense`` params (so integer
+        exactness claims survive) and f32 for quantized params — the
+        weight-shared MAC's dictionary-dereferenced view (Fig 3).
+        """
+        if self.kind == "dense":
+            return self.w if dtype is None else self.w.astype(dtype)
+        K, N = self.shape
+        G = self.groups
+        packed = self.packed
+
+        def one(ix, cb):
+            if packed:
+                ix = _pasm.unpack_int4(ix)
+            kp = ix.shape[0]
+            wg = jax.vmap(lambda c, i: c[i.astype(jnp.int32)])(
+                cb, ix.reshape(G, kp // G, N)
+            )
+            return wg.reshape(kp, N)[:K]
+
+        lead = self.idx.shape[:-2]
+        if lead:
+            out = jax.vmap(one)(
+                self.idx.reshape((-1,) + self.idx.shape[-2:]),
+                self.codebook.reshape((-1,) + self.codebook.shape[-2:]),
+            ).reshape(lead + (K, N))
+        else:
+            out = one(self.idx, self.codebook)
+        return out.astype(jnp.float32 if dtype is None else dtype)
+
+    # -- byte accounting (the weight-stream roofline's view) ----------------
+
+    @property
+    def _lead(self) -> tuple:
+        a = self.w if self.kind == "dense" else self.idx
+        return tuple(a.shape[:-2])
+
+    @property
+    def nbytes_weights(self) -> int:
+        """HBM bytes for the weight payload (what the memory roofline sees)."""
+        if self.kind == "dense":
+            return int(self.w.size) * self.w.dtype.itemsize
+        return int(np.prod(self.idx.shape, dtype=np.int64)) + self.codebook.size * 4
+
+    @property
+    def nbytes_dense_bf16(self) -> int:
+        lead = int(np.prod(self._lead, dtype=np.int64)) if self._lead else 1
+        return lead * int(np.prod(self.shape)) * 2
+
+    @property
+    def compression_ratio(self) -> float:
+        """Dense-bf16 bytes over stored bytes — the bins-vs-bytes trade-off."""
+        return self.nbytes_dense_bf16 / self.nbytes_weights
+
+
+# ---------------------------------------------------------------------------
+# the dispatch surface model code routes through (zero isinstance elsewhere)
+# ---------------------------------------------------------------------------
+
+
+def as_params(w: Weight) -> PasmParams:
+    """Coerce any weight leaf into the container.
+
+    Plain arrays become ``dense`` params; a raw :class:`PASMTensor` (the
+    legacy container / the GEMM-operand adapter) wraps with its physical
+    shape as the logical one (``pad_k = 0`` — old tensors carry no pad).
+    """
+    if isinstance(w, PasmParams):
+        return w
+    if isinstance(w, _pasm.PASMTensor):
+        return PasmParams(
+            idx=w.idx,
+            codebook=w.codebook,
+            kind="packed" if w.packed else "shared",
+            shape=tuple(w.shape),
+            bins=w.bins,
+        )
+    return PasmParams.dense(w) if w.ndim >= 2 else PasmParams(
+        w=w, kind="dense", shape=tuple(w.shape)
+    )
+
+
+def is_quantized(w) -> bool:
+    """Whether a weight leaf carries a dictionary (vs a plain dense matrix)."""
+    if isinstance(w, PasmParams):
+        return w.kind != "dense"
+    return isinstance(w, _pasm.PASMTensor)
+
+
+def matmul(
+    x: jax.Array,
+    w: Weight,
+    *,
+    impl: str = "dense",
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
+    mesh=None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x @ w`` for any weight leaf — THE dense-layer dispatch.
+
+    Plain arrays and ``dense`` params always run the XLA dot regardless of
+    ``impl`` (post-``quantize_params`` trees mix dense and quantized
+    leaves).  Quantized params dispatch on ``impl``:
+
+    =============  =========================================================
+    impl           engine
+    =============  =========================================================
+    ``dequant``    dictionary gather + XLA dot (the weight-shared-MAC
+                   baseline and the kernels' bit-exactness oracle)
+    ``kernel``     :func:`repro.kernels.ops.pasm_matmul` — fused-dequant
+                   Pallas GEMM, bias/ReLU fused into the last-k-step
+                   write-through
+    ``pas_kernel`` :func:`repro.kernels.ops.pas_matmul` — the paper-faithful
+                   two-phase PAS formulation (single-dictionary only)
+    =============  =========================================================
+
+    ``bias`` defaults to the container's own ``bias`` field; ``mesh=`` (a
+    ``("data", "model")`` mesh) runs the kernel paths through the same
+    shard_map dispatch conv uses — rows over ``data``, N over ``model`` when
+    divisible — bit-exact vs single-device, so the kernels are as
+    distribution-safe as the dequant path.  Packed params with a §3 K-pad
+    get their zero activation column appended here (``pad_k``), which is
+    what makes odd reductions (odd ``d_model``) work on the kernels.
+    Output dtype follows ``x``.
+    """
+    if impl not in MATMUL_IMPLS:
+        raise ValueError(f"impl must be one of {MATMUL_IMPLS}, got {impl!r}")
+    p = as_params(w)
+    if bias is None:
+        bias = p.bias
+    if p.kind == "dense" or impl in ("dense", "dequant"):
+        from repro.kernels.ref import apply_epilogue  # pallas-free
+
+        wd = p.dense_matrix(x.dtype)
+        y = jnp.dot(x, wd, preferred_element_type=jnp.float32)
+        return apply_epilogue(y, bias, relu).astype(x.dtype)
+    from repro.kernels import ops as _kops  # deferred: core stays pallas-free
+
+    t = p.gemm_tensor()
+    if p.pad_k:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p.pad_k)])
+    if impl == "pas_kernel":
+        if p.groups > 1:
+            raise ValueError(
+                "the PAS formulation is paper-faithful single-dictionary; "
+                "grouped codebooks need impl='kernel' or 'dequant'"
+            )
+        y = _kops.pas_matmul(
+            x, t, bias=bias, relu=relu, mesh=mesh, interpret=interpret
+        )
+    else:
+        y = _kops.pasm_matmul(
+            x, t, bias=bias, relu=relu, mesh=mesh, interpret=interpret
+        )
+    return y.astype(x.dtype)
+
+
+def embed_lookup(w: Weight, tokens: jax.Array) -> jax.Array:
+    """Embedding-table row gather for any weight leaf.
+
+    For quantized tables this gathers uint8 index rows and dereferences the
+    dictionary — the paper's compression applied to the vocab table (no
+    dense ``(V, D)`` matrix is ever materialized).  Single-dictionary
+    tables only (``quantize_params`` quantizes embeddings with ``G == 1``).
+    """
+    p = as_params(w)
+    if p.kind == "dense":
+        return p.w[tokens]
+    idx = _pasm.unpack_int4(p.idx) if p.packed else p.idx
+    rows = idx[tokens]
+    return p.codebook[0][rows.astype(jnp.int32)]
+
+
+def dense_weight(w: Weight, dtype=None) -> jax.Array:
+    """The logical dense ``(…, K, N)`` matrix of any weight leaf.
+
+    The tied-LM-head path: kernels compute ``x @ W``, not ``x @ Wᵀ``, so a
+    tied head dequantizes once and transposes at the call site.
+    """
+    return as_params(w).dense_matrix(dtype)
+
+
+def dense_stack(w: Weight, dtype, constrain=None, spec=None) -> jax.Array:
+    """Stacked expert weights ``(E, K, N)`` → dense, for the MoE einsum path.
+
+    ``spec`` re-lays-out the STORED weight before use (JIT all-gather of the
+    2-D-sharded storage).  For quantized weights the gather moves the
+    uint8/int4 *indices* — 4–8× fewer bytes than gathering dequantized bf16,
+    the paper's compression applied to the collective payload
+    [§Perf iteration kimi-prefill/2].
+    """
+    if not is_quantized(w):
+        w = w if spec is None else constrain(w, spec)
+        return w.astype(dtype)
+    p = as_params(w)
+    idx = p.idx if spec is None else constrain(p.idx, spec)
+    if p.packed:
+        idx = jax.vmap(_pasm.unpack_int4)(idx)
+    E = idx.shape[0]
+    K, N = p.shape
+    G = p.groups
+    kp = K + p.pad_k
+    idxg = idx.reshape(E, G, kp // G, N)
+    wd = jax.vmap(jax.vmap(lambda cb, ix: cb[ix.astype(jnp.int32)]))(
+        p.codebook, idxg
+    )
+    return wd.reshape(E, kp, N)[:, :K].astype(dtype)

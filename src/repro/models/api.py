@@ -39,11 +39,18 @@ def cache_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
 
 
 def frontend_spec(cfg: ArchConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
-    """Precomputed modality-frontend embeddings (assignment: stubs)."""
+    """Modality-frontend input: vit patch embeddings (stub) or log-mel frames.
+
+    Audio is REAL input now: ``(B, n_mels, 2·frontend_tokens)`` log-mel
+    frames into the stride-2 conv stem (encdec halves the time axis onto the
+    ``frontend_tokens``-long encoder sequence).
+    """
     if cfg.frontend == "vit":
         return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
     if cfg.frontend == "audio":
-        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.n_mels, 2 * cfg.frontend_tokens), jnp.bfloat16
+        )
     return None
 
 

@@ -11,7 +11,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import params as _params
 from repro.core import pasm as _pasm
+
+# tree-surgery treats either weight-shared container as one leaf (PASMTensor
+# only appears in legacy trees; quantize_params emits PasmParams)
+_CONTAINERS = (_params.PasmParams, _pasm.PASMTensor)
 
 __all__ = [
     "ShardCtx",
@@ -100,18 +105,18 @@ def param_count(params: Any) -> int:
     """Logical parameter count (PASM leaves count their dense size)."""
     n = 0
     for leaf in jax.tree_util.tree_leaves(
-        params, is_leaf=lambda x: isinstance(x, _pasm.PASMTensor)
+        params, is_leaf=lambda x: isinstance(x, _CONTAINERS)
     ):
-        if isinstance(leaf, _pasm.PASMTensor):
-            lead = leaf.idx.shape[:-2]
-            n += int(np.prod(lead, dtype=np.int64) * np.prod(leaf.shape))
+        if isinstance(leaf, _CONTAINERS):
+            p = _params.as_params(leaf)
+            n += int(np.prod(p._lead, dtype=np.int64) * np.prod(p.shape))
         else:
             n += leaf.size
     return n
 
 
 # ---------------------------------------------------------------------------
-# PASM parameter surgery: replace selected dense leaves with PASMTensor
+# PASM parameter surgery: replace selected dense leaves with PasmParams
 # ---------------------------------------------------------------------------
 
 _EXCLUDE = re.compile(
@@ -139,6 +144,10 @@ def quantize_params(params: Any, cfg: ArchConfig, *, iters: int = 8) -> Any:
     large enough (the paper's ``B ≪ N`` efficiency rule) and which isn't an
     excluded parameter class (norms/bias/router/... stay dense, paper §4).
     Stacked (scan-over-layers) leaves are quantized per layer via vmap.
+    Emits :class:`~repro.core.params.PasmParams`; int4-eligible bins are
+    packed, with the §3 reserved-zero-bin K-pad making odd reductions (odd
+    ``d_model``) pack cleanly — the old direct-``pack_int4`` path errored on
+    them.
     """
     q = cfg.quant
     if not q.enabled:
@@ -155,27 +164,10 @@ def quantize_params(params: Any, cfg: ArchConfig, *, iters: int = 8) -> Any:
         K, N = leaf.shape[-2], leaf.shape[-1]
         if K * N < q.min_weight_elems:
             return leaf
-        lead = leaf.shape[:-2]
-        flat = leaf.reshape((-1, K, N))
-
-        def quant_one(w):
-            cb, idx = _pasm.kmeans_codebook(w, q.bins, groups=q.groups, iters=iters)
-            return cb, idx
-
-        cbs, idxs = jax.vmap(quant_one)(flat)
-        bits = _pasm.bits_for_bins(q.bins)
-        packed = bits == 4
-        if packed:
-            idxs = jax.vmap(_pasm.pack_int4)(idxs)
-        kphys = idxs.shape[1]
-        return _pasm.PASMTensor(
-            idx=idxs.reshape(*lead, kphys, N),
-            codebook=cbs.reshape(*lead, q.groups, q.bins),
-            shape=(K, N),
-            bins=q.bins,
-            bits=bits,
-            packed=packed,
-        )
+        p = _params.PasmParams.quantize(leaf, q.bins, groups=q.groups, iters=iters)
+        if _pasm.bits_for_bins(q.bins) == 4:
+            p = p.pack()
+        return p
 
     return jax.tree_util.tree_map_with_path(maybe_quantize, params)
 
@@ -185,12 +177,13 @@ def weight_bytes(params: Any, dense_dtype_bytes: int = 2) -> dict:
     dense = 0
     stored = 0
     for leaf in jax.tree_util.tree_leaves(
-        params, is_leaf=lambda x: isinstance(x, _pasm.PASMTensor)
+        params, is_leaf=lambda x: isinstance(x, _CONTAINERS)
     ):
-        if isinstance(leaf, _pasm.PASMTensor):
-            lead = int(np.prod(leaf.idx.shape[:-2], dtype=np.int64))
-            dense += lead * int(np.prod(leaf.shape)) * dense_dtype_bytes
-            stored += leaf.idx.size + leaf.codebook.size * 4
+        if isinstance(leaf, _CONTAINERS):
+            p = _params.as_params(leaf)
+            lead = int(np.prod(p._lead, dtype=np.int64))
+            dense += lead * int(np.prod(p.shape)) * dense_dtype_bytes
+            stored += p.nbytes_weights
         else:
             dense += leaf.size * dense_dtype_bytes
             stored += leaf.size * dense_dtype_bytes

@@ -1,11 +1,18 @@
 """Whisper-style encoder–decoder (whisper-tiny backbone).
 
-The conv/mel frontend is a STUB per the assignment sheet: ``input_specs``
-provides precomputed frame embeddings (B, n_frames, d_model).  Encoder is
-non-causal self-attention; decoder is causal self-attention + cross-attention
-onto the fixed-length encoder output.  LayerNorm-with-bias and GELU match the
-Whisper family; token embeddings are tied to the LM head (paper-faithful to
-Radford et al. 2022).
+The conv/mel frontend is REAL: log-mel frames ``(B, n_mels, T_mel)`` run
+through the two Whisper stem convs (kernel 3 along time; the second at
+stride 2) via the PASM :func:`repro.core.conv.conv2d` path — the same
+fused-epilogue Pallas engines the CNN stack uses, which is how the paper's
+technique is proven on voice (abstract: image, voice and video).
+:func:`quantize_frontend` weight-shares the stem kernels into
+:class:`~repro.core.conv.ConvParams` dictionaries (``quantize_params`` keeps
+conv leaves dense by name, so the frontend opts in explicitly).
+
+Encoder is non-causal self-attention; decoder is causal self-attention +
+cross-attention onto the fixed-length encoder output.  LayerNorm-with-bias
+and GELU match the Whisper family; token embeddings are tied to the LM head
+(paper-faithful to Radford et al. 2022).
 """
 from __future__ import annotations
 
@@ -15,11 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import params as _params
+from repro.core.conv import Conv2D, ConvParams, conv2d
 from repro.models.common import Initializer, ShardCtx, maybe_scan
 from repro.nn import attention as A
 from repro.nn import layers as L
 
-__all__ = ["init_params", "forward", "init_caches", "prefill", "decode_step"]
+__all__ = [
+    "init_params",
+    "forward",
+    "init_caches",
+    "prefill",
+    "decode_step",
+    "quantize_frontend",
+]
 
 
 def _sinusoid(length: int, channels: int) -> jax.Array:
@@ -44,9 +60,9 @@ def _init_attn(cfg, ini, kv_from_d=None):
 def _init_mlp(cfg, ini):
     return {
         "w1": ini.dense((cfg.d_model, cfg.d_ff)),
-        "b1": jnp.zeros((cfg.d_ff,)),
+        "bias1": jnp.zeros((cfg.d_ff,)),
         "w2": ini.dense((cfg.d_ff, cfg.d_model), fan_in=cfg.d_ff),
-        "b2": jnp.zeros((cfg.d_model,)),
+        "bias2": jnp.zeros((cfg.d_model,)),
     }
 
 
@@ -78,9 +94,23 @@ def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> dict:
     ini = Initializer(key)
     ekeys = jax.random.split(ini.key(), cfg.encoder_layers)
     dkeys = jax.random.split(ini.key(), cfg.n_layers)
+    D = cfg.d_model
     params = {
-        "embed": jax.random.normal(ini.key(), (cfg.vocab, cfg.d_model)) * 0.02,
-        "pos_embed": jax.random.normal(ini.key(), (cfg.max_seq, cfg.d_model)) * 0.01,
+        "embed": jax.random.normal(ini.key(), (cfg.vocab, D)) * 0.02,
+        "pos_embed": jax.random.normal(ini.key(), (cfg.max_seq, D)) * 0.01,
+        # Whisper stem: two kernel-3 time convs, the second at stride 2.
+        # The "conv" in the names keeps quantize_params' _EXCLUDE away —
+        # weight-sharing the stem is an explicit quantize_frontend() opt-in.
+        "frontend": {
+            "conv1": {
+                "kernel": ini.dense((D, cfg.n_mels, 1, 3), fan_in=cfg.n_mels * 3),
+                "bias": jnp.zeros((D,)),
+            },
+            "conv2": {
+                "kernel": ini.dense((D, D, 1, 3), fan_in=D * 3),
+                "bias": jnp.zeros((D,)),
+            },
+        },
         "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, Initializer(k)))(ekeys),
         "enc_ln": _ln(cfg.d_model),
         "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, Initializer(k)))(dkeys),
@@ -102,26 +132,75 @@ def _mha(xq, xkv, p, cfg, impl, *, causal):
 
 
 def _mlp_fwd(x, p, impl):
-    h = L.gelu_ffn_act(L.linear(x, p["w1"], impl) + p["b1"].astype(x.dtype))
-    return L.linear(h, p["w2"], impl) + p["b2"].astype(x.dtype)
+    h = L.gelu_ffn_act(L.linear(x, p["w1"], impl) + p["bias1"].astype(x.dtype))
+    return L.linear(h, p["w2"], impl) + p["bias2"].astype(x.dtype)
 
 
 def _lnorm(x, p, eps=1e-5):
     return L.layer_norm(x, p["scale"], p["bias"], eps)
 
 
-def encode(params, frames, cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
-    """frames: (B, T_enc, d_model) precomputed frontend embeddings (stub)."""
-    x = frames.astype(jnp.bfloat16) + _sinusoid(frames.shape[1], cfg.d_model).astype(
-        jnp.bfloat16
+def _stem_convs(cfg: ArchConfig) -> tuple:
+    """The two Whisper stem conv specs (kernel 3 on time; second at stride 2)."""
+    return (
+        Conv2D(k=(1, 3), c_in=cfg.n_mels, c_out=cfg.d_model, stride=1,
+               padding="same"),
+        Conv2D(k=(1, 3), c_in=cfg.d_model, c_out=cfg.d_model, stride=2,
+               padding="same"),
     )
+
+
+def _frontend_conv(x, p, conv: Conv2D, impl: str) -> jax.Array:
+    """One stem conv through :func:`conv2d`, honoring the PASM impl choice.
+
+    ``p`` is the init dict (``kernel``/``bias`` → dense) or a
+    :class:`ConvParams` installed by :func:`quantize_frontend`.  Quantized
+    stems route ``impl`` onto the matching conv engine, so the mel frontend
+    runs the same fused-epilogue Pallas kernels as the CNN stack.
+    """
+    if isinstance(p, dict):
+        p = ConvParams.dense(p["kernel"], bias=p["bias"])
+        return conv2d(x, p, conv, engine="einsum")
+    engine = {"dequant": "einsum", "kernel": "kernel",
+              "pas_kernel": "pas_kernel"}.get(impl, "auto")
+    return conv2d(x, p, conv, engine=engine)
+
+
+def quantize_frontend(params: dict, bins: int = 16, *, iters: int = 16) -> dict:
+    """Weight-share the mel-stem convs into :class:`ConvParams` dictionaries.
+
+    ``quantize_params`` skips conv leaves by name (``_EXCLUDE``), so voice
+    opts in here: each stem kernel gets its own per-layer codebook (paper
+    §4), and :func:`encode` then dispatches them through the PASM engines.
+    """
+    fe = {
+        name: ConvParams.quantize(p["kernel"], bins, bias=p["bias"], iters=iters)
+        for name, p in params["frontend"].items()
+    }
+    return {**params, "frontend": fe}
+
+
+def encode(params, mel, cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
+    """mel: (B, n_mels, T_mel) log-mel frames → (B, T_mel//2, d_model).
+
+    The stem halves the time axis (stride-2 second conv, SAME padding), so
+    ``T_mel = 2·cfg.frontend_tokens`` lands exactly on the
+    ``frontend_tokens``-long encoder sequence the cross-KV caches size for.
+    """
+    impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+    c1, c2 = _stem_convs(cfg)
+    x4 = mel.astype(jnp.float32)[:, :, None, :]  # NCHW: (B, n_mels, 1, T_mel)
+    x4 = L.gelu_ffn_act(_frontend_conv(x4, params["frontend"]["conv1"], c1, impl))
+    x4 = L.gelu_ffn_act(_frontend_conv(x4, params["frontend"]["conv2"], c2, impl))
+    x = jnp.transpose(x4[:, :, 0, :], (0, 2, 1))  # (B, T_mel//2, d_model)
+    x = (x + _sinusoid(x.shape[1], cfg.d_model)).astype(jnp.bfloat16)
     x = sctx.act_btd(x)
 
     def body(h, lp):
         a, _ = _mha(_lnorm(h, lp["ln1"]), _lnorm(h, lp["ln1"]), lp["attn"], cfg,
-                    "dense", causal=False)
+                    impl, causal=False)
         h = h + a
-        h = h + _mlp_fwd(_lnorm(h, lp["ln2"]), lp["mlp"], "dense")
+        h = h + _mlp_fwd(_lnorm(h, lp["ln2"]), lp["mlp"], impl)
         return h, None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
@@ -137,18 +216,16 @@ def forward(
     *,
     frontend_embeds: Optional[jax.Array] = None,
 ):
-    """Teacher-forced decode over ``tokens`` given audio ``frontend_embeds``."""
+    """Teacher-forced decode over ``tokens`` given log-mel ``frontend_embeds``."""
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
-    if frontend_embeds is None:  # smoke path: zero audio
+    if frontend_embeds is None:  # smoke path: silence
         frontend_embeds = jnp.zeros(
-            (tokens.shape[0], cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+            (tokens.shape[0], cfg.n_mels, 2 * cfg.frontend_tokens), jnp.bfloat16
         )
     enc = encode(params, frontend_embeds, cfg, sctx)
 
     B, S = tokens.shape
-    from repro.models.transformer import _embed_lookup
-
-    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = _params.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = x + params["pos_embed"][:S].astype(jnp.bfloat16)[None]
     x = sctx.act_btd(x)
 
@@ -164,7 +241,8 @@ def forward(
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, _ = maybe_scan(body_fn, x, params["dec_layers"], cfg.scan_layers)
     x = _lnorm(x, params["dec_ln"])
-    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))  # tied head
+    head = _params.dense_weight(params["embed"]).T  # tied head
+    logits = jnp.dot(x, head.astype(x.dtype))
     return sctx.cs(logits, sctx.batch, None, sctx.model), {}
 
 
@@ -192,13 +270,11 @@ def prefill(
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
     if frontend_embeds is None:
         frontend_embeds = jnp.zeros(
-            (tokens.shape[0], cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+            (tokens.shape[0], cfg.n_mels, 2 * cfg.frontend_tokens), jnp.bfloat16
         )
     enc = encode(params, frontend_embeds, cfg, sctx)
     B, S = tokens.shape
-    from repro.models.transformer import _embed_lookup
-
-    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = _params.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = x + params["pos_embed"][:S].astype(jnp.bfloat16)[None]
 
     def body(h, inp):
@@ -227,7 +303,8 @@ def prefill(
 
     x, new_caches = maybe_scan(body, x, (params["dec_layers"], caches), cfg.scan_layers)
     x = _lnorm(x, params["dec_ln"])
-    logits = jnp.dot(x[:, -1:], params["embed"].T.astype(x.dtype))
+    head = _params.dense_weight(params["embed"]).T
+    logits = jnp.dot(x[:, -1:], head.astype(x.dtype))
     return logits, new_caches
 
 
@@ -236,9 +313,7 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
     B = tokens.shape[0]
     hd = cfg.hd
     pos = caches["self"].pos[0]
-    from repro.models.transformer import _embed_lookup
-
-    x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = _params.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0).astype(
         jnp.bfloat16
     )[None, 0][:, None]
@@ -265,5 +340,6 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
 
     x, new_caches = maybe_scan(body, x, (params["dec_layers"], caches), cfg.scan_layers)
     x = _lnorm(x, params["dec_ln"])
-    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))
+    head = _params.dense_weight(params["embed"]).T
+    logits = jnp.dot(x, head.astype(x.dtype))
     return logits, new_caches

@@ -5,7 +5,9 @@ stablelm-3b, deepseek-moe-16b, kimi-k2-1t-a32b, and the LM backbone of
 internvl2-26b (``frontend="vit"``).  Per-layer parameters are stacked on a
 leading L axis and executed with ``lax.scan`` so the HLO stays O(1 layer)
 regardless of depth (DESIGN.md §7); PASM quantization swaps any large dense
-leaf for a PASMTensor and every matmul dispatches through ``nn.layers.linear``.
+leaf for a :class:`~repro.core.params.PasmParams` and every matmul
+dispatches through ``nn.layers.linear`` — this module holds zero container
+``isinstance`` of its own.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import pasm as _pasm
+from repro.core import params as _params
 from repro.models.common import Initializer, ShardCtx, maybe_scan
 from repro.nn import attention as A
 from repro.nn import layers as L
@@ -132,10 +134,20 @@ def trunc_embed(ini: Initializer, V: int, D: int):
 
 
 def _embed_lookup(w, tokens: jax.Array) -> jax.Array:
-    if isinstance(w, _pasm.PASMTensor):
-        rows = _pasm.logical_idx(w)[tokens]  # (B, S, D) uint8 indices
-        return w.codebook[0][rows.astype(jnp.int32)]
-    return w[tokens]
+    # quantized tables gather uint8 index rows + one dictionary dereference
+    return _params.embed_lookup(w, tokens)
+
+
+def _lm_head(params: dict, cfg: ArchConfig):
+    """The ``(D, V)`` head matrix: tied heads dequantize the embedding once.
+
+    Kernels compute ``x @ W``, not ``x @ Wᵀ``, so the tied head takes the
+    logical dense matrix (a no-op view for dense tables) and transposes it
+    at the call site; untied heads pass their leaf straight to ``linear``.
+    """
+    if cfg.tie_embeddings:
+        return _params.dense_weight(params["embed"]).T
+    return params["lm_head"]
 
 
 def _attention_block(
@@ -266,10 +278,7 @@ def forward(
     (x, aux_sum), _ = maybe_scan(body_fn, (x, aux_sum), params["layers"], cfg.scan_layers)
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    if cfg.tie_embeddings and isinstance(params["embed"], _pasm.PASMTensor):
-        head = _pasm.dequantize(params["embed"]).T
-    logits = L.linear(x, head, impl if not cfg.tie_embeddings else "dense")
+    logits = L.linear(x, _lm_head(params, cfg), "dense" if cfg.tie_embeddings else impl)
     logits = sctx.cs(logits, sctx.batch, None, sctx.model)
     if n_prefix:
         logits = logits[:, n_prefix:]
@@ -330,10 +339,7 @@ def decode_step(
     x, new_scan = maybe_scan(body, x, (params["layers"], caches["scan"]), cfg.scan_layers)
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    if cfg.tie_embeddings and isinstance(params["embed"], _pasm.PASMTensor):
-        head = _pasm.dequantize(params["embed"]).T
-    logits = L.linear(x, head, impl if not cfg.tie_embeddings else "dense")
+    logits = L.linear(x, _lm_head(params, cfg), "dense" if cfg.tie_embeddings else impl)
     return logits, {"dense": new_dense, "scan": new_scan}
 
 
@@ -366,6 +372,5 @@ def prefill(
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, new_scan = maybe_scan(body_fn, x, (params["layers"], caches["scan"]), cfg.scan_layers)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = L.linear(x[:, -1:], head, "dense" if cfg.tie_embeddings else impl)
+    logits = L.linear(x[:, -1:], _lm_head(params, cfg), "dense" if cfg.tie_embeddings else impl)
     return logits, {"dense": new_dense, "scan": new_scan}

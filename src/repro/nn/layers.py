@@ -1,21 +1,21 @@
 """Shared layers: linear (PASM-aware), norms, activations, RoPE, embeddings.
 
-Every weight-bearing op goes through :func:`linear`, which dispatches on the
-leaf type: a plain array runs a dense matmul; a :class:`PASMTensor` runs the
-weight-shared path selected by ``impl`` — this is how the paper's technique
-is integrated as a first-class feature across all architectures.
+Every weight-bearing op goes through :func:`linear`, a thin alias of
+:func:`repro.core.params.matmul` — one dispatch table (dense | shared |
+int4-packed | grouped × dequant | kernel | pas_kernel, with the fused
+bias/ReLU epilogue and ``mesh=`` shard_map support) shared with the conv
+path, zero container ``isinstance`` in model code.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import pasm as _pasm
-from repro.kernels import ops as _kops
+from repro.core import params as _params
 
-Weight = Union[jax.Array, _pasm.PASMTensor]
+Weight = _params.Weight
 
 __all__ = [
     "linear",
@@ -29,23 +29,27 @@ __all__ = [
 ]
 
 
-def linear(x: jax.Array, w: Weight, impl: str = "dense") -> jax.Array:
-    """``x @ w`` where ``w`` is dense or weight-shared (PASM).
+def linear(
+    x: jax.Array,
+    w: Weight,
+    impl: str = "dense",
+    *,
+    bias: Optional[jax.Array] = None,
+    relu: bool = False,
+    mesh=None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x @ w`` where ``w`` is dense or weight-shared (a :class:`PasmParams`).
 
-    impl (for PASM leaves): "dequant" | "kernel" | "pas_kernel".
-    "dequant" is the weight-shared-MAC baseline and the only distribution-safe
-    path under pjit (pure XLA gather+dot); the kernels are single-device /
-    shard_map paths (DESIGN.md §2).
+    ``impl`` (for quantized leaves): ``"dequant"`` | ``"kernel"`` |
+    ``"pas_kernel"`` — plain arrays and dense params always take the XLA dot
+    (post-``quantize_params`` trees mix dense and quantized leaves).  The
+    kernel paths carry the fused bias/ReLU epilogue and run under a
+    ``("data", "model")`` mesh via the same shard_map dispatch conv uses —
+    every impl is distribution-safe (DESIGN.md §2).
     """
-    if isinstance(w, _pasm.PASMTensor):
-        if impl == "kernel":
-            return _kops.pasm_matmul(x, w).astype(x.dtype)
-        if impl == "pas_kernel":
-            return _kops.pas_matmul(x, w).astype(x.dtype)
-        wd = _pasm.dequantize(w, dtype=x.dtype)  # dictionary lookup (Fig 3)
-        return jnp.dot(x, wd, preferred_element_type=jnp.float32).astype(x.dtype)
-    return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(
-        x.dtype
+    return _params.matmul(
+        x, w, impl=impl, bias=bias, relu=relu, mesh=mesh, interpret=interpret
     )
 
 

@@ -11,7 +11,9 @@ no (T, E, C) one-hot is ever built.
 Weights follow DeepSeek-MoE structure: ``n_shared`` always-on experts plus
 ``n_experts`` routed experts with top-k softmax gating.  The router stays
 dense under PASM quantization (DESIGN.md §5); expert weights may be
-PASMTensors (dequantized per-einsum on the baseline path).
+:class:`~repro.core.params.PasmParams` stacked over the expert dim — each
+expert dereferencing its OWN codebook set (per-expert grouped dictionaries),
+through the same dispatch every other matmul in the zoo uses.
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.core import pasm as _pasm
+from repro.core import params as _params
 from repro.nn import layers as L
 
 __all__ = ["moe_ffn", "expert_ffn"]
@@ -44,28 +46,33 @@ def expert_ffn(x: jax.Array, w1, w3, w2, act: str, impl: str) -> jax.Array:
     return L.linear(h, w2, impl)
 
 
-def _dense_w(w, dtype, constrain=_noop_constrain, spec=None):
-    """Expert weight stack (E, K, N): dense array or stacked PASMTensor.
+def _expert_matmul(bufT, w, dt, impl, constrain=_noop_constrain, spec=None):
+    """Per-expert batched matmul ``(E, T, K) @ (E, K, N) → (E, T, N)``.
 
-    ``spec`` re-lays-out the STORED weight before use (JIT all-gather of the
-    2-D-sharded storage).  For PASM weights the gather moves the uint8/int4
-    *indices* — 4–8× fewer bytes than gathering dequantized bf16, the
-    paper's compression applied to the collective payload
+    Quantized experts under a kernel impl run one fused-dequant Pallas GEMM
+    per expert (static unroll over E), each slice carrying its own grouped
+    codebook — the paper's dictionaries specialized per expert.  Otherwise
+    (dense weights, or the dequant baseline) the stack dequantizes through
+    :func:`repro.core.params.dense_stack` into one einsum; there ``spec``
+    re-lays-out the STORED weight before use (JIT all-gather of the
+    2-D-sharded storage), and for quantized weights that gather moves the
+    uint8/int4 *indices* — 4–8× fewer bytes than gathering dequantized
+    bf16, the paper's compression applied to the collective payload
     [§Perf iteration kimi-prefill/2].
     """
-    if isinstance(w, _pasm.PASMTensor):
-        idx = w.idx if spec is None else constrain(w.idx, spec)
-        idx = jax.vmap(_pasm.unpack_int4)(idx) if w.packed else idx
-        E = idx.shape[0]
-        K, N = w.shape
-        G = w.codebook.shape[-2]
-        idxg = idx.reshape(E, G, K // G, N)
-        wd = jax.vmap(jax.vmap(lambda cb, ix: cb[ix.astype(jnp.int32)]))(
-            w.codebook, idxg
-        )
-        return wd.reshape(E, K, N).astype(dtype)
-    w = w if spec is None else constrain(w, spec)
-    return w.astype(dtype)
+    if _params.is_quantized(w) and impl in ("kernel", "pas_kernel"):
+        E = bufT.shape[0]
+        return jnp.stack(
+            [
+                _params.matmul(
+                    bufT[e], jax.tree.map(lambda a: a[e], w), impl=impl
+                )
+                for e in range(E)
+            ]
+        ).astype(dt)
+    return jnp.einsum(
+        "etk,ekn->etn", bufT, _params.dense_stack(w, dt, constrain, spec)
+    )
 
 
 def moe_ffn(
@@ -171,19 +178,18 @@ def moe_ffn(
     hspec = (ep_axis, tspec, None) if gather_weights else (ep_axis, None, ff_axis)
     bufT = jnp.transpose(buf, (1, 0, 2, 3)).reshape(E, n_groups * cap, D)
     bufT = constrain(bufT, (ep_axis, tspec, None))
-    w1 = _dense_w(params["w1"], dt, constrain, wspec)
-    w2 = _dense_w(params["w2"], dt, constrain, wspec)
-    h = jnp.einsum("etd,edf->etf", bufT, w1)
+    h = _expert_matmul(bufT, params["w1"], dt, impl, constrain, wspec)
     if act == "swiglu":
-        w3 = _dense_w(params["w3"], dt, constrain, wspec)
-        h = jax.nn.silu(h) * jnp.einsum("etd,edf->etf", bufT, w3)
+        h = jax.nn.silu(h) * _expert_matmul(
+            bufT, params["w3"], dt, impl, constrain, wspec
+        )
     elif act == "sq_relu":
         r = jnp.maximum(h, 0)
         h = r * r
     else:
         h = jax.nn.gelu(h, approximate=True)
     h = constrain(h, hspec)
-    y2 = jnp.einsum("etf,efd->etd", h, w2)
+    y2 = _expert_matmul(h, params["w2"], dt, impl, constrain, wspec)
     y2 = constrain(y2, (ep_axis, tspec, None))
     yb = y2.reshape(E, n_groups, cap, D).transpose(1, 0, 2, 3)
     yb = constrain(yb, buf4)

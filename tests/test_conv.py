@@ -1,11 +1,11 @@
-"""The paper's conv accelerator (Fig 13): all three variants agree."""
+"""The paper's conv accelerator (Fig 13): all engine formulations agree."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _prop import given, settings, st
 
-from repro.configs.alexnet_conv import PAPER_BINS, PAPER_SPEC
+from repro.configs.alexnet_conv import PAPER_BINS, PAPER_SPEC, PaperAccel
 from repro.core import conv as cv
 
 
@@ -21,22 +21,28 @@ def _setup(spec, bins, seed=0):
 def test_paper_accelerator_spec(bins):
     """§4 configuration: 5×5 image, 15 ch, 3×3 kernel, M=2 — all variants equal."""
     spec = PAPER_SPEC
+    conv = spec.conv()
     img, kern, cb, idx = _setup(spec, bins)
-    y_ws = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
-    y_pasm = cv.conv2d_pasm(img, idx, cb, spec=spec)
-    y_direct = cv.conv2d_direct(img, cb[idx.astype(jnp.int32)], spec=spec)
+    p = cv.ConvParams.shared(idx, cb)
+    y_ws = cv.conv2d(img, p, conv)
+    y_pas = cv.conv2d(img, p, conv, engine="pas_einsum")
+    y_direct = cv.conv2d(
+        img, cv.ConvParams.dense(cb[idx.astype(jnp.int32)]), conv, engine="einsum"
+    )
     assert y_ws.shape == (2, 3, 3)
-    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_pasm), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_pas), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(y_ws), np.asarray(y_direct), rtol=1e-6, atol=1e-6)
 
 
 def test_bias_relu_stride():
     """§4: stride / bias / ReLU are outside weight sharing and must agree."""
-    spec = cv.ConvSpec(IH=9, IW=9, C=4, KY=3, KX=3, M=3, stride=2)
+    spec = PaperAccel(IH=9, IW=9, C=4, KY=3, KX=3, M=3, stride=2)
+    conv = spec.conv(bias=True, relu=True)
     img, kern, cb, idx = _setup(spec, 8)
     bias = jnp.array([0.5, -10.0, 0.1])
-    a = cv.conv2d_weight_shared(img, idx, cb, bias, spec=spec, relu=True)
-    b = cv.conv2d_pasm(img, idx, cb, bias, spec=spec, relu=True)
+    p = cv.ConvParams.shared(idx, cb, bias=bias)
+    a = cv.conv2d(img, p, conv)
+    b = cv.conv2d(img, p, conv, engine="pas_einsum")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
     assert float(a.min()) >= 0.0  # ReLU applied
 
@@ -51,50 +57,51 @@ def test_bias_relu_stride():
     seed=st.integers(0, 100),
 )
 def test_conv_property(c, m, ih, bins, stride, seed):
-    spec = cv.ConvSpec(IH=ih, IW=ih, C=c, KY=3, KX=3, M=m, stride=stride)
+    spec = PaperAccel(IH=ih, IW=ih, C=c, KY=3, KX=3, M=m, stride=stride)
     img, kern, cb, idx = _setup(spec, bins, seed)
-    a = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
-    b = cv.conv2d_pasm(img, idx, cb, spec=spec)
+    p = cv.ConvParams.shared(idx, cb)
+    a = cv.conv2d(img, p, spec.conv())
+    b = cv.conv2d(img, p, spec.conv(), engine="pas_einsum")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
 
 
 def test_batched_kernel_path_matches_seed_einsum_paper_spec():
     """Acceptance: batch dim + Pallas execution ≡ the seed einsum port (§4 spec)."""
     spec = PAPER_SPEC
+    conv = spec.conv()
     img, kern, cb, idx = _setup(spec, 16)
+    p = cv.ConvParams.shared(idx, cb)
     imgs = jnp.stack([img, img * 0.5, img - 1.0])
-    y_ws = cv.conv2d_weight_shared(imgs, idx, cb, spec=spec)  # auto → pasm_matmul
-    y_pasm = cv.conv2d_pasm(imgs, idx, cb, spec=spec)  # auto → pas_matmul
-    assert y_ws.shape == (3, 2, 3, 3) and y_pasm.shape == (3, 2, 3, 3)
+    y_ws = cv.conv2d(imgs, p, conv, engine="kernel")  # fused-dequant pasm_matmul
+    y_pas = cv.conv2d(imgs, p, conv, engine="pas_kernel")  # two-phase pas_matmul
+    assert y_ws.shape == (3, 2, 3, 3) and y_pas.shape == (3, 2, 3, 3)
     for b in range(3):
-        want = cv.conv2d_weight_shared(imgs[b], idx, cb, spec=spec, engine="einsum")
+        want = cv.conv2d(imgs[b], p, conv, engine="einsum")
         np.testing.assert_allclose(np.asarray(y_ws[b]), np.asarray(want), rtol=1e-4, atol=1e-4)
-        np.testing.assert_allclose(np.asarray(y_pasm[b]), np.asarray(want), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y_pas[b]), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
 def test_batched_kernel_path_realistic_layer():
     """Acceptance: a realistic conv layer (K-padded reduction) on the kernels."""
-    spec = cv.ConvSpec(IH=16, IW=16, C=64, KY=3, KX=3, M=128, stride=1)  # K=576
+    spec = PaperAccel(IH=16, IW=16, C=64, KY=3, KX=3, M=128, stride=1)  # K=576
+    conv = spec.conv(bias=True, relu=True)
     img, kern, cb, idx = _setup(spec, 16, seed=3)
     imgs = jax.random.normal(jax.random.PRNGKey(9), (2, spec.C, spec.IH, spec.IW))
     bias = jnp.linspace(-0.5, 0.5, spec.M)
-    y_ws = cv.conv2d_weight_shared(imgs, idx, cb, bias, spec=spec, relu=True)
-    y_pasm = cv.conv2d_pasm(imgs, idx, cb, bias, spec=spec, relu=True)
-    want = jnp.stack([
-        cv.conv2d_weight_shared(imgs[b], idx, cb, bias, spec=spec, relu=True,
-                                engine="einsum")
-        for b in range(2)
-    ])
+    p = cv.ConvParams.shared(idx, cb, bias=bias)
+    y_ws = cv.conv2d(imgs, p, conv, engine="kernel")
+    y_pas = cv.conv2d(imgs, p, conv, engine="pas_kernel")
+    want = jnp.stack([cv.conv2d(imgs[b], p, conv, engine="einsum") for b in range(2)])
     assert y_ws.shape == (2, 128, 14, 14)
     np.testing.assert_allclose(np.asarray(y_ws), np.asarray(want), rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(y_pasm), np.asarray(want), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_pas), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
-def test_conv_pasm_tensor_layout():
+def test_conv_gemm_tensor_layout():
     """The (c,ky,kx) flat order of im2col columns matches the GEMM operand."""
-    spec = cv.ConvSpec(IH=6, IW=6, C=3, KY=3, KX=3, M=4, stride=1)
+    spec = PaperAccel(IH=6, IW=6, C=3, KY=3, KX=3, M=4, stride=1)
     img, kern, cb, idx = _setup(spec, 8, seed=5)
-    t = cv.conv_pasm_tensor(idx, cb)
+    t = cv.ConvParams.shared(idx, cb).gemm_tensor("NCHW")
     assert t.shape == (spec.C * spec.KY * spec.KX, spec.M)
     assert t.groups == 1 and not t.packed
     # dequantized GEMM operand == the dictionary-dereferenced kernel, flattened
@@ -108,24 +115,28 @@ def test_conv_pasm_tensor_layout():
 
 
 def test_batched_direct_matches_per_image():
-    spec = cv.ConvSpec(IH=9, IW=9, C=4, KY=3, KX=3, M=3, stride=2)
+    spec = PaperAccel(IH=9, IW=9, C=4, KY=3, KX=3, M=3, stride=2)
+    conv = spec.conv()
     img, kern, cb, idx = _setup(spec, 8)
+    p = cv.ConvParams.dense(kern)
     imgs = jnp.stack([img, 2.0 * img])
-    y = cv.conv2d_direct(imgs, kern, spec=spec)
+    y = cv.conv2d(imgs, p, conv, engine="einsum")
     for b in range(2):
         np.testing.assert_allclose(
-            np.asarray(y[b]), np.asarray(cv.conv2d_direct(imgs[b], kern, spec=spec)),
+            np.asarray(y[b]), np.asarray(cv.conv2d(imgs[b], p, conv, engine="einsum")),
             rtol=1e-6, atol=1e-6,
         )
 
 
 def test_integer_images_bit_exact():
     """With integer images + integer codebook, PASM conv is bit-exact (§5.3)."""
-    spec = cv.ConvSpec(IH=7, IW=7, C=3, KY=3, KX=3, M=2, stride=1)
+    spec = PaperAccel(IH=7, IW=7, C=3, KY=3, KX=3, M=2, stride=1)
+    conv = spec.conv()
     rng = np.random.default_rng(0)
     img = jnp.asarray(rng.integers(-8, 8, size=(3, 7, 7)), jnp.int32)
     idx = jnp.asarray(rng.integers(0, 4, size=(2, 3, 3, 3)), jnp.uint8)
     cb = jnp.asarray(rng.integers(-8, 8, size=4), jnp.int32)
-    a = cv.conv2d_weight_shared(img, idx, cb, spec=spec)
-    b = cv.conv2d_pasm(img, idx, cb, spec=spec)
+    p = cv.ConvParams.shared(idx, cb)
+    a = cv.conv2d(img, p, conv, engine="einsum")
+    b = cv.conv2d(img, p, conv, engine="pas_einsum")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

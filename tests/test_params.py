@@ -1,0 +1,237 @@
+"""PasmParams: one weight-shared container from dense matmuls to MoE and voice.
+
+The multi-layer-refactor acceptance suite (ISSUE 6):
+
+* ``nn.layers.linear`` dispatches dense | shared | int4-packed | grouped
+  params through the Pallas kernels, matching the dequant-einsum oracle —
+  including odd reduction lengths (the §3 reserved-zero-bin K-pad now
+  covers dense layers, not just conv).
+* ``mesh=`` shards the same call bit-exactly (8 fake host devices).
+* MoE experts carry **per-expert grouped codebooks** through the kernels.
+* Whisper-tiny (audio family) runs its quantized forward through the
+  kernel path — the paper's technique on voice.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import params as P
+from repro.nn import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quantized(K, N, *, kind="shared", bins=16, groups=1, bias=False, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N)) * K ** -0.5
+    b = jnp.linspace(-0.2, 0.2, N) if bias else None
+    p = P.PasmParams.quantize(w, bins, groups=groups, bias=b)
+    if kind == "packed":
+        p = p.pack()
+    return p
+
+
+CASES = [
+    # (name, K, N, kind, bins, groups)
+    ("shared", 48, 32, "shared", 16, 1),
+    ("shared-odd-K", 47, 24, "shared", 16, 1),
+    ("packed", 48, 32, "packed", 16, 1),
+    ("packed-odd-K", 47, 24, "packed", 8, 1),  # §3 K-pad on a dense layer
+    ("grouped", 48, 32, "shared", 8, 4),
+    ("grouped-packed", 48, 32, "packed", 8, 4),
+]
+
+
+@pytest.mark.parametrize("name,K,N,kind,bins,groups", CASES)
+@pytest.mark.parametrize("impl", ["kernel", "pas_kernel"])
+def test_linear_kernel_matches_dequant_oracle(name, K, N, kind, bins, groups, impl):
+    p = _quantized(K, N, kind=kind, bins=bins, groups=groups, bias=True)
+    x = jax.random.normal(KEY, (3, 7, K))
+    if impl == "pas_kernel" and groups > 1:
+        with pytest.raises(ValueError, match="paper-faithful single-dictionary"):
+            L.linear(x, p, impl)
+        return
+    want = L.linear(x, p, "dequant", relu=True)
+    got = L.linear(x, p, impl, relu=True)
+    assert got.shape == (3, 7, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_linear_dense_paths():
+    """Plain arrays and dense-kind params always take the dense dot."""
+    w = jax.random.normal(KEY, (32, 16))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 32))
+    want = x @ w
+    for imp in ("dense", "kernel", "pas_kernel"):  # impl is moot for dense weights
+        np.testing.assert_allclose(
+            np.asarray(L.linear(x, w, imp)), np.asarray(want), rtol=1e-6, atol=1e-6
+        )
+    p = P.PasmParams.dense(w, bias=jnp.ones((16,)))
+    np.testing.assert_allclose(
+        np.asarray(L.linear(x, p, "kernel")), np.asarray(want + 1.0),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_container_accounting():
+    """compression_ratio / nbytes on the shapes the bench rows stamp."""
+    p = _quantized(256, 256, kind="packed", bins=16)
+    assert p.bits == 4 and p.groups == 1
+    # idx int4-packed: K·N/2 bytes + the (1, B) f32 codebook
+    assert p.nbytes_weights == 256 * 256 // 2 + p.codebook.size * 4
+    assert p.nbytes_dense_bf16 == 256 * 256 * 2
+    assert p.compression_ratio > 3.9  # ~4× vs bf16 at 4 bits
+
+
+def test_exactly_one_container_in_core():
+    """Acceptance: repro.core exports one weight-shared container type."""
+    import repro.core as core
+
+    assert hasattr(core, "PasmParams")
+    assert not hasattr(core, "PASMTensor")  # survives only on repro.core.pasm
+
+
+# ---------------------------------------------------------------------------
+# mesh: the same linear call, sharded (needs the 8 fake host devices)
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 devices; run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8 (scripts/ci.sh)",
+)
+
+
+def _mesh(shape):
+    from repro.launch.mesh import make_conv_mesh
+
+    return make_conv_mesh(shape)
+
+
+@needs_mesh
+@pytest.mark.parametrize("name,K,N,kind,bins,groups", CASES)
+@pytest.mark.parametrize("mesh_shape", [(4, 1), (2, 2)])
+def test_linear_mesh_bit_exact(name, K, N, kind, bins, groups, mesh_shape):
+    """Sharded linear ≡ single-device, every kind — the caveat is dead."""
+    p = _quantized(K, N, kind=kind, bins=bins, groups=groups, bias=True)
+    x = jax.random.normal(KEY, (8, K))
+    want = L.linear(x, p, "kernel", relu=True)
+    got = L.linear(x, p, "kernel", relu=True, mesh=_mesh(mesh_shape))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs_mesh
+def test_linear_mesh_uneven_rows():
+    """M % n_data != 0 pads rows in and slices them off."""
+    p = _quantized(48, 32, kind="packed")
+    x = jax.random.normal(KEY, (6, 48))  # 6 rows over 4-way data
+    want = L.linear(x, p, "kernel")
+    got = L.linear(x, p, "kernel", mesh=_mesh((4, 1)))
+    assert got.shape == want.shape == (6, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: per-expert grouped codebooks through the kernels
+# ---------------------------------------------------------------------------
+
+
+def test_moe_per_expert_codebooks():
+    from repro.configs.base import MoEConfig
+    from repro.nn import moe as M
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=16, n_shared=0)
+    D, E, Fe = 32, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    p = {
+        "router": jax.random.normal(ks[0], (D, E)) * 0.2,
+        "w1": jax.random.normal(ks[1], (E, D, Fe)) * 0.2,
+        "w3": jax.random.normal(ks[2], (E, D, Fe)) * 0.2,
+        "w2": jax.random.normal(ks[3], (E, Fe, D)) * 0.2,
+    }
+    pq = {**p}
+    for name in ("w1", "w3", "w2"):
+        pq[name] = P.PasmParams.quantize(p[name], bins=16, groups=2)
+        # one (G, B) dictionary PER EXPERT — the private _dense_w unpack is gone
+        assert pq[name].codebook.shape == (E, 2, 16)
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, D))
+    y_k, _ = M.moe_ffn(x, pq, cfg, impl="kernel", dropless=True)
+    y_d, _ = M.moe_ffn(x, pq, cfg, impl="dequant", dropless=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_d), rtol=1e-4, atol=1e-4)
+
+
+def test_transformer_quantized_kernel_forward():
+    """A dense transformer's FFN/attention matmuls through the kernel path."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.models.common import quantize_params
+
+    cfg = get_config("qwen3-32b", smoke=True).with_quant(
+        enabled=True, bins=16, impl="kernel", min_weight_elems=64
+    )
+    model = api.get_model(cfg)
+    params = quantize_params(model.init_params(cfg, KEY), cfg)
+    tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    lg_k, _ = model.forward(params, tokens, cfg)
+    lg_d, _ = model.forward(params, tokens, cfg.with_quant(impl="dequant"))
+    assert bool(jnp.isfinite(lg_k.astype(jnp.float32)).all())
+    # bf16 accumulation order differs between the kernel and XLA dots
+    np.testing.assert_allclose(
+        np.asarray(lg_k.astype(jnp.float32)), np.asarray(lg_d.astype(jnp.float32)),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Whisper-tiny: the technique on voice, end to end through the kernels
+# ---------------------------------------------------------------------------
+
+
+def test_whisper_tiny_quantized_kernel_forward():
+    from repro.configs import whisper_tiny
+    from repro.models import encdec
+    from repro.models.common import quantize_params
+
+    cfg = whisper_tiny.smoke_config().with_quant(
+        enabled=True, bins=16, impl="kernel", min_weight_elems=64
+    )
+    params = encdec.init_params(cfg, KEY)
+    params = quantize_params(params, cfg)
+    params = encdec.quantize_frontend(params, bins=16)
+    B = 2
+    mel = jax.random.normal(
+        jax.random.PRNGKey(5), (B, cfg.n_mels, 2 * cfg.frontend_tokens)
+    ).astype(jnp.bfloat16)
+    tokens = jax.random.randint(KEY, (B, 8), 0, cfg.vocab)
+    lg_k, _ = encdec.forward(params, tokens, cfg, frontend_embeds=mel)
+    cfg_d = cfg.with_quant(impl="dequant")
+    lg_d, _ = encdec.forward(params, tokens, cfg_d, frontend_embeds=mel)
+    assert lg_k.shape == (B, 8, cfg.vocab)
+    assert bool(jnp.isfinite(lg_k.astype(jnp.float32)).all())
+    np.testing.assert_allclose(
+        np.asarray(lg_k.astype(jnp.float32)), np.asarray(lg_d.astype(jnp.float32)),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_whisper_frontend_is_weight_shared():
+    """quantize_frontend turns the conv stem into shared ConvParams."""
+    from repro.configs import whisper_tiny
+    from repro.core.conv import ConvParams
+    from repro.models import encdec
+
+    cfg = whisper_tiny.smoke_config()
+    params = encdec.init_params(cfg, KEY)
+    qp = encdec.quantize_frontend(params, bins=8)
+    for name in ("conv1", "conv2"):
+        cp = qp["frontend"][name]
+        assert isinstance(cp, ConvParams) and cp.kind == "shared"
+        assert cp.bins == 8 and cp.bias is not None
+    # quantize_params leaves the stem alone (convs are an explicit opt-in)
+    from repro.models.common import quantize_params
+
+    qcfg = cfg.with_quant(enabled=True, bins=16, min_weight_elems=1)
+    qp2 = quantize_params(params, qcfg)
+    assert isinstance(qp2["frontend"]["conv1"]["kernel"], jax.Array)
