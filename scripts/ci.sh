@@ -15,9 +15,13 @@
 # bit-exactness — both skip their mesh tests on one device, so this run is
 # where they actually execute), the dense weight-stream gate (BENCH_dense.json
 # from pasm_roofline.py: a packed transformer FFN layer must model strictly
-# fewer weight-stream bytes than dense bf16), and the sharding gate:
-# --devices 8 per-device modeled HBM bytes on AlexNet conv1 strictly below
-# the single-device figure for the same global batch.
+# fewer weight-stream bytes than dense bf16), the continuous-batching serve
+# suite on one device AND on 8 fake devices plus the traffic-replay smoke
+# (BENCH_serve.json: measured p50/p99/tok_s/img_s rows must exist and the
+# PASM-quantized modeled decode tok/s must be >= dense — the weight-stream
+# win end to end), and the sharding gate: --devices 8 per-device modeled
+# HBM bytes on AlexNet conv1 strictly below the single-device figure for
+# the same global batch.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -109,6 +113,40 @@ assert packed["hbm_bytes"] < dense["hbm_bytes"], (
 )
 print(f"FFN packed {packed['hbm_bytes']} B < dense bf16 {dense['hbm_bytes']} B "
       f"(weight stream {packed['compression_ratio']}x smaller) OK")
+PY
+
+echo "== serve: continuous-batching suite (single device) =="
+python -m pytest -q tests/test_serve.py tests/test_engine.py
+
+echo "== serve: continuous-batching suite (8 fake devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q tests/test_serve.py
+
+echo "== smoke: traffic replay (BENCH_serve.json + PASM decode tok/s gate) =="
+python benchmarks/serve_bench.py --smoke --json
+test -s BENCH_serve.json && echo "BENCH_serve.json written"
+python - <<'PY'
+import json, math
+
+rows = {r["name"]: r for r in json.load(open("BENCH_serve.json"))["records"]}
+# measured replay rows exist and are finite
+for name in ("serve.pasm.lm.p50_latency", "serve.pasm.lm.p99_latency",
+             "serve.pasm.lm.tok_s", "serve.pasm.cnn.img_s"):
+    assert name in rows and math.isfinite(rows[name]["us_per_call"]), name
+assert rows["serve.pasm.lm.tok_s"]["tok_s"] > 0
+assert rows["serve.pasm.cnn.img_s"]["img_s"] > 0
+# the weight-stream win must show up end to end: PASM-quantized modeled
+# decode tok/s (memory roofline over the stored weight stream) >= dense
+dense = rows["serve.decode.tok_s_modeled.dense"]
+pasm = rows["serve.decode.tok_s_modeled.pasm"]
+assert pasm["tok_s_modeled"] >= dense["tok_s_modeled"], (
+    f"PASM modeled decode tok/s must be >= dense: "
+    f"pasm={pasm['tok_s_modeled']:.0f} dense={dense['tok_s_modeled']:.0f}"
+)
+print(f"PASM modeled decode {pasm['tok_s_modeled']:.0f} tok/s >= dense "
+      f"{dense['tok_s_modeled']:.0f} tok/s "
+      f"({pasm['tok_s_modeled'] / dense['tok_s_modeled']:.2f}x, "
+      f"weight stream {dense['hbm_bytes']} -> {pasm['hbm_bytes']} B) OK")
 PY
 
 echo "== smoke: per-device HBM bytes under --devices 8 (AlexNet conv1) =="

@@ -1,20 +1,52 @@
-"""Serving launcher: bring up an Engine with PASM-quantized weights.
+"""Serving launcher: continuous-batching engine + mixed CNN traffic.
+
+Brings up the PASM-quantized :class:`~repro.serve.engine.Engine` (per-slot
+KV positions, FCFS admission over length buckets), optionally a
+:class:`~repro.serve.batcher.CnnBatcher` for concurrent image traffic, runs
+the requested load through the :class:`~repro.serve.batcher.MixedBatcher`
+loop, and prints the serve/metrics.py rollup (p50/p99 latency + TTFT per
+class, tok/s, img/s, slot occupancy).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \\
-        --quant pasm --requests 8
+        --quant pasm --requests 8 --images 4
 """
 from __future__ import annotations
 
 import argparse
-import time
+import math
 
 import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import api
-from repro.models.common import ShardCtx, quantize_params, weight_bytes
+from repro.configs import get_cnn_config, get_config
+from repro.models import api, cnn
+from repro.models.common import quantize_params, weight_bytes
+from repro.serve.batcher import CnnBatcher, MixedBatcher
 from repro.serve.engine import Engine
+from repro.serve.metrics import Metrics
+
+
+def _fmt(v, unit=""):
+    if isinstance(v, float):
+        return "n/a" if math.isnan(v) else f"{v:.4g}{unit}"
+    return f"{v}{unit}"
+
+
+def print_rollup(roll: dict, slots: int) -> None:
+    print(f"[serve] requests: {roll['n_done']}/{roll['n_requests']} done, "
+          f"{roll['n_stuck']} stuck; mean occupancy "
+          f"{_fmt(roll['mean_occupancy'])} over {slots} slots")
+    for kind, rate in (("lm", "tok_s"), ("cnn", "img_s")):
+        if not roll[f"{kind}_n"]:
+            continue
+        print(f"[serve]   {kind}: n={roll[f'{kind}_n']}  "
+              f"latency p50={_fmt(roll[f'{kind}_p50_latency_s'], 's')} "
+              f"p99={_fmt(roll[f'{kind}_p99_latency_s'], 's')}  "
+              f"ttft p50={_fmt(roll[f'{kind}_p50_ttft_s'], 's')} "
+              f"p99={_fmt(roll[f'{kind}_p99_ttft_s'], 's')}  "
+              f"{rate}={_fmt(roll[rate])}")
+    if roll["slo_met"] or roll["slo_missed"]:
+        print(f"[serve]   SLO: {roll['slo_met']} met, {roll['slo_missed']} missed")
 
 
 def main(argv=None):
@@ -25,8 +57,11 @@ def main(argv=None):
     ap.add_argument("--bins", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8, help="LM requests")
+    ap.add_argument("--images", type=int, default=0, help="CNN classify requests")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency budget (SLO accounting)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -42,20 +77,31 @@ def main(argv=None):
             f"{wb['stored']/1e6:.1f} MB stored ({wb['ratio']:.1f}× compression)"
         )
 
-    eng = Engine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq)
+    metrics = Metrics()
+    slo_s = args.slo_ms / 1e3 if args.slo_ms else None
+    eng = Engine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
+                 metrics=metrics)
     rng = np.random.default_rng(args.seed)
     reqs = [
-        eng.submit(rng.integers(0, cfg.vocab, size=rng.integers(4, 12)), args.max_new)
+        eng.submit(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))),
+                   args.max_new, slo_s=slo_s)
         for _ in range(args.requests)
     ]
-    t0 = time.time()
-    ticks = eng.run_until_drained()
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in reqs)
-    print(
-        f"[serve] {len(reqs)} requests, {total_tokens} tokens in {ticks} ticks, "
-        f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s)"
-    )
+
+    cnn_b = None
+    if args.images:
+        ccfg = get_cnn_config("alexnet", smoke=args.smoke)
+        cparams = cnn.quantize(cnn.init_params(ccfg, jax.random.PRNGKey(args.seed)), ccfg)
+        cnn_b = CnnBatcher(ccfg, cparams, max_batch=args.slots, metrics=metrics)
+        C, H, W = ccfg.in_chw
+        for _ in range(args.images):
+            h = int(rng.integers(8, H + 1))
+            w = int(rng.integers(8, W + 1))
+            cnn_b.submit(rng.standard_normal((C, h, w)).astype(np.float32), slo_s=slo_s)
+
+    ticks = MixedBatcher(eng, cnn_b).run_until_drained()
+    print(f"[serve] drained in {ticks} ticks")
+    print_rollup(metrics.rollup(), args.slots)
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] → {r.out[:8]}...")
     return 0

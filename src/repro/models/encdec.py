@@ -264,9 +264,15 @@ def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
 
 def prefill(
     params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(),
-    *, frontend_embeds: Optional[jax.Array] = None,
+    *, lengths: Optional[jax.Array] = None,
+    frontend_embeds: Optional[jax.Array] = None,
 ):
-    """Encode audio, precompute cross KV, run the prompt through the decoder."""
+    """Encode audio, precompute cross KV, run the prompt through the decoder.
+
+    ``lengths`` (B,) — per-slot real prompt lengths for right-padded batches
+    (same contract as ``transformer.prefill``): self-KV counters advance per
+    slot, logits come from each slot's last real position.
+    """
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
     if frontend_embeds is None:
         frontend_embeds = jnp.zeros(
@@ -286,7 +292,7 @@ def prefill(
         v = L.linear(xn, lp["attn"]["wv"], impl).reshape(B, S, cfg.n_kv_heads, hd)
         o = A.gqa_attention(q, k, v, causal=True, chunk=min(1024, S))
         h = h + L.linear(o.reshape(B, S, -1), lp["attn"]["wo"], impl)
-        new_self = A.update_cache(cache["self"], k, v)
+        new_self = A.update_cache(cache["self"], k, v, lengths=lengths)
         ck = L.linear(enc, lp["cross"]["wk"], impl).reshape(B, -1, cfg.n_kv_heads, hd)
         cv = L.linear(enc, lp["cross"]["wv"], impl).reshape(B, -1, cfg.n_kv_heads, hd)
         xn = _lnorm(h, lp["ln_cross"])
@@ -304,7 +310,11 @@ def prefill(
     x, new_caches = maybe_scan(body, x, (params["dec_layers"], caches), cfg.scan_layers)
     x = _lnorm(x, params["dec_ln"])
     head = _params.dense_weight(params["embed"]).T
-    logits = jnp.dot(x[:, -1:], head.astype(x.dtype))
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:  # per-slot last real position in a right-padded batch
+        x_last = x[jnp.arange(B), jnp.clip(lengths - 1, 0, S - 1)][:, None]
+    logits = jnp.dot(x_last, head.astype(x.dtype))
     return logits, new_caches
 
 
@@ -312,11 +322,11 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
     B = tokens.shape[0]
     hd = cfg.hd
-    pos = caches["self"].pos[0]
+    pos = caches["self"].pos[0]  # (B,) per-slot decode positions (layer 0)
     x = _params.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
-    x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0).astype(
+    x = x + params["pos_embed"][jnp.clip(pos, 0, cfg.max_seq - 1)].astype(
         jnp.bfloat16
-    )[None, 0][:, None]
+    )[:, None]
 
     def body(h, inp):
         lp, cache = inp
@@ -331,7 +341,7 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
         qc = L.linear(xn, lp["cross"]["wq"], impl).reshape(B, 1, cfg.n_heads, hd)
         crossc = A.KVCache(
             k=cache["cross"]["k"], v=cache["cross"]["v"],
-            pos=jnp.asarray(cache["cross"]["k"].shape[1], jnp.int32),
+            pos=jnp.full((B,), cache["cross"]["k"].shape[1], jnp.int32),
         )
         oc = A.decode_attention(qc, crossc)
         h = h + L.linear(oc.reshape(B, 1, -1), lp["cross"]["wo"], impl)

@@ -187,7 +187,8 @@ def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     attn = {
         "k": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.hd), dtype),
-        "slot_pos": jnp.full((win,), -1, jnp.int32),  # absolute pos per slot
+        # absolute position per ring slot, per batch row (-1 = empty)
+        "slot_pos": jnp.full((batch, win), -1, jnp.int32),
     }
     group = {}
     for i, kind in enumerate(pat):
@@ -198,7 +199,7 @@ def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     return {
         "groups": stacked,
         "tail": [jax.tree.map(jnp.array, rec) for _ in range(tail)],
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-slot decode position
     }
 
 
@@ -226,16 +227,22 @@ def _attention_step(x, p, cfg, impl, cache, pos, cos, sin):
     k = L.linear(xn, ap["wk"], impl).reshape(B, 1, cfg.n_kv_heads, hd)
     v = L.linear(xn, ap["wv"], impl).reshape(B, 1, cfg.n_kv_heads, hd)
     q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
-    slot = pos % win
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-    spos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None], (slot,))
+    slot = pos % win  # (B,) — each batch row writes its own ring slot
+    ck = jax.vmap(
+        lambda b, n, si: jax.lax.dynamic_update_slice(b, n, (si, 0, 0))
+    )(cache["k"], k.astype(cache["k"].dtype), slot)
+    cv = jax.vmap(
+        lambda b, n, si: jax.lax.dynamic_update_slice(b, n, (si, 0, 0))
+    )(cache["v"], v.astype(cache["v"].dtype), slot)
+    spos = jax.vmap(
+        lambda b, p, si: jax.lax.dynamic_update_slice(b, p[None], (si,))
+    )(cache["slot_pos"], pos, slot)
     # masked attention over the ring buffer (mask invalid / out-of-window)
     G = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(B, cfg.n_kv_heads, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, ck, preferred_element_type=jnp.float32) * hd ** -0.5
-    valid = (spos >= 0) & (spos >= pos - win + 1) & (spos <= pos)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    valid = (spos >= 0) & (spos >= pos[:, None] - win + 1) & (spos <= pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     pweights = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", pweights.astype(cv.dtype), cv,
                    preferred_element_type=jnp.float32)
@@ -249,10 +256,10 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
     from repro.models.transformer import _embed_lookup
 
     pat, n_groups, tail = _pattern(cfg)
-    pos = caches["pos"]
+    pos = caches["pos"]  # (B,) per-slot positions
     x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)[:, 0]
-    cos, sin = L.rope(pos[None], cfg.hd, cfg.rope_theta)
-    cos, sin = cos[None], sin[None]
+    cos, sin = L.rope(pos, cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, None], sin[:, None]  # (B, 1, hd/2): per-slot rope
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
 
     def body(h, inp):
@@ -278,9 +285,17 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
 
 
 def prefill(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), **kw):
-    """Prompt pass: full-sequence forward while extracting decode states."""
+    """Prompt pass: full-sequence forward while extracting decode states.
+
+    Right-padded prompts (``lengths=``) are NOT supported: the RG-LRU scan
+    folds every input token into recurrent state, so pad tokens would corrupt
+    it.  Serve hybrid slots with exact-length prompts (bucket granularity 1).
+    """
     from repro.models.transformer import _embed_lookup
 
+    if kw.get("lengths") is not None:
+        raise ValueError("hybrid.prefill: padded prompts (lengths=) unsupported — "
+                         "the RG-LRU scan would absorb pad tokens into state")
     pat, n_groups, tail = _pattern(cfg)
     x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = sctx.act_btd(x)
@@ -299,7 +314,7 @@ def prefill(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx()
         slots = (pos0 + jnp.arange(n)) % winl
         ck = cache["k"].at[:, slots].set(kw_.astype(cache["k"].dtype))
         cv = cache["v"].at[:, slots].set(vw.astype(cache["v"].dtype))
-        spos = cache["slot_pos"].at[slots].set(pos0 + jnp.arange(n))
+        spos = cache["slot_pos"].at[:, slots].set(pos0 + jnp.arange(n))
         return {"k": ck, "v": cv, "slot_pos": spos}
 
     def body(h, inp):

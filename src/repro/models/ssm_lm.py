@@ -129,7 +129,7 @@ def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     one = {
         "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
         "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-slot decode position
     }
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
@@ -175,8 +175,17 @@ def decode_step(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardC
 
 
 def prefill(params, tokens, caches, cfg: ArchConfig, sctx: ShardCtx = ShardCtx(), **kw):
-    """Prompt pass producing final states (uses the chunked SSD scan)."""
+    """Prompt pass producing final states (uses the chunked SSD scan).
+
+    Right-padded prompts (``lengths=``) are NOT supported: the SSD scan folds
+    every input token into the recurrent state, so pad tokens would corrupt
+    it.  Serve SSM slots with exact-length prompts (bucket granularity 1).
+    """
     from repro.models.transformer import _embed_lookup
+
+    if kw.get("lengths") is not None:
+        raise ValueError("ssm_lm.prefill: padded prompts (lengths=) unsupported — "
+                         "the recurrent scan would absorb pad tokens into state")
 
     x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = sctx.act_btd(x)

@@ -151,7 +151,8 @@ def _lm_head(params: dict, cfg: ArchConfig):
 
 
 def _attention_block(
-    x, p, cfg: ArchConfig, sctx: ShardCtx, cos, sin, *, cache=None, impl: str
+    x, p, cfg: ArchConfig, sctx: ShardCtx, cos, sin, *, cache=None, impl: str,
+    lengths=None,
 ):
     B, S, D = x.shape
     hd = cfg.hd
@@ -170,7 +171,9 @@ def _attention_block(
     if cache is not None:
         quant_cache = isinstance(cache, A.QuantKVCache)
         new_cache = (
-            A.update_quant_cache(cache, k, v) if quant_cache else A.update_cache(cache, k, v)
+            A.update_quant_cache(cache, k, v, lengths=lengths)
+            if quant_cache
+            else A.update_cache(cache, k, v, lengths=lengths)
         )
         if S == 1:
             o = (
@@ -218,10 +221,11 @@ def _ffn_block(x, p, cfg: ArchConfig, sctx: ShardCtx, impl: str, dropless: bool 
     return sctx.act_btd(y), aux
 
 
-def _layer_fwd(x, p, cfg, sctx, cos, sin, cache=None, impl="dense", dropless=False):
+def _layer_fwd(x, p, cfg, sctx, cos, sin, cache=None, impl="dense", dropless=False,
+               lengths=None):
     h, new_cache = _attention_block(
         L.rms_norm(x, p["attn_norm"], cfg.norm_eps), p["attn"], cfg, sctx, cos, sin,
-        cache=cache, impl=impl,
+        cache=cache, impl=impl, lengths=lengths,
     )
     x = x + h
     h, aux = _ffn_block(
@@ -299,11 +303,6 @@ def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     return {"dense": [one() for _ in range(n_dense)], "scan": stacked}
 
 
-def _rope_at(pos, cfg):
-    cos, sin = L.rope(pos, cfg.hd, cfg.rope_theta)
-    return cos, sin
-
-
 def decode_step(
     params: dict,
     tokens: jax.Array,  # (B, 1)
@@ -314,9 +313,11 @@ def decode_step(
     """One autoregressive step against the KV caches.  Returns (logits, caches)."""
     x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
     x = sctx.act_btd(x)
-    pos = caches["scan"].pos[0] if cfg.n_layers > 1 else caches["scan"].pos[0]
-    cos, sin = _rope_at(pos[None] if pos.ndim == 0 else pos, cfg)
-    cos, sin = cos[None], sin[None]
+    # layer 0 of the scan stack carries the (B,) per-slot counters — every
+    # layer advances in lockstep, so one layer's vector positions all slots
+    pos = caches["scan"].pos[0]
+    cos, sin = L.rope(pos, cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, None], sin[:, None]  # (B, 1, hd/2): per-slot rope
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
 
     new_dense = []
@@ -350,27 +351,42 @@ def prefill(
     cfg: ArchConfig,
     sctx: ShardCtx = ShardCtx(),
     *,
+    lengths: Optional[jax.Array] = None,
     frontend_embeds: Optional[jax.Array] = None,
 ):
-    """Run the prompt through the model, filling caches.  Returns (logits, caches)."""
+    """Run the prompt through the model, filling caches.  Returns (logits, caches).
+
+    ``lengths`` (B,) marks per-slot REAL prompt lengths for right-padded
+    batches: cache counters advance by ``lengths`` (pad rows beyond each
+    slot's length are never valid to decode attention), and the returned
+    logits are each slot's LAST REAL position, not column S-1.  ``None``
+    keeps the full-length semantics (every slot is exactly S tokens).
+    """
     x, n_prefix = _prep_inputs(params, cfg, sctx, tokens, frontend_embeds)
     B, S, D = x.shape
     cos, sin = L.rope(jnp.arange(S), cfg.hd, cfg.rope_theta)
     cos, sin = cos[None], sin[None]
     impl = cfg.quant.impl if cfg.quant.enabled else "dense"
+    eff_lengths = None if lengths is None else lengths + n_prefix
 
     new_dense = []
     for p, c in zip(params.get("dense_layers", []), caches["dense"]):
-        x, nc, _ = _layer_fwd(x, p, cfg, sctx, cos, sin, cache=c, impl=impl, dropless=True)
+        x, nc, _ = _layer_fwd(x, p, cfg, sctx, cos, sin, cache=c, impl=impl,
+                              dropless=True, lengths=eff_lengths)
         new_dense.append(nc)
 
     def body(h, inp):
         lp, cache = inp
-        h, nc, _ = _layer_fwd(h, lp, cfg, sctx, cos, sin, cache=cache, impl=impl, dropless=True)
+        h, nc, _ = _layer_fwd(h, lp, cfg, sctx, cos, sin, cache=cache, impl=impl,
+                              dropless=True, lengths=eff_lengths)
         return h, nc
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, new_scan = maybe_scan(body_fn, x, (params["layers"], caches["scan"]), cfg.scan_layers)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = L.linear(x[:, -1:], _lm_head(params, cfg), "dense" if cfg.tie_embeddings else impl)
+    if eff_lengths is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = x[jnp.arange(B), jnp.clip(eff_lengths - 1, 0, S - 1)][:, None]
+    logits = L.linear(x_last, _lm_head(params, cfg), "dense" if cfg.tie_embeddings else impl)
     return logits, {"dense": new_dense, "scan": new_scan}

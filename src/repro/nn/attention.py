@@ -28,14 +28,14 @@ _NEG_INF = -1e30
 class KVCache:
     k: jax.Array  # (B, S, KV, hd)
     v: jax.Array
-    pos: jax.Array  # () int32 — tokens already in cache
+    pos: jax.Array  # (B,) int32 — tokens already in cache, PER SLOT
 
 
 def init_kv_cache(batch: int, seq: int, n_kv: int, hd: int, dtype=jnp.bfloat16) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, seq, n_kv, hd), dtype),
         v=jnp.zeros((batch, seq, n_kv, hd), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -139,7 +139,9 @@ def decode_attention(
 ) -> jax.Array:
     """Single-token attention against a KV cache.
 
-    q: (B, 1, H, hd).  Masks positions ≥ cache.pos (and outside ``window``).
+    q: (B, 1, H, hd).  Masks positions ≥ cache.pos PER SLOT (and outside
+    ``window``) — slots may sit at different depths under continuous
+    batching, so every read is masked by its own position counter.
     This is the op the decode_* shape cells lower — bandwidth-bound: it reads
     the whole (B, S, KV, hd) cache to produce one token.
     """
@@ -152,10 +154,10 @@ def decode_attention(
         "bkgh,bskh->bkgs", qg, cache.k, preferred_element_type=jnp.float32
     ) * scale
     k_pos = jnp.arange(S)
-    valid = k_pos < cache.pos
+    valid = k_pos[None, :] < cache.pos[:, None]  # (B, S)
     if window is not None:
-        valid &= k_pos >= cache.pos - window
-    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+        valid &= k_pos[None, :] >= cache.pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
         "bkgs,bskh->bkgh", p.astype(cache.v.dtype), cache.v,
@@ -164,13 +166,33 @@ def decode_attention(
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
-def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
-    """Insert (B, T, KV, hd) at cache.pos (T=1 for decode, T=S for prefill)."""
-    idx = (0, cache.pos, 0, 0)
+def _slot_insert(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """vmapped-over-batch insert of (T, ...) at each slot's own position."""
+    return jax.vmap(
+        lambda b, n, p: jax.lax.dynamic_update_slice(b, n, (p,) + (0,) * (b.ndim - 1))
+    )(buf, new, pos)
+
+
+def update_cache(
+    cache: KVCache,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    *,
+    lengths: Optional[jax.Array] = None,
+) -> KVCache:
+    """Insert (B, T, KV, hd) at each slot's cache.pos (T=1 decode, T=S prefill).
+
+    ``lengths`` (B,) advances each slot's counter by its REAL prompt length
+    instead of T: right-padded prefill writes all T rows, but pad rows land
+    at positions ≥ ``lengths[b]`` which :func:`decode_attention` never marks
+    valid — pad tokens are structurally unattendable (the left-pad
+    zeros-are-attended bug is dead).
+    """
+    adv = jnp.full_like(cache.pos, k_new.shape[1]) if lengths is None else lengths
     return KVCache(
-        k=jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), idx),
-        v=jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), idx),
-        pos=cache.pos + k_new.shape[1],
+        k=_slot_insert(cache.k, k_new.astype(cache.k.dtype), cache.pos),
+        v=_slot_insert(cache.v, v_new.astype(cache.v.dtype), cache.pos),
+        pos=cache.pos + adv,
     )
 
 
@@ -193,7 +215,7 @@ class QuantKVCache:
     v_q: jax.Array
     k_scale: jax.Array  # (B, S, KV) f32 — per token·head amax/127
     v_scale: jax.Array
-    pos: jax.Array
+    pos: jax.Array  # (B,) int32 — per slot
 
 
 def init_quant_kv_cache(batch: int, seq: int, n_kv: int, hd: int) -> QuantKVCache:
@@ -202,7 +224,7 @@ def init_quant_kv_cache(batch: int, seq: int, n_kv: int, hd: int) -> QuantKVCach
         v_q=jnp.zeros((batch, seq, n_kv, hd), jnp.int8),
         k_scale=jnp.zeros((batch, seq, n_kv), jnp.float32),
         v_scale=jnp.zeros((batch, seq, n_kv), jnp.float32),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -214,17 +236,18 @@ def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     return q.astype(jnp.int8), scale
 
 
-def update_quant_cache(cache: QuantKVCache, k_new, v_new) -> QuantKVCache:
+def update_quant_cache(
+    cache: QuantKVCache, k_new, v_new, *, lengths: Optional[jax.Array] = None
+) -> QuantKVCache:
     kq, ks = _quantize_kv(k_new)
     vq, vs = _quantize_kv(v_new)
-    i4 = (0, cache.pos, 0, 0)
-    i3 = (0, cache.pos, 0)
+    adv = jnp.full_like(cache.pos, k_new.shape[1]) if lengths is None else lengths
     return QuantKVCache(
-        k_q=jax.lax.dynamic_update_slice(cache.k_q, kq, i4),
-        v_q=jax.lax.dynamic_update_slice(cache.v_q, vq, i4),
-        k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, i3),
-        v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, i3),
-        pos=cache.pos + k_new.shape[1],
+        k_q=_slot_insert(cache.k_q, kq, cache.pos),
+        v_q=_slot_insert(cache.v_q, vq, cache.pos),
+        k_scale=_slot_insert(cache.k_scale, ks, cache.pos),
+        v_scale=_slot_insert(cache.v_scale, vs, cache.pos),
+        pos=cache.pos + adv,
     )
 
 
@@ -246,10 +269,10 @@ def decode_attention_quant(
     )
     s = s * jnp.transpose(cache.k_scale, (0, 2, 1))[:, :, None, :] * scale
     k_pos = jnp.arange(S)
-    valid = k_pos < cache.pos
+    valid = k_pos[None, :] < cache.pos[:, None]  # (B, S) — per slot
     if window is not None:
-        valid &= k_pos >= cache.pos - window
-    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+        valid &= k_pos[None, :] >= cache.pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     pv = p * jnp.transpose(cache.v_scale, (0, 2, 1))[:, :, None, :]  # fold v scale
     o = jnp.einsum("bkgs,bskh->bkgh", pv.astype(jnp.float32), cache.v_q.astype(jnp.float32))

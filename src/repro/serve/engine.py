@@ -1,22 +1,33 @@
 """Serving engine: continuous batching over prefill/decode with PASM weights.
 
-The engine owns jitted ``prefill`` and ``decode_step`` closures and a slot
-table.  Requests join a waiting queue and are admitted in WAVES: when no
-slot is live, up to ``batch_slots`` waiting prompts prefill together against
-fresh caches (a fleet deployment maps slots across the batch dim of the
-production mesh) and every engine tick decodes ONE token for all live slots.
-Wave admission exists because the KV caches share one position counter —
-see :meth:`Engine._admit` for the invariant and DESIGN.md §2 for the
-serving context.
+Admission is CONTINUOUS: the moment a slot is free, the next waiting request
+prefills into it while every other slot keeps decoding — no wave gate.  The
+machinery that makes this exact:
+
+- ``KVCache.pos`` is per-slot (``(B,)`` — nn/attention.py), so each slot's
+  reads/writes are masked at its own position and a mid-decode prefill never
+  advances a counter under a live slot.
+- Prefill runs batch-of-one against a FRESH single-slot cache, padded to a
+  length bucket (one jitted closure per bucket), then the resulting cache is
+  grafted into the batched cache at the slot index along each leaf's batch
+  axis.  A reused slot therefore never sees the previous occupant's KV, and
+  a request's prefill is the *same computation* loaded or alone — the basis
+  for the bit-exactness proof in tests/test_serve.py.
+- The batch axis of every cache leaf is inferred once by diffing
+  ``jax.eval_shape`` of ``init_caches`` at two batch sizes (works for all
+  four families without per-family graft code).
+
+Scheduling (FCFS, length buckets, slot eviction) lives in
+serve/scheduler.py; per-request SLO/latency accounting in serve/metrics.py.
 Weights are PASM-quantized by default: decode is bandwidth-bound, so the
 4–8× weight-byte reduction is the paper's win applied where it matters
-(DESIGN.md §2; measured in benchmarks/pasm_roofline.py).
+(DESIGN.md §2; measured in benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from collections import deque
 from typing import Callable, Optional
 
 import jax
@@ -25,9 +36,15 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
-from repro.models.common import ShardCtx, quantize_params
+from repro.serve.metrics import Metrics
+from repro.serve.scheduler import Scheduler, exact_bucket, pow2_bucket
 
 __all__ = ["Request", "Engine"]
+
+# Families whose prefill supports right-padded prompts (``lengths=``).  The
+# recurrent scans (ssm/hybrid) fold every input token into state, so they
+# prefill at exact length (bucket granularity 1 — see ssm_lm.prefill).
+_PADDED_FAMILIES = ("dense", "moe", "vlm", "audio")
 
 
 @dataclasses.dataclass
@@ -35,13 +52,29 @@ class Request:
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int = 16
+    slo_s: Optional[float] = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    stuck: bool = False
     slot: int = -1
 
 
+def _infer_batch_axes(model, cfg, max_seq):
+    """Per-leaf batch axis of the cache pytree (eval_shape diff at B=2 vs 3)."""
+    s2 = jax.eval_shape(lambda: model.init_caches(cfg, 2, max_seq))
+    s3 = jax.eval_shape(lambda: model.init_caches(cfg, 3, max_seq))
+
+    def ax(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"cache leaf has no unique batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(ax, s2, s3)
+
+
 class Engine:
-    """Batched autoregressive server for any registered arch."""
+    """Continuously batched autoregressive server for any registered arch."""
 
     def __init__(
         self,
@@ -51,6 +84,8 @@ class Engine:
         batch_slots: int = 4,
         max_seq: int = 256,
         greedy: bool = True,
+        clock: Callable[[], float] = time.perf_counter,
+        metrics: Optional[Metrics] = None,
     ):
         self.cfg = cfg
         self.model = api.get_model(cfg)
@@ -58,67 +93,97 @@ class Engine:
         self.batch = batch_slots
         self.max_seq = max_seq
         self.greedy = greedy
-        self.caches = None  # built fresh per admission wave (see _admit)
+        self.supports_lengths = cfg.family in _PADDED_FAMILIES
+        bucket = pow2_bucket if self.supports_lengths else exact_bucket
+        self.sched = Scheduler(
+            batch_slots,
+            bucket_fn=functools.partial(bucket, hi=max_seq),
+            max_seq=max_seq,
+        )
+        self.metrics = metrics if metrics is not None else Metrics(clock=clock)
         self.live: dict[int, Request] = {}
-        self.waiting: deque[Request] = deque()
         self._uid = 0
 
-        def _prefill(params, tokens, caches):
-            return self.model.prefill(params, tokens, caches, cfg)
+        # one long-lived batched cache + a fresh single-slot template for
+        # every admission (prefill never mutates its input)
+        self.caches = self.model.init_caches(cfg, self.batch, max_seq)
+        self._one_template = self.model.init_caches(cfg, 1, max_seq)
+        self._slot_axes = _infer_batch_axes(self.model, cfg, max_seq)
 
         def _decode(params, tokens, caches):
             return self.model.decode_step(params, tokens, caches, cfg)
 
-        self._prefill = jax.jit(_prefill)
+        def _graft(big, one, slot):
+            return jax.tree.map(
+                lambda b, o, a: jax.lax.dynamic_update_slice_in_dim(
+                    b, o.astype(b.dtype), slot, axis=a
+                ),
+                big, one, self._slot_axes,
+            )
+
         self._decode = jax.jit(_decode)
+        self._graft = jax.jit(_graft)
+        self._prefill_by_bucket: dict[int, Callable] = {}
+
+    # -- jitted prefill per length bucket ------------------------------------
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        if bucket not in self._prefill_by_bucket:
+            if self.supports_lengths:
+                def f(params, tokens, lengths, caches):
+                    return self.model.prefill(
+                        params, tokens, caches, self.cfg, lengths=lengths
+                    )
+            else:  # exact-length prompt: no pads, lengths unused
+                def f(params, tokens, lengths, caches):
+                    del lengths
+                    return self.model.prefill(params, tokens, caches, self.cfg)
+            self._prefill_by_bucket[bucket] = jax.jit(f)
+        return self._prefill_by_bucket[bucket]
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               *, slo_s: Optional[float] = None) -> Request:
         self._uid += 1
-        r = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32), max_new=max_new)
-        self.waiting.append(r)
+        r = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
+                    max_new=max_new, slo_s=slo_s)
+        self.sched.submit(r)
+        self.metrics.submit(r.uid, "lm", slo_s=slo_s)
         return r
 
-    def _admit(self):
-        """Prefill waiting requests into slots — one WAVE at a time.
+    @property
+    def waiting(self):
+        return self.sched.waiting
 
-        Admission is gated to ticks with no live slot.  The cache model is
-        slot-batched but shares ONE position counter (``KVCache.pos`` is a
-        scalar), so a mid-decode prefill would run the whole batch — zero
-        tokens in live slots — through ``prefill``, overwriting live slots'
-        KV entries at the current position and advancing the shared counter
-        under them (the bug regression-tested in tests/test_engine.py).
-        Per-slot position counters (true continuous batching) are a ROADMAP
-        item; until then waves are the correct admission unit for
-        step-synchronized decoders.
+    def _admit(self):
+        """Continuous admission: prefill each planned request immediately.
+
+        Batch-of-one prefill against the fresh template, right-padded to the
+        scheduler's length bucket, then graft into the batched cache at the
+        slot — live slots keep their per-slot positions untouched.
         """
-        if self.live:
-            return
-        admitted = []
-        free = list(range(self.batch))
-        while free and self.waiting:
-            r = self.waiting.popleft()
-            r.slot = free.pop(0)
-            admitted.append(r)
-        if not admitted:
-            return
-        # fresh caches per wave: the previous wave's KV must not be a visible
-        # attention prefix for the new prompts (pos never rewinds mid-wave)
-        self.caches = self.model.init_caches(self.cfg, self.batch, self.max_seq)
-        # batch the admitted prompts (padded to equal length)
-        S = max(len(r.prompt) for r in admitted)
-        toks = np.zeros((self.batch, S), np.int32)
-        for r in admitted:
-            toks[r.slot, S - len(r.prompt):] = r.prompt  # left-pad
-        logits, self.caches = self._prefill(self.params, jnp.asarray(toks), self.caches)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for r in admitted:
-            r.out.append(int(nxt[r.slot]))
+        for plan in self.sched.admit():
+            r = plan.req
+            S = max(plan.bucket, len(r.prompt))
+            toks = np.zeros((1, S), np.int32)
+            toks[0, : len(r.prompt)] = r.prompt  # right-pad (left-aligned)
+            lengths = jnp.array([len(r.prompt)], jnp.int32)
+            logits, one_caches = self._prefill_fn(S)(
+                self.params, jnp.asarray(toks), lengths, self._one_template
+            )
+            self.caches = self._graft(
+                self.caches, one_caches, jnp.asarray(plan.slot, jnp.int32)
+            )
+            r.slot = plan.slot
+            r.out.append(int(np.asarray(jnp.argmax(logits[0, -1], axis=-1))))
             self.live[r.uid] = r
+            self.metrics.mark_admit(r.uid)
+            self.metrics.mark_first(r.uid)
 
     def step(self):
-        """One engine tick: admit + decode one token for every live slot."""
+        """One engine tick: admit waiting requests, then decode one token
+        for every live slot (dead slots decode a dummy token, ignored)."""
         self._admit()
         if not self.live:
             return
@@ -132,13 +197,31 @@ class Engine:
             r.out.append(int(nxt[r.slot]))
             if len(r.out) >= r.max_new:
                 r.done = True
-                finished.append(r.uid)
-        for uid in finished:
-            del self.live[uid]
+                finished.append(r)
+        for r in finished:
+            del self.live[r.uid]
+            self.sched.release(r.slot)
+            self.metrics.mark_done(r.uid, len(r.out))
+        self.metrics.tick_occupancy(len(self.live) + len(finished), self.batch)
 
-    def run_until_drained(self, max_ticks: int = 1000):
+    def run_until_drained(self, max_ticks: int = 1000, *, strict: bool = True) -> int:
+        """Tick until every request finishes.  If ``max_ticks`` hits with
+        requests still live/queued, mark them ``stuck`` and raise (or warn
+        when ``strict=False``) instead of silently returning."""
         t = 0
-        while (self.live or self.waiting) and t < max_ticks:
+        while (self.live or self.sched.waiting) and t < max_ticks:
             self.step()
             t += 1
+        leftover = list(self.live.values()) + list(self.sched.waiting)
+        if leftover:
+            for r in leftover:
+                r.stuck = True
+                self.metrics.mark_stuck(r.uid)
+            msg = (
+                f"run_until_drained: {len(leftover)} request(s) undrained after "
+                f"{max_ticks} ticks (uids {[r.uid for r in leftover]})"
+            )
+            if strict:
+                raise RuntimeError(msg)
+            print(f"[engine] WARNING: {msg}")
         return t

@@ -1,0 +1,128 @@
+"""Per-request serving metrics: timestamps → p50/p99 rollups.
+
+Every request carries a :class:`Timeline` of wall-clock marks
+(queue → admit → first token → done).  :class:`Metrics` owns the timelines
+plus slot-occupancy counters and rolls them up into the serving numbers the
+launcher prints and ``benchmarks/serve_bench.py`` emits as BENCH_serve.json:
+p50/p99 end-to-end latency, p50/p99 time-to-first-token, tok/s, img/s,
+mean slot occupancy, and SLO hit/miss counts.
+
+The clock is injectable (``Metrics(clock=...)``) so tests can drive
+deterministic timelines; everything here is pure Python — no jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, Optional
+
+__all__ = ["Timeline", "Metrics", "percentile"]
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Wall-clock marks for one request (seconds, from the Metrics clock)."""
+
+    kind: str  # "lm" | "cnn"
+    t_submit: float
+    t_admit: float = math.nan
+    t_first: float = math.nan  # first decode token / classification result
+    t_done: float = math.nan
+    n_out: int = 0  # tokens generated (lm) or images classified (cnn: 1)
+    slo_s: Optional[float] = None  # per-request latency budget
+    stuck: bool = False
+
+    @property
+    def queue_s(self) -> float:
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        if self.slo_s is None or math.isnan(self.t_done):
+            return None
+        return self.latency_s <= self.slo_s
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); nan on empty input."""
+    xs = sorted(x for x in xs if not math.isnan(x))
+    if not xs:
+        return math.nan
+    rank = max(0, min(len(xs) - 1, math.ceil(q / 100.0 * len(xs)) - 1))
+    return xs[rank]
+
+
+class Metrics:
+    """Request timelines + occupancy counters with a p50/p99 rollup."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.timelines: Dict[int, Timeline] = {}
+        self._occ_ticks = 0
+        self._occ_sum = 0.0
+
+    # -- per-request marks ---------------------------------------------------
+
+    def submit(self, uid: int, kind: str = "lm", *, slo_s: Optional[float] = None) -> Timeline:
+        tl = Timeline(kind=kind, t_submit=self.clock(), slo_s=slo_s)
+        self.timelines[uid] = tl
+        return tl
+
+    def mark_admit(self, uid: int):
+        self.timelines[uid].t_admit = self.clock()
+
+    def mark_first(self, uid: int):
+        tl = self.timelines[uid]
+        if math.isnan(tl.t_first):
+            tl.t_first = self.clock()
+
+    def mark_done(self, uid: int, n_out: int):
+        tl = self.timelines[uid]
+        tl.t_done = self.clock()
+        tl.n_out = n_out
+
+    def mark_stuck(self, uid: int):
+        self.timelines[uid].stuck = True
+
+    def tick_occupancy(self, live: int, slots: int):
+        self._occ_ticks += 1
+        self._occ_sum += live / max(slots, 1)
+
+    # -- rollup --------------------------------------------------------------
+
+    def rollup(self) -> dict:
+        """All serving numbers in one dict (nan where no sample exists)."""
+        done = [t for t in self.timelines.values() if not math.isnan(t.t_done)]
+        out: dict = {"n_requests": len(self.timelines), "n_done": len(done),
+                     "n_stuck": sum(t.stuck for t in self.timelines.values())}
+        for kind, rate_name in (("lm", "tok_s"), ("cnn", "img_s")):
+            ks = [t for t in done if t.kind == kind]
+            lat = [t.latency_s for t in ks]
+            out[f"{kind}_n"] = len(ks)
+            out[f"{kind}_p50_latency_s"] = percentile(lat, 50)
+            out[f"{kind}_p99_latency_s"] = percentile(lat, 99)
+            out[f"{kind}_p50_ttft_s"] = percentile([t.ttft_s for t in ks], 50)
+            out[f"{kind}_p99_ttft_s"] = percentile([t.ttft_s for t in ks], 99)
+            if ks:
+                t0 = min(t.t_submit for t in ks)
+                t1 = max(t.t_done for t in ks)
+                n = sum(t.n_out for t in ks)
+                out[rate_name] = n / max(t1 - t0, 1e-9)
+            else:
+                out[rate_name] = math.nan
+        slo = [t.slo_met for t in done if t.slo_met is not None]
+        out["slo_met"] = sum(slo)
+        out["slo_missed"] = len(slo) - sum(slo)
+        out["mean_occupancy"] = (
+            self._occ_sum / self._occ_ticks if self._occ_ticks else math.nan
+        )
+        return out

@@ -1,0 +1,101 @@
+"""FCFS slot scheduler for the continuous-batching engine.
+
+The scheduler owns the waiting queue and the slot table; the engine asks it
+each tick which requests to prefill into which free slots.  Admission is
+strictly FCFS — a request is admitted the moment a slot is free (continuous
+batching; no wave gate).  Prompts are padded up to a *length bucket* so the
+per-bucket jitted prefill closures stay bounded: attention families use
+power-of-two buckets (``pow2_bucket``), recurrent families (ssm/hybrid) use
+exact lengths (``exact_bucket`` — their scans fold pad tokens into state, so
+padded prompts are unsupported; see ``ssm_lm.prefill``).
+
+Deadline/SLO accounting rides on :class:`repro.serve.metrics.Metrics`: each
+request may carry a latency budget (``slo_s``) stamped into its Timeline at
+submit; the rollup counts met/missed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+__all__ = ["pow2_bucket", "exact_bucket", "SlotPlan", "Scheduler"]
+
+
+def pow2_bucket(n: int, *, lo: int = 8, hi: Optional[int] = None) -> int:
+    """Smallest power of two ≥ max(n, lo), capped at ``hi``."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi) if hi is not None else b
+
+
+def exact_bucket(n: int, *, lo: int = 1, hi: Optional[int] = None) -> int:
+    """Bucket granularity 1 — for families that cannot pad prompts."""
+    b = max(n, lo)
+    return min(b, hi) if hi is not None else b
+
+
+@dataclasses.dataclass
+class SlotPlan:
+    """One admission decision: request → slot, prompt padded to ``bucket``."""
+
+    req: object  # engine Request (has .uid and .prompt)
+    slot: int
+    bucket: int
+
+
+class Scheduler:
+    """FCFS admission over length buckets + slot lifecycle."""
+
+    def __init__(
+        self,
+        n_slots: int,
+        *,
+        bucket_fn: Callable[[int], int] = pow2_bucket,
+        max_seq: Optional[int] = None,
+    ):
+        self.n_slots = n_slots
+        self.bucket_fn = bucket_fn
+        self.max_seq = max_seq
+        self.waiting: Deque[object] = deque()
+        self.slot_owner: List[Optional[int]] = [None] * n_slots  # uid per slot
+
+    # -- queue/slot state ----------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, uid in enumerate(self.slot_owner) if uid is None]
+
+    @property
+    def live_slots(self) -> int:
+        return self.n_slots - len(self.free_slots)
+
+    def submit(self, req) -> None:
+        if self.max_seq is not None and len(req.prompt) > self.max_seq:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds max_seq {self.max_seq}"
+            )
+        self.waiting.append(req)
+
+    def admit(self) -> List[SlotPlan]:
+        """FCFS: fill free slots from the head of the queue, in order."""
+        plans: List[SlotPlan] = []
+        free = self.free_slots
+        while free and self.waiting:
+            req = self.waiting.popleft()
+            slot = free.pop(0)
+            self.slot_owner[slot] = req.uid
+            bucket = self.bucket_fn(len(req.prompt))
+            if self.max_seq is not None:
+                bucket = min(bucket, self.max_seq)
+            plans.append(SlotPlan(req=req, slot=slot, bucket=bucket))
+        return plans
+
+    def release(self, slot: int) -> None:
+        """Evict a completed request; the slot is immediately reusable."""
+        self.slot_owner[slot] = None

@@ -73,9 +73,9 @@ def test_cache_update_positions():
     cache = A.init_kv_cache(1, 16, 1, 4, jnp.float32)
     k1 = jnp.ones((1, 3, 1, 4))
     cache = A.update_cache(cache, k1, k1)
-    assert int(cache.pos) == 3
+    assert int(cache.pos[0]) == 3
     cache = A.update_cache(cache, 2 * k1[:, :1], 2 * k1[:, :1])
-    assert int(cache.pos) == 4
+    assert int(cache.pos[0]) == 4
     np.testing.assert_allclose(np.asarray(cache.k[0, 3, 0]), 2.0)
     np.testing.assert_allclose(np.asarray(cache.k[0, 4, 0]), 0.0)  # untouched
 
@@ -110,8 +110,8 @@ def test_quant_cache_incremental_updates():
     qc = A.init_quant_kv_cache(1, 16, 1, 4)
     k1 = jnp.ones((1, 3, 1, 4))
     qc = A.update_quant_cache(qc, k1, k1)
-    assert int(qc.pos) == 3
+    assert int(qc.pos[0]) == 3
     qc = A.update_quant_cache(qc, 2 * k1[:, :1], 2 * k1[:, :1])
-    assert int(qc.pos) == 4
+    assert int(qc.pos[0]) == 4
     deq = qc.k_q[0, 3, 0].astype(jnp.float32) * qc.k_scale[0, 3, 0]
     np.testing.assert_allclose(np.asarray(deq), 2.0, rtol=1e-2)

@@ -3,7 +3,11 @@
 Regression for the cache-clobbering bug: ``Engine._admit`` used to re-run
 ``prefill`` over the WHOLE batch whenever a free slot existed — zero tokens
 in live slots — overwriting live slots' KV caches and the shared position
-counter.  Admission is now wave-gated (no prefill while any slot is live).
+counter.  Admission is now CONTINUOUS (per-slot ``KVCache.pos``): a free
+slot prefills batch-of-one against a fresh cache and grafts in at its slot
+index, so live slots' positions and KV are untouched by construction.  The
+full exactness/scheduling suite is tests/test_serve.py; these two tests
+remain as the original regression surface.
 """
 import jax
 import numpy as np
@@ -47,8 +51,9 @@ def test_staggered_submit_preserves_live_outputs():
     assert len(r2.out) == 4
 
 
-def test_waves_do_not_leak_kv_prefix():
-    """A request served in wave 2 matches the same request served in wave 1."""
+def test_slot_reuse_does_not_leak_kv_prefix():
+    """A request served in a reused slot matches the same request served
+    first — the grafted fresh-cache prefill leaves no stale prefix."""
     cfg, params = _setup()
     rng = np.random.default_rng(11)
     p1 = rng.integers(0, cfg.vocab, size=5)
@@ -60,8 +65,8 @@ def test_waves_do_not_leak_kv_prefix():
 
     eng = Engine(cfg, params, batch_slots=1, max_seq=64)
     first = eng.submit(p1, max_new=6)
-    second = eng.submit(p2, max_new=6)  # queued: admitted as its own wave
+    second = eng.submit(p2, max_new=6)  # queued: admitted on slot release
     eng.run_until_drained()
 
     assert first.done and second.done
-    assert second.out == want.out  # fresh caches per wave: no stale prefix
+    assert second.out == want.out  # fresh grafted cache: no stale prefix
