@@ -13,9 +13,16 @@ classification requests) through the continuous-batching service loop
   applied to serving, gated by scripts/ci.sh (PASM modeled decode tok/s must
   be ≥ dense; wall-clock on a CPU host measures dequant arithmetic, not the
   HBM stream the accelerator would move, so the roofline rows carry the
-  gate while the measured rows track this host's trajectory).
+  gate while the measured rows track this host's trajectory);
+- fault rows (``--faults``): the SAME seeded trace replayed under a seeded
+  :class:`~repro.serve.faults.FaultPlan` (NaN poisoning, prefill/decode
+  raises, a slow-tick stall) on a deterministic tick clock —
+  ``serve.faults.*`` rows carry the failure counters, the non-faulted SLO
+  hit fraction, per-failure-kind latency, and the drained/stuck verdict
+  that scripts/ci.sh gates (zero stuck, ≥95 % of non-faulted requests meet
+  SLO).
 
-    PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json --faults
 """
 from __future__ import annotations
 
@@ -38,7 +45,8 @@ from repro.models.common import quantize_params, weight_bytes
 from repro.roofline import HBM_BW
 from repro.serve.batcher import CnnBatcher, MixedBatcher
 from repro.serve.engine import Engine
-from repro.serve.metrics import Metrics
+from repro.serve.faults import FaultPlan
+from repro.serve.metrics import FAILURE_COUNTERS, Metrics
 
 from benchmarks.common import bench_row, emit
 
@@ -75,20 +83,29 @@ def make_trace(rng, *, n_lm, n_cnn, rate, vocab, in_chw, max_prompt, max_new):
     return trace
 
 
-def replay(trace, engine: Engine, cnn_b: CnnBatcher) -> int:
-    """Drive the mixed service loop: submit due arrivals, tick, repeat."""
+def replay(trace, engine: Engine, cnn_b: CnnBatcher, *, slo_s=None,
+           clock_box=None) -> int:
+    """Drive the mixed service loop: submit due arrivals, tick, repeat.
+
+    With ``clock_box`` (a one-element list the engine's metrics clock and
+    injected ``sleep`` read/advance), the replay runs on a deterministic
+    tick clock: one tick = one second, slow-tick faults add their stall on
+    top — deadlines and the SLO gate are then seed-reproducible.
+    """
     mix = MixedBatcher(engine, cnn_b)
     i, tick = 0, 0
     while i < len(trace) or not mix.drained:
         while i < len(trace) and trace[i][0] <= tick:
             _, kind, payload = trace[i]
             if kind == "lm":
-                engine.submit(payload["prompt"], payload["max_new"])
+                engine.submit(payload["prompt"], payload["max_new"], slo_s=slo_s)
             else:
                 cnn_b.submit(payload["image"])
             i += 1
         mix.tick()
         tick += 1
+        if clock_box is not None:
+            clock_box[0] += 1.0
         if tick > 100_000:
             raise RuntimeError("replay did not drain")
     return tick
@@ -114,6 +131,32 @@ def measured_rows(rollup: dict, *, slots: int, tag: str) -> None:
            derived=f"mean {rollup['mean_occupancy']:.2f} over {slots} slots",
            mean_occupancy=rollup["mean_occupancy"],
            slo_met=rollup["slo_met"], slo_missed=rollup["slo_missed"])
+
+
+def fault_rows(roll: dict, *, tag: str = "faults") -> None:
+    """Fault-replay rollup → BENCH rows: counters, SLO fraction over the
+    NON-faulted population, per-failure-kind latency, drained verdict."""
+    counters = {k: roll[k] for k in FAILURE_COUNTERS}
+    tripped = ", ".join(f"{k[2:]}={v}" for k, v in counters.items() if v)
+    record(f"serve.{tag}.counters", 0.0,
+           derived=tripped or "no faults tripped",
+           n_failed=roll["n_failed"], **counters)
+    met, missed = roll["slo_met"], roll["slo_missed"]
+    frac = met / max(met + missed, 1)
+    record(f"serve.{tag}.slo", 0.0,
+           derived=f"{met}/{met + missed} non-faulted requests met SLO",
+           slo_met=met, slo_missed=missed, slo_frac=frac)
+    for kind in ("deadline", "numeric", "error", "rejected"):
+        n = roll.get(f"failed_{kind}_n", 0)
+        if n:
+            record(f"serve.{tag}.failed.{kind}.p99_latency",
+                   float(roll[f"failed_{kind}_p99_latency_s"] * 1e6),
+                   derived=f"n={n}", n_requests=n)
+    record(f"serve.{tag}.drained", 0.0,
+           derived=f"n_stuck={roll['n_stuck']} n_done={roll['n_done']}"
+                   f"/{roll['n_requests']}",
+           n_stuck=roll["n_stuck"], n_done=roll["n_done"],
+           n_requests=roll["n_requests"])
 
 
 def modeled_decode_rows(dense_params, pasm_params, *, batch: int) -> None:
@@ -143,6 +186,15 @@ def main(argv=None) -> int:
     ap.add_argument("--rate", type=float, default=0.5, help="arrivals per tick")
     ap.add_argument("--bins", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", action="store_true",
+                    help="also replay the trace under a seeded FaultPlan")
+    ap.add_argument("--policy", default="reject",
+                    help="bounded-queue admission policy for the fault replay")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded queue depth for the fault replay")
+    ap.add_argument("--max-retries", type=int, default=1)
+    ap.add_argument("--slo-ticks", type=float, default=400.0,
+                    help="per-request SLO (ticks on the deterministic clock)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.lm_requests = min(args.lm_requests, 6)
@@ -184,6 +236,34 @@ def main(argv=None) -> int:
 
     modeled_decode_rows(dense_params, pasm_params, batch=args.slots)
 
+    if args.faults:
+        # same trace, PASM weights, seeded chaos on a deterministic tick
+        # clock: the metrics clock reads clock_box[0] (one tick = 1 s), the
+        # injected sleep adds slow-fault stalls on top — fully reproducible
+        clock_box = [0.0]
+        metrics = Metrics(clock=lambda: clock_box[0])
+        plan = FaultPlan.sample(
+            args.seed, n_ticks=20, n_slots=args.slots,
+            n_requests=args.lm_requests, n_nan=2, n_prefill=1, n_decode=1,
+            n_slow=1, slow_delay_s=3.0,
+        )
+        engine = Engine(
+            qcfg, pasm_params, batch_slots=args.slots, max_seq=args.max_seq,
+            metrics=metrics, faults=plan, max_retries=args.max_retries,
+            max_queue=args.max_queue, policy=args.policy,
+            sleep=lambda d: clock_box.__setitem__(0, clock_box[0] + d),
+        )
+        cnn_b = CnnBatcher(ccfg, cparams, max_batch=args.slots, metrics=metrics)
+        ticks = replay(trace, engine, cnn_b, slo_s=float(args.slo_ticks),
+                       clock_box=clock_box)
+        roll = metrics.rollup()
+        assert roll["n_stuck"] == 0, roll
+        fault_rows(roll, tag="faults")
+        print(f"[serve_bench] faults: {len(plan.fired)} injections fired, "
+              f"{roll['n_done']}/{roll['n_requests']} done, "
+              f"{roll['n_failed']} failed, drained in {ticks} ticks",
+              file=sys.stderr)
+
     if args.json:
         payload = {
             "benchmark": "serve",
@@ -194,6 +274,7 @@ def main(argv=None) -> int:
             "seed": args.seed,
             "trace": {"lm": args.lm_requests, "cnn": args.cnn_requests,
                       "rate": args.rate},
+            "faults": bool(args.faults),
             "records": _RECORDS,
         }
         Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")

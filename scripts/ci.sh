@@ -19,7 +19,12 @@
 # suite on one device AND on 8 fake devices plus the traffic-replay smoke
 # (BENCH_serve.json: measured p50/p99/tok_s/img_s rows must exist and the
 # PASM-quantized modeled decode tok/s must be >= dense — the weight-stream
-# win end to end), and the sharding gate: --devices 8 per-device modeled
+# win end to end), the fault-tolerance chaos suite (seeded FaultPlan:
+# deadlines, backpressure, numeric quarantine, retry/degradation) on one
+# device AND on 8 fake devices, the fault-replay gate (serve_bench --faults:
+# the chaos replay must drain with zero stuck requests and >= 95% of
+# non-faulted SLO'd requests meeting their SLO), and the sharding gate:
+# --devices 8 per-device modeled
 # HBM bytes on AlexNet conv1 strictly below the single-device figure for
 # the same global batch.
 #
@@ -122,8 +127,15 @@ echo "== serve: continuous-batching suite (8 fake devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -q tests/test_serve.py
 
+echo "== serve: fault-tolerance chaos suite (single device) =="
+python -m pytest -q tests/test_serve_faults.py
+
+echo "== serve: fault-tolerance chaos suite (8 fake devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q tests/test_serve_faults.py
+
 echo "== smoke: traffic replay (BENCH_serve.json + PASM decode tok/s gate) =="
-python benchmarks/serve_bench.py --smoke --json
+python benchmarks/serve_bench.py --smoke --json --faults
 test -s BENCH_serve.json && echo "BENCH_serve.json written"
 python - <<'PY'
 import json, math
@@ -147,6 +159,20 @@ print(f"PASM modeled decode {pasm['tok_s_modeled']:.0f} tok/s >= dense "
       f"{dense['tok_s_modeled']:.0f} tok/s "
       f"({pasm['tok_s_modeled'] / dense['tok_s_modeled']:.2f}x, "
       f"weight stream {dense['hbm_bytes']} -> {pasm['hbm_bytes']} B) OK")
+# fault-replay gate: the seeded chaos replay must drain every request
+# (zero stuck) and >= 95% of the non-faulted SLO'd requests must still
+# meet their SLO under injected faults
+drained = rows["serve.faults.drained"]
+assert drained["n_stuck"] == 0, drained
+slo = rows["serve.faults.slo"]
+assert slo["slo_met"] + slo["slo_missed"] > 0, slo
+assert slo["slo_frac"] >= 0.95, (
+    f"under injected faults, >= 95% of non-faulted requests must meet SLO: "
+    f"met={slo['slo_met']} missed={slo['slo_missed']} frac={slo['slo_frac']:.2f}"
+)
+print(f"fault replay drained (0 stuck), SLO {slo['slo_met']}/"
+      f"{slo['slo_met'] + slo['slo_missed']} met "
+      f"({100 * slo['slo_frac']:.0f}% >= 95%) OK")
 PY
 
 echo "== smoke: per-device HBM bytes under --devices 8 (AlexNet conv1) =="

@@ -9,7 +9,11 @@ Layout:  <dir>/step_<N>/shard_<i>.npz + manifest.json
   shards and the manifest records the mesh) and restored onto any mesh —
   N→M host restarts just re-shard at load (DESIGN.md §4).
 * **async**: ``save(..., background=True)`` hands the host copy to a worker
-  thread so the train loop keeps stepping during I/O.
+  thread so the train loop keeps stepping during I/O.  The writer CAPTURES
+  any exception instead of letting it vanish in the daemon thread; it is
+  re-raised from :meth:`CheckpointManager.wait` (and therefore from the
+  next ``save()``, which waits first) — a failed background write is a
+  loud failure, never a silently missing checkpoint.
 """
 from __future__ import annotations
 
@@ -23,9 +27,31 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "CheckpointManager", "BackgroundWriter"]
 
 _SEP = "||"
+
+
+class BackgroundWriter(threading.Thread):
+    """Daemon writer thread that captures its exception for join-time
+    re-raise — a background checkpoint failure must surface, not vanish."""
+
+    def __init__(self, fn):
+        super().__init__(daemon=True)
+        self._fn = fn
+        self.exc: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._fn()
+        except BaseException as e:  # noqa: BLE001 — captured, re-raised at wait()
+            self.exc = e
+
+    def check(self) -> None:
+        """Re-raise the captured write failure, if any (idempotent)."""
+        if self.exc is not None:
+            exc, self.exc = self.exc, None
+            raise RuntimeError("background checkpoint write failed") from exc
 
 
 def _to_numpy(leaf) -> np.ndarray:
@@ -52,8 +78,10 @@ def save(
     *,
     extra: Optional[dict] = None,
     background: bool = False,
-) -> Optional[threading.Thread]:
-    """Write ``tree`` at ``step``.  Returns the writer thread if background."""
+) -> Optional["BackgroundWriter"]:
+    """Write ``tree`` at ``step``.  Returns the writer thread if background
+    (join it AND call ``check()`` — or use :class:`CheckpointManager`, whose
+    ``wait()`` does both)."""
     directory = Path(directory)
     arrays = _flatten(tree)  # host copy happens here, synchronously
 
@@ -75,7 +103,7 @@ def save(
         tmp.rename(final)
 
     if background:
-        t = threading.Thread(target=_write, daemon=True)
+        t = BackgroundWriter(_write)
         t.start()
         return t
     _write()
@@ -134,17 +162,20 @@ class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
         self.keep = keep
-        self._pending: Optional[threading.Thread] = None
+        self._pending: Optional[BackgroundWriter] = None
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
-        self.wait()
+        self.wait()  # surfaces the PREVIOUS write's failure before starting
         self._pending = save(self.dir, step, tree, extra=extra, background=True)
         self._gc()
 
     def wait(self):
+        """Join the in-flight write and RE-RAISE its failure, if any — a
+        background checkpoint loss is never silent."""
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            t, self._pending = self._pending, None
+            t.join()
+            t.check()
 
     def _gc(self):
         steps = sorted(

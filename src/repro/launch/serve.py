@@ -5,7 +5,13 @@ KV positions, FCFS admission over length buckets), optionally a
 :class:`~repro.serve.batcher.CnnBatcher` for concurrent image traffic, runs
 the requested load through the :class:`~repro.serve.batcher.MixedBatcher`
 loop, and prints the serve/metrics.py rollup (p50/p99 latency + TTFT per
-class, tok/s, img/s, slot occupancy).
+class, tok/s, img/s, slot occupancy) plus the failure-mode rollup
+(rejected/shed/evicted/quarantined/retried/degraded counters and
+per-failure-kind latency — DESIGN.md §2.4) whenever anything failed.
+
+Backpressure is configurable (``--max-queue``/``--policy``), retries via
+``--max-retries``, and ``--faults-seed`` replays the load under a seeded
+:class:`~repro.serve.faults.FaultPlan` for chaos drills.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \\
         --quant pasm --requests 8 --images 4
@@ -23,7 +29,8 @@ from repro.models import api, cnn
 from repro.models.common import quantize_params, weight_bytes
 from repro.serve.batcher import CnnBatcher, MixedBatcher
 from repro.serve.engine import Engine
-from repro.serve.metrics import Metrics
+from repro.serve.faults import FaultPlan
+from repro.serve.metrics import FAILURE_COUNTERS, Metrics
 
 
 def _fmt(v, unit=""):
@@ -47,6 +54,17 @@ def print_rollup(roll: dict, slots: int) -> None:
               f"{rate}={_fmt(roll[rate])}")
     if roll["slo_met"] or roll["slo_missed"]:
         print(f"[serve]   SLO: {roll['slo_met']} met, {roll['slo_missed']} missed")
+    # failure-mode rollup (DESIGN.md §2.4) — only when something tripped
+    tripped = {k: roll[k] for k in FAILURE_COUNTERS if roll.get(k)}
+    if tripped or roll.get("n_failed"):
+        counts = " ".join(f"{k[2:]}={v}" for k, v in tripped.items())
+        print(f"[serve]   failures: n_failed={roll.get('n_failed', 0)}  {counts}")
+        for kind in ("deadline", "numeric", "error", "rejected"):
+            n = roll.get(f"failed_{kind}_n", 0)
+            if n:
+                print(f"[serve]     {kind}: n={n}  latency "
+                      f"p50={_fmt(roll[f'failed_{kind}_p50_latency_s'], 's')} "
+                      f"p99={_fmt(roll[f'failed_{kind}_p99_latency_s'], 's')}")
 
 
 def main(argv=None):
@@ -63,6 +81,14 @@ def main(argv=None):
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request latency budget (SLO accounting)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded queue depth (backpressure)")
+    ap.add_argument("--policy", default="reject",
+                    help="bounded-queue admission policy: reject | "
+                         "shed_oldest | shed_expired")
+    ap.add_argument("--max-retries", type=int, default=1)
+    ap.add_argument("--faults-seed", type=int, default=None,
+                    help="chaos drill: inject a FaultPlan sampled from this seed")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -79,8 +105,17 @@ def main(argv=None):
 
     metrics = Metrics()
     slo_s = args.slo_ms / 1e3 if args.slo_ms else None
+    faults = None
+    if args.faults_seed is not None:
+        faults = FaultPlan.sample(
+            args.faults_seed, n_ticks=max(8, args.max_new + 2),
+            n_slots=args.slots, n_requests=args.requests,
+        )
+        print(f"[serve] chaos drill: {len(faults.faults)} faults sampled "
+              f"from seed {args.faults_seed}")
     eng = Engine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
-                 metrics=metrics)
+                 metrics=metrics, faults=faults, max_retries=args.max_retries,
+                 max_queue=args.max_queue, policy=args.policy)
     rng = np.random.default_rng(args.seed)
     reqs = [
         eng.submit(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))),

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -161,7 +162,9 @@ class MixedBatcher:
 
     @property
     def drained(self) -> bool:
-        lm_done = not (self.engine.live or self.engine.sched.waiting)
+        # engine.busy covers live slots, the queue, AND pending retries —
+        # a backoff-delayed retry keeps the loop ticking until it resolves
+        lm_done = not self.engine.busy
         cnn_done = self.cnn is None or not self.cnn.waiting
         return lm_done and cnn_done
 
@@ -179,5 +182,5 @@ class MixedBatcher:
             msg = f"MixedBatcher: traffic undrained after {max_ticks} ticks"
             if strict:
                 raise RuntimeError(msg)
-            print(f"[batcher] WARNING: {msg}")
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return t

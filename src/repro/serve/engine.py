@@ -17,17 +17,40 @@ machinery that makes this exact:
   ``jax.eval_shape`` of ``init_caches`` at two batch sizes (works for all
   four families without per-family graft code).
 
-Scheduling (FCFS, length buckets, slot eviction) lives in
-serve/scheduler.py; per-request SLO/latency accounting in serve/metrics.py.
-Weights are PASM-quantized by default: decode is bandwidth-bound, so the
-4–8× weight-byte reduction is the paper's win applied where it matters
-(DESIGN.md §2; measured in benchmarks/serve_bench.py).
+Fault tolerance (DESIGN.md §2.4) — every leg flows through ``step()``:
+
+- **Deadlines + backpressure**: the scheduler's queue is bounded with an
+  admission policy (``reject | shed_oldest | shed_expired``); queued
+  requests whose ``slo_s`` expired are shed before prefill is spent on
+  them, and (``deadline_eviction=True``) a live request that blows its
+  deadline mid-decode is evicted, its partial output returned with
+  ``failed="deadline"``.
+- **Numeric guards + quarantine**: ONE fused ``isfinite`` reduction per
+  tick (per-slot bool, fused into the argmax jit — never a per-element
+  host loop) detects NaN/Inf logits; the slot is quarantined and its cache
+  stripe re-grafted from the fresh template before reuse, so poisoned KV
+  never leaks to the next occupant.
+- **Retry + degradation**: retryable failures (numeric, injected transient
+  errors) re-enter the queue up to ``max_retries`` with capped exponential
+  tick-based backoff; a persistent kernel failure at a jit boundary flips
+  that closure's dispatch from the Pallas ``kernel`` path to the
+  ``dequant`` oracle once, memoized — degraded but serving.
+- **Fault hooks**: a seeded :class:`~repro.serve.faults.FaultPlan` injects
+  NaN/raise/slow faults at the engine's phase boundaries, fully
+  deterministic (tick/slot/uid keyed — no wall clock).
+
+Scheduling (FCFS, length buckets, quarantine, backpressure) lives in
+serve/scheduler.py; per-request SLO/latency/failure accounting in
+serve/metrics.py.  Weights are PASM-quantized by default: decode is
+bandwidth-bound, so the 4–8× weight-byte reduction is the paper's win
+applied where it matters (DESIGN.md §2; measured in
+benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -36,8 +59,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.serve.faults import FaultInjected, FaultPlan
 from repro.serve.metrics import Metrics
-from repro.serve.scheduler import Scheduler, exact_bucket, pow2_bucket
+from repro.serve.scheduler import QueueFullError, Scheduler, exact_bucket, pow2_bucket
 
 __all__ = ["Request", "Engine"]
 
@@ -46,6 +70,10 @@ __all__ = ["Request", "Engine"]
 # prefill at exact length (bucket granularity 1 — see ssm_lm.prefill).
 _PADDED_FAMILIES = ("dense", "moe", "vlm", "audio")
 
+# failure kinds that re-enter the queue (deadline/rejected are final: the
+# latency budget is spent / the queue refused them)
+_RETRYABLE = ("numeric", "error")
+
 
 @dataclasses.dataclass
 class Request:
@@ -53,10 +81,25 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new: int = 16
     slo_s: Optional[float] = None
+    deadline: Optional[float] = None  # absolute, on the metrics clock
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     stuck: bool = False
+    failed: Optional[str] = None  # deadline | numeric | error | rejected
+    retries: int = 0
+    retry_at: int = 0  # engine tick the next attempt may re-queue at
     slot: int = -1
+
+    @property
+    def status(self) -> str:
+        """Terminal taxonomy: ``done | stuck | failed:<kind>`` (else pending)."""
+        if self.done:
+            return "done"
+        if self.failed:
+            return f"failed:{self.failed}"
+        if self.stuck:
+            return "stuck"
+        return "pending"
 
 
 def _infer_batch_axes(model, cfg, max_seq):
@@ -86,6 +129,14 @@ class Engine:
         greedy: bool = True,
         clock: Callable[[], float] = time.perf_counter,
         metrics: Optional[Metrics] = None,
+        faults: Optional[FaultPlan] = None,
+        max_retries: int = 1,
+        backoff_ticks: int = 1,
+        backoff_cap_ticks: int = 8,
+        max_queue: Optional[int] = None,
+        policy: str = "reject",
+        deadline_eviction: bool = True,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.cfg = cfg
         self.model = api.get_model(cfg)
@@ -97,21 +148,40 @@ class Engine:
         bucket = pow2_bucket if self.supports_lengths else exact_bucket
         self.sched = Scheduler(
             batch_slots,
-            bucket_fn=functools.partial(bucket, hi=max_seq),
+            bucket_fn=lambda n: bucket(n, hi=max_seq),
             max_seq=max_seq,
+            max_queue=max_queue,
+            policy=policy,
         )
         self.metrics = metrics if metrics is not None else Metrics(clock=clock)
+        self.faults = faults
+        self.max_retries = max_retries
+        self.backoff_ticks = backoff_ticks
+        self.backoff_cap_ticks = backoff_cap_ticks
+        self.deadline_eviction = deadline_eviction
         self.live: dict[int, Request] = {}
+        self.tick = 0
         self._uid = 0
+        self._sleep = sleep
+        self._retry_q: list[Request] = []
+        self._needs_scrub: set[int] = set()
+        # graceful degradation: closures that fell back to the dequant oracle
+        # (kernel → dequant is a one-way, memoized flip; None when the config
+        # has nothing to degrade to — dense or already-dequant dispatch)
+        self._degraded: set[str] = set()
+        q = cfg.quant
+        self._degraded_cfg = (
+            cfg.with_quant(impl="dequant")
+            if q.enabled and q.impl not in ("dequant", "dense")
+            else None
+        )
 
         # one long-lived batched cache + a fresh single-slot template for
-        # every admission (prefill never mutates its input)
+        # every admission and every quarantine scrub (prefill never mutates
+        # its input; the template stripe is what a clean slot looks like)
         self.caches = self.model.init_caches(cfg, self.batch, max_seq)
         self._one_template = self.model.init_caches(cfg, 1, max_seq)
         self._slot_axes = _infer_batch_axes(self.model, cfg, max_seq)
-
-        def _decode(params, tokens, caches):
-            return self.model.decode_step(params, tokens, caches, cfg)
 
         def _graft(big, one, slot):
             return jax.tree.map(
@@ -121,98 +191,311 @@ class Engine:
                 big, one, self._slot_axes,
             )
 
-        self._decode = jax.jit(_decode)
+        def _guard(logits):
+            # numeric guard + argmax in ONE jitted call: a single fused
+            # isfinite reduction over each slot's logits (never per-element
+            # on the host), returning (next_token, finite?) per slot
+            fin = jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
+            return jnp.argmax(logits[:, 0], axis=-1), fin
+
         self._graft = jax.jit(_graft)
-        self._prefill_by_bucket: dict[int, Callable] = {}
+        self._guard = jax.jit(_guard)
+        self._decode_by_impl: dict[str, Callable] = {}
+        self._prefill_by_bucket: dict[tuple, Callable] = {}
 
-    # -- jitted prefill per length bucket ------------------------------------
+    # -- jitted closures (per cfg-impl, so degradation can rebuild) ----------
 
-    def _prefill_fn(self, bucket: int) -> Callable:
-        if bucket not in self._prefill_by_bucket:
+    def _impl_key(self, cfg) -> str:
+        return cfg.quant.impl if cfg.quant.enabled else "dense"
+
+    def _decode_fn(self, cfg) -> Callable:
+        key = self._impl_key(cfg)
+        if key not in self._decode_by_impl:
+            model = self.model
+
+            def f(params, tokens, caches):
+                return model.decode_step(params, tokens, caches, cfg)
+
+            self._decode_by_impl[key] = jax.jit(f)
+        return self._decode_by_impl[key]
+
+    def _prefill_fn(self, bucket: int, cfg) -> Callable:
+        key = (bucket, self._impl_key(cfg))
+        if key not in self._prefill_by_bucket:
+            model = self.model
             if self.supports_lengths:
                 def f(params, tokens, lengths, caches):
-                    return self.model.prefill(
-                        params, tokens, caches, self.cfg, lengths=lengths
-                    )
+                    return model.prefill(params, tokens, caches, cfg, lengths=lengths)
             else:  # exact-length prompt: no pads, lengths unused
                 def f(params, tokens, lengths, caches):
                     del lengths
-                    return self.model.prefill(params, tokens, caches, self.cfg)
-            self._prefill_by_bucket[bucket] = jax.jit(f)
-        return self._prefill_by_bucket[bucket]
+                    return model.prefill(params, tokens, caches, cfg)
+            self._prefill_by_bucket[key] = jax.jit(f)
+        return self._prefill_by_bucket[key]
+
+    def _call(self, key: str, build: Callable, *args):
+        """Run a jitted closure with one-shot kernel→dequant degradation.
+
+        A persistent failure at the jit boundary (``pallas_call``
+        lowering/VMEM errors — or an injected FaultPlan ``kernel`` fault)
+        flips THIS closure's dispatch to the dequant oracle path, memoized,
+        and replays the call: degraded but serving.  :class:`FaultInjected`
+        (transient, handled per-request or per-tick) passes through.
+        """
+        degraded = key in self._degraded
+        cfg = self._degraded_cfg if degraded else self.cfg
+        try:
+            if (not degraded and self.faults is not None
+                    and self.faults.kernel_broken(key)):
+                raise RuntimeError(f"injected persistent kernel failure: {key}")
+            return build(cfg)(*args)
+        except FaultInjected:
+            raise
+        except Exception as e:  # noqa: BLE001 — degradation boundary
+            if degraded or self._degraded_cfg is None:
+                raise
+            self._degraded.add(key)
+            self.metrics.incr("n_degraded")
+            warnings.warn(
+                f"engine: closure {key!r} failed on the "
+                f"{self.cfg.quant.impl!r} path ({type(e).__name__}: {e}); "
+                f"degrading its dispatch to impl='dequant'",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return build(self._degraded_cfg)(*args)
 
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                *, slo_s: Optional[float] = None) -> Request:
+        """Submit a request.  Under a bounded queue the returned request may
+        already be terminal (``failed="rejected"``) — check ``.status``."""
         self._uid += 1
         r = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
                     max_new=max_new, slo_s=slo_s)
-        self.sched.submit(r)
+        self.sched.validate(r)  # raises before any registration
+        now = self.metrics.clock()
+        if slo_s is not None:
+            r.deadline = now + slo_s
         self.metrics.submit(r.uid, "lm", slo_s=slo_s)
+        try:
+            shed = self.sched.submit(r, now=now)
+        except QueueFullError as e:
+            r.failed = "rejected"
+            self.metrics.incr("n_rejected")
+            self.metrics.mark_failed(r.uid, "rejected")
+            shed = e.shed
+        for victim in shed:
+            self._mark_shed(victim, now)
         return r
 
     @property
     def waiting(self):
         return self.sched.waiting
 
+    @property
+    def busy(self) -> bool:
+        """Work anywhere in the engine: live slots, queue, or pending retries."""
+        return bool(self.live or self.sched.waiting or self._retry_q)
+
+    # -- failure paths -------------------------------------------------------
+
+    def _mark_shed(self, r: Request, now: float) -> None:
+        """A queued request dropped by backpressure: ``deadline`` when its SLO
+        had expired, ``rejected`` when it was a capacity (shed_oldest) victim."""
+        kind = (
+            "deadline"
+            if r.deadline is not None and now > r.deadline
+            else "rejected"
+        )
+        r.failed = kind
+        self.metrics.incr("n_shed")
+        self.metrics.mark_failed(r.uid, kind, n_out=len(r.out))
+
+    def _fail_or_retry(self, r: Request, kind: str) -> None:
+        """Retryable fault: re-queue with capped exponential tick backoff
+        (``backoff_ticks · 2^(attempt-1)``, capped); else terminal failure
+        with the partial output preserved on the request."""
+        if kind in _RETRYABLE and r.retries < self.max_retries:
+            r.retries += 1
+            delay = min(
+                self.backoff_ticks * (2 ** (r.retries - 1)), self.backoff_cap_ticks
+            )
+            r.retry_at = self.tick + delay
+            r.slot = -1
+            r.out = []  # the retry re-prefills and decodes fresh
+            self._retry_q.append(r)
+            self.metrics.incr("n_retried")
+        else:
+            r.failed = kind
+            self.metrics.mark_failed(r.uid, kind, n_out=len(r.out))
+
+    def _quarantine(self, r: Request, kind: str = "numeric") -> None:
+        """Numeric fault in ``r``'s slot: quarantine the slot (no reuse until
+        its cache stripe is re-grafted from the fresh template) and fail or
+        retry the occupant."""
+        self.sched.quarantine(r.slot)
+        self._needs_scrub.add(r.slot)
+        self.metrics.incr("n_quarantined")
+        self.live.pop(r.uid, None)
+        self._fail_or_retry(r, kind)
+
+    def _scrub_quarantined(self) -> None:
+        """Re-initialize quarantined slots' cache stripes from the fresh
+        template, then release them — poisoned KV never reaches a new
+        occupant."""
+        for slot in sorted(self._needs_scrub):
+            self.caches = self._graft(
+                self.caches, self._one_template, jnp.asarray(slot, jnp.int32)
+            )
+            self.sched.release(slot)
+        self._needs_scrub.clear()
+
+    def _shed_expired_queued(self, now: float) -> None:
+        """Shed queued requests whose SLO already expired — prefill compute
+        is never spent on a request that cannot meet its deadline."""
+        for r in self.sched.shed_expired(now):
+            r.failed = "deadline"
+            self.metrics.incr("n_shed")
+            self.metrics.mark_failed(r.uid, "deadline", n_out=len(r.out))
+
+    def _evict_deadline(self, now: float) -> None:
+        """Mid-decode eviction: a live request past its deadline frees the
+        slot immediately; its partial output stays on ``r.out``."""
+        for r in list(self.live.values()):
+            if r.deadline is not None and now > r.deadline:
+                del self.live[r.uid]
+                self.sched.release(r.slot)
+                r.failed = "deadline"
+                self.metrics.incr("n_evicted_deadline")
+                self.metrics.mark_failed(r.uid, "deadline", n_out=len(r.out))
+
+    def _requeue_retries(self) -> None:
+        ready = [r for r in self._retry_q if r.retry_at <= self.tick]
+        if ready:
+            self._retry_q = [r for r in self._retry_q if r.retry_at > self.tick]
+            for r in ready:
+                self.sched.requeue(r)
+
+    # -- admission -----------------------------------------------------------
+
     def _admit(self):
         """Continuous admission: prefill each planned request immediately.
 
         Batch-of-one prefill against the fresh template, right-padded to the
         scheduler's length bucket, then graft into the batched cache at the
-        slot — live slots keep their per-slot positions untouched.
+        slot — live slots keep their per-slot positions untouched.  Injected
+        prefill faults (and real prefill errors surfacing as FaultInjected)
+        fail the request into the retry path; the first-token logits pass
+        the same fused numeric guard decode uses.
         """
+        self._scrub_quarantined()
         for plan in self.sched.admit():
             r = plan.req
-            S = max(plan.bucket, len(r.prompt))
-            toks = np.zeros((1, S), np.int32)
-            toks[0, : len(r.prompt)] = r.prompt  # right-pad (left-aligned)
-            lengths = jnp.array([len(r.prompt)], jnp.int32)
-            logits, one_caches = self._prefill_fn(S)(
-                self.params, jnp.asarray(toks), lengths, self._one_template
-            )
+            try:
+                if self.faults is not None:
+                    self.faults.on_prefill(r.uid, self.tick)
+                S = max(plan.bucket, len(r.prompt))
+                toks = np.zeros((1, S), np.int32)
+                toks[0, : len(r.prompt)] = r.prompt  # right-pad (left-aligned)
+                lengths = jnp.array([len(r.prompt)], jnp.int32)
+                logits, one_caches = self._call(
+                    f"prefill:{S}",
+                    lambda cfg, S=S: self._prefill_fn(S, cfg),
+                    self.params, jnp.asarray(toks), lengths, self._one_template,
+                )
+            except FaultInjected:
+                self.sched.release(plan.slot)
+                self._fail_or_retry(r, "error")
+                continue
+            tok, ok = self._guard(logits[:, -1:])
+            if not bool(np.asarray(ok)[0]):
+                # poisoned prefill: never graft; quarantine scrubs the slot
+                r.slot = plan.slot
+                self.live[r.uid] = r
+                self._quarantine(r)
+                continue
             self.caches = self._graft(
                 self.caches, one_caches, jnp.asarray(plan.slot, jnp.int32)
             )
             r.slot = plan.slot
-            r.out.append(int(np.asarray(jnp.argmax(logits[0, -1], axis=-1))))
+            r.out.append(int(np.asarray(tok)[0]))
             self.live[r.uid] = r
             self.metrics.mark_admit(r.uid)
             self.metrics.mark_first(r.uid)
 
+    # -- the tick ------------------------------------------------------------
+
     def step(self):
-        """One engine tick: admit waiting requests, then decode one token
-        for every live slot (dead slots decode a dummy token, ignored)."""
+        """One engine tick: enforce deadlines/backpressure, re-queue ready
+        retries, admit, then decode one token for every live slot (dead
+        slots decode a dummy token, ignored)."""
+        self.tick += 1
+        now = self.metrics.clock()
+        if self.faults is not None:
+            delay = self.faults.on_tick(self.tick)
+            if delay:
+                self._sleep(delay)
+                now = self.metrics.clock()
+        self._shed_expired_queued(now)
+        self._requeue_retries()
+        if self.deadline_eviction:
+            self._evict_deadline(now)
         self._admit()
         if not self.live:
             return
         toks = np.zeros((self.batch, 1), np.int32)
         for r in self.live.values():
             toks[r.slot, 0] = r.out[-1]
-        logits, self.caches = self._decode(self.params, jnp.asarray(toks), self.caches)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        finished = []
+        try:
+            if self.faults is not None:
+                self.faults.on_decode(self.tick)
+            logits, caches = self._call(
+                "decode", self._decode_fn, self.params, jnp.asarray(toks), self.caches
+            )
+        except FaultInjected:
+            # transient decode fault: the tick is a side-effect-free no-op
+            # (caches untouched) and replays next tick — bit-exactness holds
+            self.metrics.incr("n_faults_decode")
+            return
+        self.caches = caches
+        if self.faults is not None:
+            for s in self.faults.poison_slots(self.tick):
+                logits = logits.at[s].set(jnp.nan)
+        nxt, ok = self._guard(logits)
+        nxt, ok = np.asarray(nxt), np.asarray(ok)
+        finished, poisoned = [], []
         for r in self.live.values():
+            if not ok[r.slot]:
+                poisoned.append(r)
+                continue
             r.out.append(int(nxt[r.slot]))
             if len(r.out) >= r.max_new:
                 r.done = True
                 finished.append(r)
+        for r in poisoned:
+            self._quarantine(r)
         for r in finished:
             del self.live[r.uid]
             self.sched.release(r.slot)
             self.metrics.mark_done(r.uid, len(r.out))
-        self.metrics.tick_occupancy(len(self.live) + len(finished), self.batch)
+        self.metrics.tick_occupancy(
+            len(self.live) + len(finished) + len(poisoned), self.batch
+        )
 
     def run_until_drained(self, max_ticks: int = 1000, *, strict: bool = True) -> int:
-        """Tick until every request finishes.  If ``max_ticks`` hits with
-        requests still live/queued, mark them ``stuck`` and raise (or warn
-        when ``strict=False``) instead of silently returning."""
+        """Tick until every request reaches a terminal status.  If
+        ``max_ticks`` hits with requests still live/queued/retrying, mark
+        them ``stuck`` and raise (or ``warnings.warn`` when
+        ``strict=False``) instead of silently returning."""
         t = 0
-        while (self.live or self.sched.waiting) and t < max_ticks:
+        while self.busy and t < max_ticks:
             self.step()
             t += 1
-        leftover = list(self.live.values()) + list(self.sched.waiting)
+        leftover = (
+            list(self.live.values()) + list(self.sched.waiting) + list(self._retry_q)
+        )
         if leftover:
             for r in leftover:
                 r.stuck = True
@@ -223,5 +506,5 @@ class Engine:
             )
             if strict:
                 raise RuntimeError(msg)
-            print(f"[engine] WARNING: {msg}")
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return t

@@ -108,6 +108,40 @@ def test_checkpoint_ignores_incomplete(tmp_path):
     assert ck.latest_step(tmp_path) == 5
 
 
+def test_background_save_failure_surfaces(tmp_path):
+    """A failing background write must be reported, never a silently missing
+    checkpoint: the captured exception re-raises from ``wait()`` — and from
+    the NEXT ``save()``, which waits on the previous write first."""
+    # an unwritable "directory": a path whose parent is an existing file
+    # (robust under root, where permission bits don't block writes)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("I am a file, not a directory")
+    bad_dir = blocker / "ckpts"
+
+    writer = ck.save(bad_dir, 1, _tree(), background=True)
+    writer.join()
+    with pytest.raises(RuntimeError, match="background checkpoint write failed"):
+        writer.check()
+    writer.check()  # idempotent: the failure is reported once, not re-raised
+
+    mgr = ck.CheckpointManager(bad_dir)
+    mgr.save(1, _tree())
+    with pytest.raises(RuntimeError, match="background checkpoint write failed"):
+        mgr.save(2, _tree())  # surfaces step 1's failure before starting
+    mgr.wait()  # step-1 failure already consumed; wait() is now a no-op
+
+
+def test_background_save_success_roundtrips(tmp_path):
+    mgr = ck.CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(3, t)
+    mgr.wait()
+    restored, manifest = mgr.restore_latest(t)
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # --------------------------------------------------------------------------
 # fault tolerance
 # --------------------------------------------------------------------------

@@ -187,20 +187,39 @@ def test_run_until_drained_raises_and_marks_stuck():
     cfg, params = _setup("stablelm-3b")
     rng = np.random.default_rng(19)
     eng = Engine(cfg, params, batch_slots=1, max_seq=48)
-    r1 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new=50)
-    r2 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new=50)  # queued
+    r1 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new=40)
+    r2 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new=40)  # queued
     with pytest.raises(RuntimeError, match="undrained"):
         eng.run_until_drained(max_ticks=3)
     assert r1.stuck and r2.stuck
+    assert r1.status == "stuck"
     assert eng.metrics.rollup()["n_stuck"] == 2
 
-    # non-strict: warn, return, and the engine can still be driven to drain
+    # non-strict: a REAL warning (assertable, filterable — not a bare print),
+    # and the engine can still be driven to drain
     eng2 = Engine(cfg, params, batch_slots=1, max_seq=48)
     r = eng2.submit(rng.integers(0, cfg.vocab, size=4), max_new=30)
-    t = eng2.run_until_drained(max_ticks=2, strict=False)
+    with pytest.warns(RuntimeWarning, match="undrained"):
+        t = eng2.run_until_drained(max_ticks=2, strict=False)
     assert t == 2 and r.stuck and not r.done
     eng2.run_until_drained()
     assert r.done
+
+
+def test_submit_validates_total_kv_footprint():
+    """Regression: prompt + max_new - 1 must fit max_seq — a long prompt
+    with the default max_new used to decode past the KV cache end and
+    silently wrap/clobber.  The boundary case (exact fit) must pass."""
+    cfg, params = _setup("stablelm-3b")
+    rng = np.random.default_rng(29)
+    eng = Engine(cfg, params, batch_slots=1, max_seq=32)
+    with pytest.raises(ValueError, match="wrap"):
+        eng.submit(rng.integers(0, cfg.vocab, size=30), max_new=16)
+    with pytest.raises(ValueError, match="wrap"):
+        eng.submit(rng.integers(0, cfg.vocab, size=20), max_new=14)
+    r = eng.submit(rng.integers(0, cfg.vocab, size=20), max_new=13)  # 20+13-1=32
+    eng.run_until_drained()
+    assert r.done and len(r.out) == 13
 
 
 # ---------------------------------------------------------------------------
