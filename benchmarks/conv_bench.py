@@ -21,10 +21,15 @@ Two tiers:
   (``ops.conv_hbm_bytes``) for the Pallas engines, the analytic
   ``hwmodel.conv_hbm_traffic`` (dense f32 weight stream) for the einsum
   rows — plus the ``engine``/``pool`` stamps, so fused and unfused rows
-  stay comparable.  On CPU the kernels run in interpret mode, so the
-  *bytes* column is the hardware-meaningful trajectory signal and µs only
-  compares formulations on equal footing (``--smoke`` shrinks batch/iters
-  for CI).
+  stay comparable.  Every row also stamps ``slab_rows``/``n_slabs`` — the
+  row-band slab plan the implicit engine uses at that layer shape
+  (``n_slabs == 1`` → whole image VMEM-resident); the over-budget
+  ``bigimg_conv1`` layer (3×512×512, double-buffered residency ≈ 6.3 MB >
+  the 6 MiB budget) records ``n_slabs >= 2`` and strictly fewer implicit
+  than explicit modeled bytes — the ci.sh slab gate.  On CPU the kernels
+  run in interpret mode, so the *bytes* column is the hardware-meaningful
+  trajectory signal and µs only compares formulations on equal footing
+  (``--smoke`` shrinks batch/iters for CI).
 
 ``--json [PATH]`` additionally writes every row to ``BENCH_conv.json`` so CI
 tracks the engine trajectory from this PR onward; ``--engine e1,e2`` runs
@@ -93,12 +98,17 @@ from repro.kernels import ops
 from benchmarks.common import bench_row, emit, time_us
 
 # the ISSUE's realistic layer sizes: AlexNet conv1 and conv2 (geometry-free
-# specs; the image dims ride with the inputs)
+# specs; the image dims ride with the inputs), plus a conv1-style layer on a
+# 512×512 image whose double-buffered residency (2·3·512·512·4 ≈ 6.3 MB)
+# overflows the 6 MiB VMEM budget — the implicit engine streams it as
+# row-band slabs (n_slabs ≥ 2 in the row stamps; the ci.sh slab gate)
 REALISTIC_LAYERS = (
     ("alexnet_conv1", cv.Conv2D(k=11, c_in=3, c_out=96, stride=4, relu=True),
      (224, 224)),
     ("alexnet_conv2", cv.Conv2D(k=5, c_in=96, c_out=256, stride=1, relu=True),
      (27, 27)),
+    ("bigimg_conv1", cv.Conv2D(k=11, c_in=3, c_out=96, stride=4, relu=True),
+     (512, 512)),
 )
 
 PAPER_CONV = cv.Conv2D(k=(PAPER_SPEC.KY, PAPER_SPEC.KX), c_in=PAPER_SPEC.C,
@@ -114,6 +124,22 @@ def record(name: str, us_per_call: float, derived: str = "", hbm_bytes=None,
     emit(name, us_per_call, derived, hbm_bytes=hbm_bytes)
     _RECORDS.append(bench_row(name, us_per_call, hbm_bytes=hbm_bytes,
                               derived=derived, mesh_shape=mesh_shape, **extra))
+
+
+def _slab_info(t_gemm, geom, ih, iw) -> dict:
+    """``slab_rows``/``n_slabs`` row stamps: the row-band slab plan the
+    implicit engine uses at this layer shape under the default VMEM budget
+    (``n_slabs == 1`` → whole-image resident; the ci.sh slab gate asserts
+    the over-budget bigimg rows stream with ``n_slabs >= 2``)."""
+    (plh, phh), (plw, phw) = geom.pad
+    hp, wp = ih + plh + phh, iw + plw + phw
+    K, N = t_gemm.shape
+    G, B = t_gemm.codebook.shape
+    bm, bn, bk, _ = ops._pick_blocks(geom.P_rows, K, N, K // G, t_gemm.packed)
+    bm = ops._pool_bm(bm, geom.pool)
+    plan = ops.conv_slab_plan(geom, hp, wp, bm=bm, bn=bn, bk=bk, bins=B,
+                              packed=t_gemm.packed)
+    return {"slab_rows": plan.band_rows, "n_slabs": plan.n_slabs}
 
 
 def _analytic_hbm(conv, ih, iw, batch, *, bins=16, implicit=False,
@@ -150,12 +176,15 @@ def conv_variants_latency():
         t_p = time_us(f_pasm, img)
         hbm_ws = _analytic_hbm(PAPER_CONV, PAPER_SPEC.IH, PAPER_SPEC.IW, 1,
                                bins=bins)
+        slab = _slab_info(p.gemm_tensor(PAPER_CONV.layout),
+                          cv.conv_geom(PAPER_CONV, PAPER_SPEC.IH, PAPER_SPEC.IW),
+                          PAPER_SPEC.IH, PAPER_SPEC.IW)
         record(f"conv.direct.B{bins}", t_d, hbm_bytes=hbm_dense,
-               engine="einsum", pool=1)
+               engine="einsum", pool=1, **slab)
         record(f"conv.weight_shared.B{bins}", t_w, hbm_bytes=hbm_ws,
-               engine="einsum", pool=1)
+               engine="einsum", pool=1, **slab)
         record(f"conv.pasm.B{bins}", t_p, f"pasm/ws={t_p / max(t_w, 1e-9):.2f}",
-               hbm_bytes=hbm_ws, engine="pas_einsum", pool=1)
+               hbm_bytes=hbm_ws, engine="pas_einsum", pool=1, **slab)
 
 
 def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
@@ -180,13 +209,17 @@ def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
         geom = cv.conv_geom(conv, ih, iw)
         oh, ow = cv.conv_out_hw(ih, iw, conv)
         derived = f"P={batch * oh * ow} K={conv.K} M={conv.c_out}"
+        slab = _slab_info(t_gemm, geom, ih, iw)
 
         for engine in engines:
-            if engine == "pas_kernel" and smoke and conv.K > 1000:
+            if engine == "pas_kernel" and smoke and (conv.K > 1000
+                                                     or geom.P > 8000):
                 # no silent caps: the one-hot PAS formulation costs B× the
-                # MACs — at conv2's K=2400 that is minutes in interpret mode
+                # MACs — conv2's K=2400 (or bigimg's P=15876 rows) is
+                # minutes in interpret mode
                 print(f"# skipped conv.batched.pas_kernel.{name}: K={conv.K} "
-                      "too large for CI smoke (interpret mode)", file=sys.stderr)
+                      f"P={geom.P} too large for CI smoke (interpret mode)",
+                      file=sys.stderr)
                 continue
             # the tile-aware model describes the Pallas-kernel dataflows; the
             # XLA einsum port streams dense f32 weights over an explicit
@@ -202,7 +235,7 @@ def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
                         cv.conv2d(i, p, c, engine=e))
             t = time_us(f, imgs, iters=iters, warmup=warmup)
             record(f"conv.batched.{engine}.{name}.bs{batch}", t, derived,
-                   hbm_bytes=hbm, engine=engine, pool=1)
+                   hbm_bytes=hbm, engine=engine, pool=1, **slab)
 
         if "kernel_implicit" in engines:
             # the fused conv/ReLU/max-pool stage (PR 5): ONE pallas_call,
@@ -217,7 +250,8 @@ def batched_conv_latency(smoke: bool = False, engines=BATCH_ENGINES):
             t = time_us(f, imgs, iters=iters, warmup=warmup)
             record(f"conv.batched.kernel_implicit_pool.{name}.bs{batch}", t,
                    f"{derived} pool={pool}", hbm_bytes=hbm_p,
-                   engine="kernel_implicit", pool=pool)
+                   engine="kernel_implicit", pool=pool,
+                   **_slab_info(t_gemm, geom_p, ih, iw))
 
 
 def sharded_conv_latency(
@@ -247,6 +281,7 @@ def sharded_conv_latency(
         )
         t_gemm = params.gemm_tensor(conv.layout)
         geom = cv.conv_geom(conv, ih, iw)
+        slab = _slab_info(t_gemm, geom, ih, iw)
         for engine in engines:
             if engine in ("einsum", "pas_kernel") and smoke and conv.K > 1000:
                 print(f"# skipped conv.sharded.{engine}.{name}: K={conv.K} "
@@ -268,7 +303,7 @@ def sharded_conv_latency(
                 f"P={batch * geom.P} K={conv.K} M={conv.c_out} "
                 f"img/s/dev={img_s_dev:.1f}",
                 hbm_bytes=hbm_dev, mesh_shape=(n_devices, 1),
-                hbm_bytes_1dev=hbm_1dev, engine=engine, pool=1,
+                hbm_bytes_1dev=hbm_1dev, engine=engine, pool=1, **slab,
             )
 
 
@@ -288,21 +323,26 @@ def cnn_forward_latency(smoke: bool = True):
     # so the row never claims a fused (or implicit) dataflow the measured
     # run didn't take
     hbm = 0
+    n_slabs = 1  # stack stamp: the worst (max) per-stage slab count
     _, H, W = cfg.in_chw
     for p, (conv, pool) in zip(params["conv"], cnn.stages(cfg)):
         eng, fused = cv.conv_plan(p, conv, H, W, engine=cfg.impl, pool=pool,
                                   pool_impl=cfg.pool_impl,
                                   vmem_budget=cfg.vmem_budget)
         geom = cv.conv_geom(conv, H, W, pool=pool if fused else 1)
-        hbm += ops.conv_hbm_bytes(p.gemm_tensor(cfg.layout), geom, batch, H, W,
+        t_gemm = p.gemm_tensor(cfg.layout)
+        hbm += ops.conv_hbm_bytes(t_gemm, geom, batch, H, W,
                                   implicit="implicit" in eng, act_bytes=4)
+        if "implicit" in eng:
+            n_slabs = max(n_slabs, _slab_info(t_gemm, geom, H, W)["n_slabs"])
         if not fused and pool > 1:
             # the separate reduce_window pass: read pre-pool, store pooled
             hbm += batch * conv.c_out * 4 * (
                 geom.oh * geom.ow + (geom.oh // pool) * (geom.ow // pool))
         H, W = geom.oh // pool, geom.ow // pool
     record(f"cnn.forward.{cfg.name}.bs{batch}", t, f"layers={len(cfg.layers)}",
-           hbm_bytes=hbm, engine=cfg.impl, pool=None)  # per-stage pools vary
+           hbm_bytes=hbm, engine=cfg.impl, pool=None,  # per-stage pools vary
+           slab_rows=None, n_slabs=n_slabs)
 
 
 def main() -> None:

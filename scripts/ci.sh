@@ -8,7 +8,10 @@
 # must be strictly below the explicit path's on the AlexNet conv1 geometry),
 # the fused conv/ReLU/max-pool suite + gate (the fused stage's modeled bytes
 # strictly below implicit-unfused plus the separate reduce_window pass on
-# conv1, read from the BENCH_conv.json engine/pool-stamped rows),
+# conv1, read from the BENCH_conv.json engine/pool-stamped rows), the slab
+# gate (the over-budget 3x512x512 bigimg shape must run slab-implicit with
+# >= 2 row-band slabs — n_slabs/slab_rows stamped in BENCH_conv.json — and
+# model strictly fewer HBM bytes than the explicit patch stream),
 # the PasmParams suite (dense | shared | packed | grouped linear dispatch
 # through the Pallas kernels + the Whisper-tiny voice smoke), the sharded
 # conv + params suites on 8 host-platform fake devices (shard_map
@@ -92,6 +95,28 @@ assert fused["hbm_bytes"] < unfused["hbm_bytes"] + pool_pass, (fused, unfused)
 print(f"fused conv/ReLU/pool {fused['hbm_bytes']} B < implicit-unfused "
       f"{unfused['hbm_bytes']} B + separate pool pass {pool_pass} B "
       f"({(unfused['hbm_bytes'] + pool_pass) / fused['hbm_bytes']:.2f}x) OK")
+PY
+
+echo "== slab pipeline: over-budget bigimg HBM-bytes gate (512x512 conv1) =="
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_conv.json"))["records"]}
+imp = rows["conv.batched.kernel_implicit.bigimg_conv1.bs1"]
+exp = rows["conv.batched.kernel.bigimg_conv1.bs1"]
+# the 3x512x512 image blows the 6 MiB whole-image budget: the implicit
+# engine must run it as >= 2 row-band slabs (no explicit fallback) and
+# still model strictly fewer HBM bytes than the explicit patch stream
+assert imp["n_slabs"] >= 2 and imp["slab_rows"] is not None, imp
+assert imp["hbm_bytes"] is not None and exp["hbm_bytes"] is not None
+assert imp["hbm_bytes"] < exp["hbm_bytes"], (
+    f"slab-implicit must model strictly fewer HBM bytes than explicit on "
+    f"the over-budget bigimg shape: implicit={imp['hbm_bytes']} "
+    f"explicit={exp['hbm_bytes']}"
+)
+print(f"bigimg slab-implicit {imp['hbm_bytes']} B ({imp['n_slabs']} slabs of "
+      f"{imp['slab_rows']} rows) < explicit {exp['hbm_bytes']} B "
+      f"({exp['hbm_bytes'] / imp['hbm_bytes']:.2f}x reduction) OK")
 PY
 
 echo "== PasmParams: dense-kernel dispatch + Whisper-voice smoke =="

@@ -23,9 +23,9 @@ exposes that accelerator through two types and one entry point:
   engine       meaning
   ===========  ================================================================
   ``auto``     dense → einsum; shared/packed → implicit-GEMM Pallas kernel
-               when batched and the image tiles into VMEM
-               (:func:`_implicit_fits`), explicit-im2col kernel otherwise,
-               einsum reference for single images
+               when batched (images past the VMEM budget stream as
+               row-band slabs — no explicit fallback), einsum reference
+               for single images
   ``einsum``   pure-XLA reference: (dequantized) dense GEMM + XLA epilogue
   ``kernel``   :func:`repro.kernels.ops.pasm_matmul` — fused-dequant Pallas
                GEMM with the bias/ReLU epilogue fused into the last-k-step
@@ -108,11 +108,14 @@ _PAS_ENGINES = ("pas_kernel", "pas_kernel_implicit", "pas_einsum")
 # when impossible), "unfused" always runs the separate reduce_window.
 POOL_IMPLS = ("auto", "fused", "unfused")
 
-# ``auto`` only picks the implicit path when one padded image block (the
-# per-grid-step x operand, f32) fits comfortably in VMEM next to the idx /
-# patch / accumulator tiles; larger images fall back to explicit im2col.
-# This module-level default suits a ~16 MiB-VMEM TPU core; per-call targets
-# override it with ``conv2d(vmem_budget=)`` / ``CNNConfig.vmem_budget``.
+# The implicit engines' per-image VMEM budget: the double-buffered padded
+# image (or row-band slab) plus the idx / codebook / bias / output blocks
+# must fit under it.  Images past the budget stream as slabs
+# (``ops.conv_slab_plan``) — the budget sizes the slabs, it no longer flips
+# ``auto`` to the explicit engine.  This module-level default suits a
+# ~16 MiB-VMEM TPU core; per-call targets override it with
+# ``conv2d(vmem_budget=)`` / ``CNNConfig.vmem_budget``.  Keep in sync with
+# ``repro.kernels.ops.IMPLICIT_VMEM_BUDGET``.
 _IMPLICIT_VMEM_BUDGET = 6 * 1024 * 1024
 
 # GEMM column order per layout: NCHW flattens patches (and weights) in the
@@ -212,12 +215,30 @@ def conv_geom(conv: Conv2D, ih: int, iw: int, pool: int = 1):
 
 
 def _implicit_fits(
-    conv: Conv2D, ih: int, iw: int, budget: Optional[int] = None
+    conv: Conv2D, ih: int, iw: int, budget: Optional[int] = None,
+    params: Optional["ConvParams"] = None, pool: int = 1,
 ) -> bool:
-    """``auto``'s shapes-tile predicate for the implicit-GEMM path.
+    """Whole-image VMEM residency predicate for the implicit-GEMM path.
 
-    ``budget`` is the per-call image-block VMEM budget in bytes
+    True when the *double-buffered* padded image plus every other
+    per-grid-step VMEM block — idx / codebook / bias / (pooled) output
+    block, their double buffers, and the pool (or PAS bin) scratch —
+    fits ``budget`` (:func:`repro.kernels.ops.conv_whole_image_fits`,
+    audited against the kernels' BlockSpecs).  The seed counted only one
+    copy of the raw image bytes, under-reporting residency by the pipeline
+    double buffer and the whole fixed-block overhead.
+
+    Shapes that fail no longer fall back to explicit im2col: ``auto``
+    keeps the implicit engine and the kernel wrappers stream the image as
+    row-band slabs sized to the same ``budget``
+    (:func:`repro.kernels.ops.conv_slab_plan`).  This predicate now marks
+    the whole-image/slab boundary rather than gating dispatch.
+
+    ``budget`` is the per-call VMEM budget in bytes
     (``conv2d(vmem_budget=)``); ``None`` takes the module default.
+    ``params``/``pool`` refine the block accounting (packed idx bytes,
+    bins, bias presence, pool-aligned ``bm``); without ``params`` the
+    defaults model a shared unpacked dictionary with bias.
     """
     if budget is None:
         budget = _IMPLICIT_VMEM_BUDGET
@@ -226,7 +247,23 @@ def _implicit_fits(
     if oh <= 0 or ow <= 0:
         return False
     hp, wp = ih + plo_h + phi_h, iw + plo_w + phi_w
-    return conv.c_in * hp * wp * 4 <= budget
+    from repro.kernels import ops as _kops  # deferred: core must not need pallas
+
+    geom = conv_geom(conv, ih, iw, pool=pool)
+    packed = params is not None and params.kind == "packed"
+    pad_k = params.pad_k if params is not None else 0
+    groups = params.groups if params is not None else 1
+    bins = params.bins if params is not None else 16
+    has_bias = params is None or params.bias is not None
+    K = conv.K + pad_k
+    bm, bn, bk, _ = _kops._pick_blocks(
+        geom.P_rows, K, conv.c_out, K // groups, packed
+    )
+    bm = _kops._pool_bm(bm, pool)
+    return _kops.conv_whole_image_fits(
+        geom, hp, wp, bm=bm, bn=bn, bk=bk, bins=bins, packed=packed,
+        pas=False, has_bias=has_bias, vmem_budget=budget,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -599,12 +636,17 @@ def _resolve_engine(
             "codebooks need engine='kernel'/'kernel_implicit'/'einsum'"
         )
     if engine == "auto":
-        # batched inputs ride the Pallas fast path — implicit im2col when the
-        # image tiles into VMEM, explicit otherwise; single images keep the
-        # einsum reference port (the semantics the kernels are tested against)
+        # batched inputs ride the Pallas fast path — always implicit im2col:
+        # images past the VMEM budget stream as row-band slabs instead of
+        # falling back to explicit im2col (``budget``/``vmem_budget`` now
+        # sizes the slabs, it no longer flips the engine); single images keep
+        # the einsum reference port (the semantics the kernels are tested
+        # against).  Degenerate geometry (no output pixels) keeps the
+        # explicit path, whose empty patch matrix handles it.
         if squeeze:
             return "einsum"
-        return "kernel_implicit" if _implicit_fits(conv, ih, iw, budget) else "kernel"
+        oh, ow = conv_out_hw(ih, iw, conv)
+        return "kernel_implicit" if oh > 0 and ow > 0 else "kernel"
     return engine
 
 
@@ -613,14 +655,17 @@ def _pool_fusible(eng: str, conv: Conv2D, ih: int, iw: int, pool: int,
     """``conv2d(pool=)``'s ``auto`` fuse predicate.
 
     Fuses when: a Pallas engine; the pooled output is non-empty (floor
-    windowing needs at least one whole window per axis); a pool-aligned tile
-    plan exists (``lcm(pool², 8) ≤ 256`` rows — the kernels reduce whole
-    windows per block); and — on the *explicit* engines only — no mesh:
-    their shard_map splits the patch-row dim, whose shard boundaries could
-    land mid-window.  The implicit engines shard whole images over ``data``,
-    so pool windows never cross a shard and they fuse under a mesh too.
-    Everything this refuses runs the bit-exact ``reduce_window`` fallback.
+    windowing needs at least one whole window per axis); and a pool-aligned
+    tile plan exists (``lcm(pool², 8) ≤ 256`` rows — the kernels reduce
+    whole windows per block).  A mesh no longer blocks the explicit
+    engines: ``conv2d`` pads the batch to divide ``data``, so the
+    window-major patch rows split as ``(batch/n_data)·P_rows`` per shard —
+    always whole pool windows (``P_rows`` is a multiple of ``pool²``) —
+    and the explicit fused pool shards like the implicit one (the PR-5
+    carve-out is closed).  Everything this refuses runs the bit-exact
+    ``reduce_window`` fallback.
     """
+    del mesh  # no longer consulted (and may be any mesh-like object)
     if pool == 1 or eng in ("einsum", "pas_einsum"):
         return False
     oh, ow = conv_out_hw(ih, iw, conv)
@@ -628,11 +673,7 @@ def _pool_fusible(eng: str, conv: Conv2D, ih: int, iw: int, pool: int,
         return False
     from repro.kernels import ops as _kops  # deferred: core must not need pallas
 
-    if not _kops.pool_plan_exists(pool):  # no pool-aligned block plan
-        return False
-    if mesh is not None and eng not in _IMPLICIT_ENGINES:
-        return False
-    return True
+    return _kops.pool_plan_exists(pool)
 
 
 def conv_plan(
@@ -733,9 +774,13 @@ def conv2d(
     bit-exact vs the single-device call on every engine but ``pas_einsum``
     (the single-device reference port, which refuses a mesh).
 
-    ``vmem_budget=`` overrides the ``auto`` engine's implicit-GEMM
-    image-block VMEM budget in bytes (default ``_IMPLICIT_VMEM_BUDGET``),
-    so engine selection is tunable per target core.
+    ``vmem_budget=`` overrides the implicit engines' per-image VMEM budget
+    in bytes (default ``_IMPLICIT_VMEM_BUDGET``).  Images whose
+    double-buffered whole-image residency exceeds it stream through the
+    kernel as row-band slabs (:func:`repro.kernels.ops.conv_slab_plan`) —
+    bit-exact vs the whole-image schedule — so the budget tunes slab
+    sizing per target core rather than flipping ``auto`` to the explicit
+    engine.
     """
     if pool_impl not in POOL_IMPLS:
         raise ValueError(f"pool_impl must be one of {POOL_IMPLS}, got {pool_impl!r}")
@@ -764,9 +809,9 @@ def conv2d(
     if pool_impl == "fused" and pool > 1 and not fuse_pool:
         raise ValueError(
             f"pool_impl='fused' but engine {eng!r} cannot fuse pool={pool} "
-            "here (einsum engines, sub-window outputs, oversize windows and "
-            "mesh-sharded explicit patch rows all need the reduce_window "
-            "fallback — pool_impl='auto' picks it automatically)"
+            "here (einsum engines, sub-window outputs and oversize windows "
+            "all need the reduce_window fallback — pool_impl='auto' picks "
+            "it automatically)"
         )
 
     batch = xb.shape[0]
@@ -793,8 +838,12 @@ def conv2d(
         geom = conv_geom(conv, ih, iw, pool=pool if fuse_pool else 1)
         t = params.gemm_tensor(conv.layout)
         f = _kops.pasm_conv2d if eng == "kernel_implicit" else _kops.pas_conv2d
+        # resolve the budget here (not in the kernel wrappers) so per-call
+        # overrides AND the module default both reach the slab planner
         y = f(xb, t, geom, bias=bias, relu=conv.relu, interpret=interpret,
-              mesh=mesh)
+              mesh=mesh,
+              vmem_budget=(vmem_budget if vmem_budget is not None
+                           else _IMPLICIT_VMEM_BUDGET))
         y = y.reshape(-1, conv.c_out)  # (B, P, M) → (B·P, M), after the kernel
         if fuse_pool:  # the kernel already stored the pooled map
             out = _col2im(y, conv, xb.shape[0], geom.ohp, geom.owp, squeeze)

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 __all__ = [
     "GateConstants",
@@ -324,7 +324,7 @@ def conv_hbm_traffic(
     *, IH: int, IW: int, C: int, KY: int, KX: int, M: int, stride: int = 1,
     batch: int = 1, bins: int = 16, pad: tuple = (0, 0, 0, 0),
     act_bytes: int = 4, packed: bool = True, implicit: bool = True,
-    pool: int = 1, dense: bool = False,
+    pool: int = 1, dense: bool = False, vmem_budget: Optional[int] = None,
 ) -> int:
     """Logical-shape HBM bytes of one conv layer on the PASM GEMM.
 
@@ -337,7 +337,12 @@ def conv_hbm_traffic(
       written by the front-end and read back by the kernel — ``2·B·P·K``
       activation elements, an :func:`im2col_inflation` blow-up of the image.
     * ``implicit=True``: the padded image streams once per reuse window —
-      ``B·C·Hp·Wp`` elements, full stop.
+      ``B·C·Hp·Wp`` elements when its double-buffered residency fits
+      ``vmem_budget`` (``None`` → the 6 MiB module default).  Past the
+      budget the kernel streams row-band slabs and the only extra traffic
+      is the re-fetched seam halo: ``(n_slabs−1)·max(KY−stride, 0)`` rows,
+      with ``n_slabs = ceil(2·C·Hp·Wp·act_bytes / budget)`` — the
+      logical-shape mirror of the kernels' slab plan.
 
     ``pool > 1`` models the **fused conv/ReLU/max-pool stage** (DESIGN.md
     §3.2): the store shrinks to the pooled ``(OH//pool)·(OW//pool)`` map and
@@ -365,7 +370,13 @@ def conv_hbm_traffic(
         cb_bytes = bins * 4
     out_bytes = batch * OHp * OWp * M * 4  # f32 store (pooled when pool > 1)
     if implicit:
-        x_bytes = batch * C * hp * wp * act_bytes
+        budget = 6 * 1024 * 1024 if vmem_budget is None else vmem_budget
+        img_resident = 2 * C * hp * wp * act_bytes  # double-buffered image
+        rows = hp
+        if img_resident > budget:
+            n_slabs = -(-img_resident // budget)
+            rows = hp + (n_slabs - 1) * max(KY - stride, 0)  # seam halos
+        x_bytes = batch * C * rows * wp * act_bytes
     else:
         x_bytes = 2 * batch * P * K * act_bytes  # im2col store + kernel stream
     return x_bytes + idx_bytes + cb_bytes + out_bytes

@@ -32,6 +32,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.pas_histogram import pas_conv_kernel_call, pas_matmul_kernel_call
 from repro.kernels.pasm_matmul import (
     ConvGeom,
+    SlabPlan,
     pasm_conv_kernel_call,
     pasm_matmul_kernel_call,
 )
@@ -42,11 +43,22 @@ __all__ = [
     "pasm_conv2d",
     "pas_conv2d",
     "ConvGeom",
+    "SlabPlan",
+    "conv_slab_plan",
+    "conv_whole_image_fits",
+    "IMPLICIT_VMEM_BUDGET",
     "matmul_flops",
     "pasm_hbm_bytes",
     "conv_hbm_bytes",
     "pool_plan_exists",
 ]
+
+# Per-grid-step VMEM budget (bytes) the slab planner sizes the implicit conv
+# engines against.  Suits a ~16 MiB-VMEM TPU core with headroom for Mosaic's
+# own allocations; per-call targets override via ``vmem_budget=``.  Keep in
+# sync with ``repro.core.conv._IMPLICIT_VMEM_BUDGET`` (the dispatch-level
+# default that conv2d resolves and threads down here).
+IMPLICIT_VMEM_BUDGET = 6 * 1024 * 1024
 
 
 def _interpret_default() -> bool:
@@ -89,7 +101,7 @@ def _shard_map(fn, mesh, in_specs, out_specs):
 
 
 def _shard_gemm(mesh, n_cols, local_fn, operands, *, x_rank, out_rank,
-                bias=None):
+                bias=None, gather_output=False):
     """The one shard_map dispatch every sharded wrapper routes through.
 
     ``operands = (x, idx, codebook)`` (+ ``bias`` appended when given): x
@@ -100,6 +112,18 @@ def _shard_gemm(mesh, n_cols, local_fn, operands, *, x_rank, out_rank,
     callers keep their own bias/no-bias *impl* split so the sharded call
     mirrors the single-device branch structure exactly (part of the bitwise
     guarantee), but the spec plumbing lives only here.
+
+    ``gather_output=True`` fuses the inter-layer all-gather into the kernel
+    epilogue: when N actually shards over ``model``, each shard's output is
+    ``all_gather``'d (tiled, axis-index order — the exact N-tile layout)
+    *inside* the shard_map body right after the pallas_call, and the out
+    spec drops the trailing ``ns`` (model-replicated activations).  The next
+    layer's x operand is then already replicated over ``model``, so XLA has
+    no reshard to insert between consecutive pallas_calls (DESIGN.md §4.1).
+    Tiled all-gather concatenates the per-device N tiles in order — the
+    bitwise-identical full-N output.  Differentiable: the all-gather's
+    transpose is a psum_scatter, so the fused collective rides the existing
+    custom VJPs unchanged.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -108,8 +132,14 @@ def _shard_gemm(mesh, n_cols, local_fn, operands, *, x_rank, out_rank,
     if bias is not None:
         in_specs += (P(ns),)
         operands = operands + (bias,)
-    out_spec = P("data", *([None] * (out_rank - 2)), ns)
-    return _shard_map(local_fn, mesh, in_specs, out_spec)(*operands)
+    fn, out_ns = local_fn, ns
+    if gather_output and ns is not None:
+        def fn(*ops):
+            return jax.lax.all_gather(local_fn(*ops), ns, axis=-1, tiled=True)
+
+        out_ns = None
+    out_spec = P("data", *([None] * (out_rank - 2)), out_ns)
+    return _shard_map(fn, mesh, in_specs, out_spec)(*operands)
 
 
 def _pick_blocks(M: int, K: int, N: int, group_size: int, packed: bool):
@@ -179,22 +209,147 @@ def _pool_bm(bm: int, pool: int) -> int:
     return max(a, bm - bm % a)
 
 
-def _check_pool_operand(x, pool: int, mesh) -> None:
-    """The shared ``pool=`` preconditions of the explicit GEMM wrappers:
-    single-device only (sharded patch-row boundaries could split pool
-    windows — ``conv2d(mesh=)`` falls back to ``reduce_window``), and a 2-D
-    window-major operand (``pool²`` consecutive rows per window)."""
-    if mesh is not None:
-        raise ValueError(
-            "pool= fuses single-device only on the explicit GEMM path "
-            "(sharded patch-row boundaries could split pool windows); "
-            "conv2d(mesh=) falls back to reduce_window instead"
-        )
+def _check_pool_operand(x, pool: int, mesh=None, n_data: int = 1) -> None:
+    """The shared ``pool=`` preconditions of the explicit GEMM wrappers: a
+    2-D window-major operand (``pool²`` consecutive rows per window), and —
+    under ``mesh=`` — rows that split over ``data`` in whole pool windows
+    (``conv2d`` guarantees this: it pads the batch to divide the axis, and
+    each image contributes ``P_rows`` window-major rows, a multiple of
+    ``pool²``, so per-image row runs never straddle a shard boundary)."""
     if x.ndim != 2 or x.shape[0] % (pool * pool):
         raise ValueError(
             "pool= needs a 2-D window-major x (pool² consecutive rows "
             f"per window), got shape {x.shape} with pool={pool}"
         )
+    if mesh is not None and x.shape[0] % (n_data * pool * pool):
+        raise ValueError(
+            f"pool= under mesh= needs the window-major rows ({x.shape[0]}) "
+            f"to split over the data axis ({n_data}) in whole pool windows; "
+            "conv2d(mesh=) guarantees this by padding the batch first"
+        )
+
+
+def _conv_block_vmem_bytes(*, bm: int, bn: int, bk: int, bins: int,
+                           packed: bool = False, pas: bool = False,
+                           has_bias: bool = True, pool: int = 1) -> int:
+    """Non-image VMEM bytes of one implicit-conv grid step.
+
+    Counts what actually sits in VMEM next to the image block: the idx tile
+    (uint8, halved when packed), the codebook row (+1 reserved pad bin, the
+    worst case), the bias row, the output block — each ×2 because Pallas
+    double-buffers every pipelined operand — plus the un-double-buffered
+    scratch accumulator (PAS bin counters always; the pasm pooled
+    accumulator when the pool is fused).
+    """
+    pw = pool * pool
+    idx = 2 * (bk // 2 if packed else bk) * bn
+    cb = 2 * (bins + 1) * 4
+    bias = 2 * bn * 4 if has_bias else 0
+    out = 2 * (bm // pw) * bn * 4
+    if pas:
+        scratch = bm * bn * bins * 4
+    else:
+        scratch = bm * bn * 4 if pool > 1 else 0
+    return idx + cb + bias + out + scratch
+
+
+def conv_whole_image_fits(
+    geom: ConvGeom, hp: int, wp: int, *, bm: int, bn: int, bk: int, bins: int,
+    packed: bool = False, pas: bool = False, has_bias: bool = True,
+    vmem_budget: Optional[int] = None, itemsize: int = 4,
+) -> bool:
+    """Whether the whole padded image (``hp × wp``) stays VMEM-resident.
+
+    THE accounting shared by :func:`conv_slab_plan` and ``conv2d``'s
+    :func:`repro.core.conv._implicit_fits` predicate: the image block counts
+    **twice** (Pallas prefetches image ``b+1`` across the batch grid
+    dimension — the double buffer is real VMEM) on top of every non-image
+    per-grid-step block from :func:`_conv_block_vmem_bytes`.
+    """
+    budget = IMPLICIT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    fixed = _conv_block_vmem_bytes(bm=bm, bn=bn, bk=bk, bins=bins,
+                                   packed=packed, pas=pas, has_bias=has_bias,
+                                   pool=geom.pool)
+    return fixed + 2 * hp * geom.c_in * wp * itemsize <= budget
+
+
+def _halo_block_rows(band_rows: int, overlap: int) -> int:
+    """Halo block size: the smallest divisor of ``band_rows`` ≥ the needed
+    row overlap ``max(ky - stride, 0)`` (0 when no overlap).  Divisibility
+    makes the halo offset ``(slab+1)·band_rows`` block-aligned, which is all
+    the halo BlockSpec needs — ``band_rows`` itself stays unconstrained."""
+    if overlap <= 0:
+        return 0
+    d = overlap
+    while band_rows % d:
+        d += 1
+    return d
+
+
+def conv_slab_plan(
+    geom: ConvGeom, hp: int, wp: int, *, bm: int, bn: int, bk: int, bins: int,
+    packed: bool = False, pas: bool = False, has_bias: bool = True,
+    vmem_budget: Optional[int] = None, itemsize: int = 4,
+) -> SlabPlan:
+    """Size the row-band slab pipeline for one implicit conv (DESIGN.md §3.3).
+
+    Whole image first: when the double-buffered image plus every non-image
+    block fits ``vmem_budget``, the plan is a single slab — the legacy
+    schedule, bit-for-bit (existing byte pins survive).  Otherwise the
+    padded image is tiled into the largest row bands whose double-buffered
+    footprint fits:
+
+    * a slab covers ``blocks_per_slab`` output-row blocks with
+      ``(blocks_per_slab·bmp) % owp == 0`` — whole pooled output rows, so
+      pool windows never straddle a seam and the band index map is a pure
+      division — giving ``band_rows = slab_out_rows·stride`` image rows;
+    * the minimal ``blocks_per_slab`` is ``owp / gcd(bmp, owp)`` (scaled up
+      until the band covers the ``ky - stride`` overlap); the planner then
+      grows it greedily in those multiples while the footprint fits;
+    * the halo block is :func:`_halo_block_rows`; ``rows_total`` is what the
+      kernel operand must carry.
+
+    Best-effort: when even the minimal slab exceeds the budget (or the
+    geometry is unsplittable — one slab would cover everything), the plan
+    degrades to the closest schedule rather than raising; the budget is a
+    sizing target, not a hard capacity.
+    """
+    budget = IMPLICIT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    pw = geom.pool * geom.pool
+    bmp = bm // pw
+    n_blocks = max(1, -(-geom.P_out // bmp))
+    row_bytes = geom.c_in * wp * itemsize
+    whole = SlabPlan(1, n_blocks, hp, 0, hp)
+    if conv_whole_image_fits(geom, hp, wp, bm=bm, bn=bn, bk=bk, bins=bins,
+                             packed=packed, pas=pas, has_bias=has_bias,
+                             vmem_budget=budget, itemsize=itemsize):
+        return whole
+    fixed = _conv_block_vmem_bytes(bm=bm, bn=bn, bk=bk, bins=bins,
+                                   packed=packed, pas=pas, has_bias=has_bias,
+                                   pool=geom.pool)
+    overlap = max(geom.ky - geom.stride, 0)
+    owp = geom.owp
+
+    def band(bps):  # image rows a bps-block slab advances by
+        return (bps * bmp // owp) * geom.pool * geom.stride
+
+    bps_min = owp // math.gcd(bmp, owp)
+    if overlap > 0 and band(bps_min) < overlap:
+        bps_min *= -(-overlap // band(bps_min))
+    if bps_min >= n_blocks:
+        return whole  # unsplittable: one slab would already cover everything
+
+    def foot(bps):
+        s = band(bps)
+        return fixed + 2 * (s + _halo_block_rows(s, overlap)) * row_bytes
+
+    bps = bps_min
+    while bps + bps_min < n_blocks and foot(bps + bps_min) <= budget:
+        bps += bps_min
+    s = band(bps)
+    halo = _halo_block_rows(s, overlap)
+    n_slabs = -(-n_blocks // bps)
+    return SlabPlan(n_slabs, bps, s, halo, n_slabs * s + halo)
 
 
 def _pad_weight_operands(idx, codebook, bn, gs_pad, packed):
@@ -411,9 +566,11 @@ def pasm_matmul(
     write-through: ``x`` must be 2-D with **window-major** rows (each
     consecutive ``pool²`` rows one pool window — the explicit conv path's
     ``_pool_order_patches`` ordering) and the result is the pooled
-    ``(M/pool², N)``.  Single-device only: sharded patch-row boundaries
-    could split windows, so ``conv2d(mesh=)`` keeps the ``reduce_window``
-    fallback there.
+    ``(M/pool², N)``.  Under ``mesh=`` the window-major rows must split
+    over ``data`` in whole pool windows (``conv2d`` guarantees this by
+    padding the batch to divide the axis — each image's ``P_rows`` rows are
+    a multiple of ``pool²``, so shard boundaries land between windows and
+    the explicit engines fuse pooling under a mesh too).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -421,8 +578,17 @@ def pasm_matmul(
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
     if pool > 1:
-        _check_pool_operand(x, pool, mesh)
+        nd = _mesh_sizes(mesh)[0] if mesh is not None else 1
+        _check_pool_operand(x, pool, mesh, nd)
         b = jnp.zeros((N,), jnp.float32) if bias is None else bias
+        if mesh is not None:
+            return _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl, bl: _pasm_matmul_ep(
+                    xl, il, cl, bl, t.packed, gather, interpret, relu, pool
+                ),
+                (x2, t.idx, t.codebook), x_rank=2, out_rank=2, bias=b,
+            )
         return _pasm_matmul_ep(
             x2, t.idx, t.codebook, b, t.packed, gather, interpret, relu, pool
         )
@@ -495,10 +661,10 @@ def pas_matmul(
 
     ``bias (N,)`` / ``relu`` fuse into the post-pass write-through, and
     ``pool > 1`` max-reduces window-major row groups there too (2-D x only,
-    single-device — same contract as :func:`pasm_matmul`).  With ``mesh=``
-    rows shard over ``data``, N over ``model`` when divisible; the in-kernel
-    PAS bin counters are per-shard VMEM scratch, so they replicate with the
-    kernel itself.
+    whole windows per ``data`` shard — same contract as
+    :func:`pasm_matmul`).  With ``mesh=`` rows shard over ``data``, N over
+    ``model`` when divisible; the in-kernel PAS bin counters are per-shard
+    VMEM scratch, so they replicate with the kernel itself.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -507,7 +673,24 @@ def pas_matmul(
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
     if pool > 1:
-        _check_pool_operand(x, pool, mesh)
+        nd = _mesh_sizes(mesh)[0] if mesh is not None else 1
+        _check_pool_operand(x, pool, mesh, nd)
+        if mesh is not None:
+            if bias is None:
+                return _shard_gemm(
+                    mesh, N,
+                    lambda xl, il, cl: _pas_matmul_impl(
+                        xl, il, cl, relu=relu, pool=pool, interpret=interpret
+                    ),
+                    (x2, idx, t.codebook), x_rank=2, out_rank=2,
+                )
+            return _shard_gemm(
+                mesh, N,
+                lambda xl, il, cl, bl: _pas_matmul_impl(
+                    xl, il, cl, bl, relu=relu, pool=pool, interpret=interpret
+                ),
+                (x2, idx, t.codebook), x_rank=2, out_rank=2, bias=bias,
+            )
         return _pas_matmul_impl(
             x2, idx, t.codebook, bias, relu=relu, pool=pool, interpret=interpret
         )
@@ -567,11 +750,14 @@ def _geom_patches(x, geom: ConvGeom):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("geom", "packed", "gather", "interpret", "relu", "use_pas"),
+    static_argnames=(
+        "geom", "packed", "gather", "interpret", "relu", "use_pas",
+        "vmem_budget",
+    ),
 )
 def _conv_fwd_impl(
     x, idx, codebook, bias=None, *, geom, packed, gather="take", interpret=False,
-    relu=False, use_pas=False,
+    relu=False, use_pas=False, vmem_budget=None,
 ):
     """Shared implicit-conv forward: tile plan + weight padding + kernel call.
 
@@ -584,6 +770,15 @@ def _conv_fwd_impl(
     ``geom.pool > 1`` switches the rows to window-major (``geom.P_rows``)
     and aligns ``bm`` to whole pool windows — the k-tile sequence is
     untouched, so the fused pool stays bit-exact vs conv + reduce_window.
+
+    Images whose double-buffered whole-image footprint exceeds
+    ``vmem_budget`` stream through the kernel as row-band slabs
+    (:func:`conv_slab_plan`): the padded image is sliced/zero-padded to the
+    plan's ``rows_total`` (sliced rows are provably never gathered — the
+    bottom band covers the last output row's receptive field; padded rows
+    are only replayed by clamped M-pad windows) and the kernel's image
+    operand becomes the double-buffered band(+halo) pair.  The GEMM
+    schedule is untouched, so slabbed output is bit-exact too.
     """
     G, _ = codebook.shape
     K = idx.shape[0] * (2 if packed else 1)
@@ -594,6 +789,21 @@ def _conv_fwd_impl(
     bm = _pool_bm(bm, geom.pool)
     idxp, cbp, _ = _pad_weight_operands(idx, codebook, bn, gs_pad, packed)
     xp = _pad_image(x, geom)
+    rows_ax = 1 if geom.nhwc else 2
+    hp = xp.shape[rows_ax]
+    wp = xp.shape[2 if geom.nhwc else 3]
+    slab = conv_slab_plan(
+        geom, hp, wp, bm=bm, bn=bn, bk=bk, bins=codebook.shape[1],
+        packed=packed, pas=use_pas, has_bias=bias is not None,
+        vmem_budget=vmem_budget,
+    )
+    if slab.n_slabs > 1 and slab.rows_total != hp:
+        if slab.rows_total < hp:
+            xp = jax.lax.slice_in_dim(xp, 0, slab.rows_total, axis=rows_ax)
+        else:
+            cfg = [(0, 0)] * 4
+            cfg[rows_ax] = (0, slab.rows_total - hp)
+            xp = jnp.pad(xp, cfg)
     bias_row = None
     if bias is not None:
         bias_row = jnp.pad(bias.astype(jnp.float32), (0, idxp.shape[1] - N))
@@ -601,13 +811,13 @@ def _conv_fwd_impl(
     if use_pas:
         out = pas_conv_kernel_call(
             xp, idxp, cbp, bias_row, geom=geom, gs=gs, gs_pad=gs_pad,
-            bm=bm, bn=bn, bk=bk, relu=relu, interpret=interpret,
+            bm=bm, bn=bn, bk=bk, relu=relu, slab=slab, interpret=interpret,
         )
     else:
         out = pasm_conv_kernel_call(
             xp, idxp, cbp, bias_row, geom=geom, packed=packed, gs=gs,
             gs_pad=gs_pad, bm=bm, bn=bn, bk=bk, gather=gather, relu=relu,
-            interpret=interpret,
+            slab=slab, interpret=interpret,
         )
     return out[:, : geom.P_out, :N]
 
@@ -663,20 +873,22 @@ def _conv_bwd_core(geom, packed, gather, interpret, relu, res, g):
     return dx, dcb, g2
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _pasm_conv(x, idx, codebook, geom, packed, gather, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _pasm_conv(x, idx, codebook, geom, packed, gather, interpret, vmem_budget):
     return _conv_fwd_impl(
         x, idx, codebook, geom=geom, packed=packed, gather=gather,
-        interpret=interpret,
+        interpret=interpret, vmem_budget=vmem_budget,
     )
 
 
-def _pasm_conv_fwd(x, idx, codebook, geom, packed, gather, interpret):
-    y = _pasm_conv(x, idx, codebook, geom, packed, gather, interpret)
+def _pasm_conv_fwd(x, idx, codebook, geom, packed, gather, interpret,
+                   vmem_budget):
+    y = _pasm_conv(x, idx, codebook, geom, packed, gather, interpret,
+                   vmem_budget)
     return y, (x, idx, codebook)
 
 
-def _pasm_conv_bwd(geom, packed, gather, interpret, res, g):
+def _pasm_conv_bwd(geom, packed, gather, interpret, vmem_budget, res, g):
     x, idx, codebook = res
     dx, dcb, _ = _conv_bwd_core(
         geom, packed, gather, interpret, False, (x, idx, codebook, None, None), g
@@ -687,23 +899,27 @@ def _pasm_conv_bwd(geom, packed, gather, interpret, res, g):
 _pasm_conv.defvjp(_pasm_conv_fwd, _pasm_conv_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
-def _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret,
+                  relu, vmem_budget):
     """The fused-epilogue implicit conv: bias/ReLU applied inside the kernel."""
     return _conv_fwd_impl(
         x, idx, codebook, bias, geom=geom, packed=packed, gather=gather,
-        interpret=interpret, relu=relu,
+        interpret=interpret, relu=relu, vmem_budget=vmem_budget,
     )
 
 
-def _pasm_conv_ep_fwd(x, idx, codebook, bias, geom, packed, gather, interpret, relu):
-    y = _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret, relu)
+def _pasm_conv_ep_fwd(x, idx, codebook, bias, geom, packed, gather, interpret,
+                      relu, vmem_budget):
+    y = _pasm_conv_ep(x, idx, codebook, bias, geom, packed, gather, interpret,
+                      relu, vmem_budget)
     # y is a residual only for the ReLU mask (and only when unpooled — the
     # pooled output can't recover the pre-pool mask; the backward recomputes)
     return y, (x, idx, codebook, bias, y if relu and geom.pool == 1 else None)
 
 
-def _pasm_conv_ep_bwd(geom, packed, gather, interpret, relu, res, g):
+def _pasm_conv_ep_bwd(geom, packed, gather, interpret, relu, vmem_budget, res,
+                      g):
     x, idx, codebook, bias, y = res
     dx, dcb, g2 = _conv_bwd_core(
         geom, packed, gather, interpret, relu, (x, idx, codebook, bias, y), g
@@ -725,6 +941,8 @@ def pasm_conv2d(
     gather: str = "take",
     interpret: Optional[bool] = None,
     mesh=None,
+    vmem_budget: Optional[int] = None,
+    gather_output: bool = True,
 ) -> jax.Array:
     """Implicit-GEMM conv on the fused-dequant kernel: ``(B, img) → (B, P, N)``.
 
@@ -741,7 +959,13 @@ def pasm_conv2d(
     ``data`` unchanged.  With ``mesh=`` the image batch
     shards over ``data`` (the batch must already divide the axis — the
     ``conv2d`` front-end pads uneven remainders) and N over ``model`` when
-    divisible; each shard derives its tile plan from the local shapes.
+    divisible; each shard derives its tile plan from the local shapes, and
+    ``gather_output=True`` (the default) all-gathers N inside the sharded
+    body so the returned activations are model-replicated — consecutive
+    sharded conv layers see no XLA resharding between their pallas_calls.
+    ``vmem_budget`` bounds the per-slab image footprint: images whose
+    double-buffered whole-image residency would blow the budget stream as
+    row-band slabs (:func:`conv_slab_plan`), bit-exact vs whole-image.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -756,25 +980,31 @@ def pasm_conv2d(
             return _shard_gemm(
                 mesh, t.shape[1],
                 lambda xl, il, cl: _pasm_conv(
-                    xl, il, cl, geom, t.packed, gather, interpret
+                    xl, il, cl, geom, t.packed, gather, interpret, vmem_budget
                 ),
                 (x, t.idx, t.codebook), x_rank=4, out_rank=3,
+                gather_output=gather_output,
             )
         b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
         return _shard_gemm(
             mesh, t.shape[1],
             lambda xl, il, cl, bl: _pasm_conv_ep(
-                xl, il, cl, bl, geom, t.packed, gather, interpret, relu
+                xl, il, cl, bl, geom, t.packed, gather, interpret, relu,
+                vmem_budget,
             ),
             (x, t.idx, t.codebook), x_rank=4, out_rank=3, bias=b,
+            gather_output=gather_output,
         )
     # geom.pool > 1 always rides the epilogue variant: its VJP owns the
     # pooled (argmax-routed) backward
     if bias is None and not relu and geom.pool == 1:
-        return _pasm_conv(x, t.idx, t.codebook, geom, t.packed, gather, interpret)
+        return _pasm_conv(
+            x, t.idx, t.codebook, geom, t.packed, gather, interpret, vmem_budget
+        )
     b = jnp.zeros((t.shape[1],), jnp.float32) if bias is None else bias
     return _pasm_conv_ep(
-        x, t.idx, t.codebook, b, geom, t.packed, gather, interpret, relu
+        x, t.idx, t.codebook, b, geom, t.packed, gather, interpret, relu,
+        vmem_budget,
     )
 
 
@@ -787,12 +1017,15 @@ def pas_conv2d(
     relu: bool = False,
     interpret: Optional[bool] = None,
     mesh=None,
+    vmem_budget: Optional[int] = None,
+    gather_output: bool = True,
 ) -> jax.Array:
     """Implicit-GEMM conv on the paper-faithful two-phase PAS formulation.
 
     Single dictionary, forward-only — mirrors :func:`pas_matmul` (and its
     ``mesh=`` sharding: batch over ``data``, N over ``model`` when
-    divisible, per-shard bin counters).
+    divisible, per-shard bin counters).  ``vmem_budget`` /
+    ``gather_output`` behave exactly as in :func:`pasm_conv2d`.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -809,21 +1042,23 @@ def pas_conv2d(
                 mesh, t.shape[1],
                 lambda xl, il, cl: _conv_fwd_impl(
                     xl, il, cl, geom=geom, packed=False, interpret=interpret,
-                    relu=relu, use_pas=True,
+                    relu=relu, use_pas=True, vmem_budget=vmem_budget,
                 ),
                 (x, idx, t.codebook), x_rank=4, out_rank=3,
+                gather_output=gather_output,
             )
         return _shard_gemm(
             mesh, t.shape[1],
             lambda xl, il, cl, bl: _conv_fwd_impl(
                 xl, il, cl, bl, geom=geom, packed=False, interpret=interpret,
-                relu=relu, use_pas=True,
+                relu=relu, use_pas=True, vmem_budget=vmem_budget,
             ),
             (x, idx, t.codebook), x_rank=4, out_rank=3, bias=bias,
+            gather_output=gather_output,
         )
     return _conv_fwd_impl(
         x, idx, t.codebook, bias, geom=geom, packed=False, interpret=interpret,
-        relu=relu, use_pas=True,
+        relu=relu, use_pas=True, vmem_budget=vmem_budget,
     )
 
 
@@ -868,6 +1103,7 @@ def conv_hbm_bytes(
     implicit: bool,
     act_bytes: int = 4,
     shards: tuple = (1, 1),
+    vmem_budget: Optional[int] = None,
 ) -> int:
     """Modeled HBM bytes of one conv layer on the PASM GEMM, tile-plan aware.
 
@@ -877,10 +1113,13 @@ def conv_hbm_bytes(
     traffic by up to ``ky·kx/stride²`` over the raw image.
 
     ``implicit=True``: the padded image streams once per reuse window (each
-    image block stays VMEM-resident across its whole tile loop), so the
-    activation term is just the padded image bytes.  Weight/codebook/output
-    terms follow the same padded-operand accounting as
-    :func:`pasm_hbm_bytes`.  The logical-shape (plan-free) counterpart is
+    image block or row-band slab stays VMEM-resident across its whole tile
+    loop), so the activation term is the slab plan's **fetched rows**
+    (:attr:`SlabPlan.fetched_rows` — the padded image bytes when the whole
+    image fits ``vmem_budget`` double-buffered, else ``n_slabs·(band+halo)``
+    rows, the halo re-fetched once per seam).  Weight/codebook/output terms
+    follow the same padded-operand accounting as :func:`pasm_hbm_bytes`.
+    The logical-shape (plan-free) counterpart is
     :func:`repro.core.hwmodel.conv_hbm_traffic`.
 
     ``shards=(n_data, n_model)`` models the **per-device** bytes of the
@@ -918,7 +1157,11 @@ def conv_hbm_bytes(
     if implicit:
         (plh, phh), (plw, phw) = geom.pad
         hp, wp = ih + plh + phh, iw + plw + phw
-        x_bytes = batch * geom.c_in * hp * wp * act_bytes
+        plan = conv_slab_plan(
+            geom, hp, wp, bm=bm, bn=bn, bk=bk, bins=B, packed=t.packed,
+            pas=False, has_bias=True, vmem_budget=vmem_budget,
+        )
+        x_bytes = batch * geom.c_in * plan.fetched_rows * wp * act_bytes
         out_bytes = batch * _round_up(geom.P_out, bm // pw) * Np * 4
     else:
         Mp = _round_up(batch * P, bm)

@@ -35,7 +35,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
-from repro.kernels.pasm_matmul import ConvGeom, patch_tile
+from repro.kernels.pasm_matmul import (
+    ConvGeom,
+    SlabPlan,
+    _image_specs,
+    _slab_image,
+    patch_tile,
+)
 from repro.kernels.ref import max_pool_rows
 
 __all__ = ["pas_matmul_kernel_call", "pas_conv_kernel_call"]
@@ -147,11 +153,16 @@ def pas_matmul_kernel_call(
 
 
 def _conv_kernel(
-    x_ref, idx_ref, cb_ref, *rest, geom: ConvGeom, bins: int, n_k: int,
-    relu: bool, bm: int, bk: int, gs: int, gs_pad: int,
+    x_ref, *refs, geom: ConvGeom, bins: int, n_k: int,
+    relu: bool, bm: int, bk: int, gs: int, gs_pad: int, slab=None,
 ):
     """Implicit-GEMM body: gather the patch tile instead of reading an
     explicit x block, then the same :func:`_pas_step`."""
+    if slab is not None and slab.halo_rows:
+        halo_ref, refs = refs[0], refs[1:]
+    else:
+        halo_ref = None
+    idx_ref, cb_ref, *rest = refs
     b_ref, o_ref, s_ref = rest if len(rest) == 3 else (None, *rest)
     k = pl.program_id(3)
 
@@ -159,9 +170,10 @@ def _conv_kernel(
     def _zero():
         s_ref[...] = jnp.zeros_like(s_ref)
 
+    img, row0 = _slab_image(x_ref, halo_ref, geom, slab)
     patch = patch_tile(
-        x_ref[0], pl.program_id(1) * bm, k * bk,
-        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+        img, pl.program_id(1) * bm, k * bk,
+        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad, row0=row0,
     )
     _pas_step(
         patch, idx_ref, cb_ref, b_ref, o_ref, s_ref,
@@ -182,6 +194,7 @@ def pas_conv_kernel_call(
     bn: int = 128,
     bk: int = 512,
     relu: bool = False,
+    slab: "SlabPlan | None" = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Implicit-GEMM conv on the paper-faithful two-phase formulation.
@@ -189,7 +202,9 @@ def pas_conv_kernel_call(
     ``x (B, img...)`` padded per ``geom`` · ``idx (Kp, Np)`` · ``codebook
     (1, B)`` → ``(B, Pp, Np) f32`` (real rows sliced by the caller; pooled
     when ``geom.pool > 1``, the fused max-pool epilogue riding the
-    post-pass).  Single dictionary only, like :func:`pas_matmul_kernel_call`.
+    post-pass).  ``slab`` streams the image as double-buffered row bands
+    exactly as in :func:`~repro.kernels.pasm_matmul.pasm_conv_kernel_call`.
+    Single dictionary only, like :func:`pas_matmul_kernel_call`.
     """
     B_img = x.shape[0]
     G, B = codebook.shape
@@ -202,14 +217,15 @@ def pas_conv_kernel_call(
     bmp = bm // pw  # stored (pooled) rows per block
     n_k = Kp // bk
     Pp = (geom.P_out + bmp - 1) // bmp * bmp
+    if slab is not None and slab.n_slabs == 1:
+        slab = None  # single slab ≡ the legacy whole-image schedule
 
-    img_block = (1,) + x.shape[1:]
-    in_specs = [
-        pl.BlockSpec(img_block, lambda b, i, j, k: (b, 0, 0, 0)),
+    img_specs, operands = _image_specs(x, geom, slab)
+    in_specs = img_specs + [
         pl.BlockSpec((bk, bn), lambda b, i, j, k: (k, j)),
         pl.BlockSpec((1, B), lambda b, i, j, k: (0, 0)),
     ]
-    operands = [x, idx, codebook]
+    operands = operands + [idx, codebook]
     if bias is not None:
         assert bias.shape == (1, Np), bias.shape
         in_specs.append(pl.BlockSpec((1, bn), lambda b, i, j, k: (0, j)))
@@ -218,7 +234,7 @@ def pas_conv_kernel_call(
     return pl.pallas_call(
         functools.partial(
             _conv_kernel, geom=geom, bins=B, n_k=n_k, relu=relu,
-            bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+            bm=bm, bk=bk, gs=gs, gs_pad=gs_pad, slab=slab,
         ),
         grid=(B_img, Pp // bmp, Np // bn, n_k),
         in_specs=in_specs,

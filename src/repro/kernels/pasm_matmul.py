@@ -47,7 +47,7 @@ from repro.kernels._compat import CompilerParams
 from repro.kernels.ref import max_pool_rows
 
 __all__ = ["pasm_matmul_kernel_call", "pasm_conv_kernel_call", "ConvGeom",
-           "patch_tile"]
+           "SlabPlan", "patch_tile"]
 
 
 class ConvGeom(NamedTuple):
@@ -107,6 +107,52 @@ class ConvGeom(NamedTuple):
         return self.P_out * self.pool * self.pool
 
 
+class SlabPlan(NamedTuple):
+    """Row-band slab pipeline plan for the implicit-GEMM conv engines.
+
+    Built by :func:`repro.kernels.ops.conv_slab_plan`; hashable so it rides
+    jit static args.  ``n_slabs == 1`` is the legacy whole-image-resident
+    schedule (one image block per grid step, no halo operand).  With
+    ``n_slabs > 1`` the padded image streams through VMEM as **row bands**:
+    the kernel's x operand becomes a ``band_rows``-row block whose index map
+    advances every ``blocks_per_slab`` output-row blocks, plus (when the
+    conv window overlaps band seams, ``ky > stride``) a second ``halo_rows``
+    block of the SAME array covering the first rows of the next band.
+    Pallas's built-in block pipeline then double-buffers the next band while
+    the current one computes — the slab DMA overlaps patch assembly with no
+    manual async copies, and revisited block indices are never refetched.
+
+    Invariants (enforced by the planner):
+
+    * ``band_rows = (blocks_per_slab·bmp // owp)·pool·stride`` with
+      ``(blocks_per_slab·bmp) % owp == 0`` — every slab covers whole pooled
+      output rows, so pool windows never straddle a slab seam and the band
+      index map stays a pure division of the row-block grid index.
+    * ``halo_rows`` is the smallest **divisor** of ``band_rows`` that is
+      ≥ ``max(ky - stride, 0)`` (0 when no overlap is needed): divisibility
+      makes the halo offset ``(slab+1)·band_rows`` block-aligned for the
+      halo BlockSpec without constraining ``band_rows`` itself.
+    * ``rows_total = n_slabs·band_rows + halo_rows`` is the row count the
+      kernel operand must carry — the wrapper slices/zero-pads the padded
+      image to it (sliced rows are provably never gathered; padded rows are
+      only touched by clamped M-pad rows, which replay valid windows).
+    """
+
+    n_slabs: int
+    blocks_per_slab: int
+    band_rows: int
+    halo_rows: int
+    rows_total: int
+
+    @property
+    def fetched_rows(self) -> int:
+        """Image rows HBM streams per image: ``rows_total`` when the whole
+        image is resident, else each slab refetches its halo."""
+        if self.n_slabs == 1:
+            return self.rows_total
+        return self.n_slabs * (self.band_rows + self.halo_rows)
+
+
 def _dequant_tile(idx_tile, cb_row, gather: str, dtype):
     """(bk, bn) uint8 indices + (B,) codebook → (bk, bn) weights."""
     B = cb_row.shape[0]
@@ -129,13 +175,18 @@ def _unpack_int4_tile(packed):
 
 
 def patch_tile(img, m0, q0, *, geom: ConvGeom, bm: int, bk: int, gs: int,
-               gs_pad: int):
+               gs_pad: int, row0=0):
     """Assemble one ``(bm, bk)`` im2col tile from the VMEM-resident image.
 
     ``img`` is a single padded image (``(H, W, C)`` when ``geom.nhwc`` else
     ``(C, H, W)``); rows are output pixels ``[m0, m0+bm)``, columns are
-    *padded* GEMM reduction positions ``[q0, q0+bk)``.  Each padded position
-    is unmapped to its logical ``(c, ky, kx)`` patch element:
+    *padded* GEMM reduction positions ``[q0, q0+bk)``.  ``row0`` rebases the
+    image-row coordinate when ``img`` is a slab (band+halo) rather than the
+    whole image: the gather reads ``img[iy - row0]`` where ``row0`` is the
+    slab's first image row (0 for the whole-image schedule — the slab
+    planner guarantees every row a slab's output blocks touch lands in
+    ``[row0, row0 + band_rows + halo_rows)``).  Each padded position is
+    unmapped to its logical ``(c, ky, kx)`` patch element:
 
       ``g = q // gs_pad`` picks the codebook group, ``r = q % gs_pad`` the
       row within it; rows with ``r >= gs`` are the tile-plan K-pad and rows
@@ -173,7 +224,7 @@ def patch_tile(img, m0, q0, *, geom: ConvGeom, bm: int, bk: int, gs: int,
         c = ql // (geom.ky * geom.kx)
         dy = (ql // geom.kx) % geom.ky
         dx = ql % geom.kx
-    iy = oy * geom.stride + dy  # (bm, bk) via broadcast
+    iy = oy * geom.stride + dy - row0  # (bm, bk) via broadcast
     ix = ox * geom.stride + dx
     c = jnp.broadcast_to(c, iy.shape)
     vals = img[iy, ix, c] if geom.nhwc else img[c, iy, ix]
@@ -322,12 +373,69 @@ def pasm_matmul_kernel_call(
     )(*operands)
 
 
+def _slab_image(x_ref, halo_ref, geom: ConvGeom, slab):
+    """Kernel-side slab assembly shared by both implicit conv bodies.
+
+    Whole-image schedule (``slab is None``): the block IS the padded image.
+    Slab schedule: concatenate the band block with its halo block (the first
+    ``halo_rows`` rows of the next band — same array, second operand) along
+    the image-row axis, and return the slab's first image row so
+    :func:`patch_tile` can rebase its gather coordinates.
+    """
+    img = x_ref[0]
+    if slab is None:
+        return img, 0
+    if halo_ref is not None:
+        img = jnp.concatenate([img, halo_ref[0]], axis=0 if geom.nhwc else 1)
+    row0 = (pl.program_id(1) // slab.blocks_per_slab) * slab.band_rows
+    return img, row0
+
+
+def _image_specs(x, geom: ConvGeom, slab):
+    """BlockSpecs (+ operands) for the implicit kernels' image input.
+
+    Whole-image: one ``(1, img...)`` block pinned at the origin.  Slabbed:
+    a ``band_rows`` row-band block whose index map advances every
+    ``blocks_per_slab`` row-blocks — Pallas's block pipeline prefetches the
+    next band while the current one computes and skips refetching unchanged
+    indices — plus, when ``halo_rows > 0``, the SAME array again as a
+    ``halo_rows``-row block at offset ``(slab+1)·band_rows`` (block-aligned
+    because ``halo_rows`` divides ``band_rows``).
+    """
+    if slab is None:
+        return [pl.BlockSpec((1,) + x.shape[1:],
+                             lambda b, i, j, k: (b, 0, 0, 0))], [x]
+    S, Hh, bps = slab.band_rows, slab.halo_rows, slab.blocks_per_slab
+    rows_ax = 1 if geom.nhwc else 2
+    assert x.shape[rows_ax] == slab.rows_total, (x.shape, slab)
+    if geom.nhwc:
+        band = (1, S, x.shape[2], x.shape[3])
+        bmap = lambda b, i, j, k: (b, i // bps, 0, 0)
+        halo = (1, Hh, x.shape[2], x.shape[3])
+        hmap = lambda b, i, j, k: (b, (i // bps + 1) * S // Hh, 0, 0)
+    else:
+        band = (1, x.shape[1], S, x.shape[3])
+        bmap = lambda b, i, j, k: (b, 0, i // bps, 0)
+        halo = (1, x.shape[1], Hh, x.shape[3])
+        hmap = lambda b, i, j, k: (b, 0, (i // bps + 1) * S // Hh, 0)
+    specs, ops = [pl.BlockSpec(band, bmap)], [x]
+    if Hh:
+        specs.append(pl.BlockSpec(halo, hmap))
+        ops.append(x)
+    return specs, ops
+
+
 def _conv_kernel(
-    x_ref, idx_ref, cb_ref, *rest, geom: ConvGeom, packed: bool, gather: str,
-    n_k: int, relu: bool, bm: int, bk: int, gs: int, gs_pad: int,
+    x_ref, *refs, geom: ConvGeom, packed: bool, gather: str,
+    n_k: int, relu: bool, bm: int, bk: int, gs: int, gs_pad: int, slab=None,
 ):
     """Implicit-GEMM body: gather the patch tile instead of reading an
     explicit x block, then the same :func:`_fused_dequant_step`."""
+    if slab is not None and slab.halo_rows:
+        halo_ref, refs = refs[0], refs[1:]
+    else:
+        halo_ref = None
+    idx_ref, cb_ref, *rest = refs
     if geom.pool > 1:
         acc_ref, rest = rest[-1], rest[:-1]
     else:
@@ -342,9 +450,10 @@ def _conv_kernel(
         else:
             o_ref[...] = jnp.zeros_like(o_ref)
 
+    img, row0 = _slab_image(x_ref, halo_ref, geom, slab)
     patch = patch_tile(
-        x_ref[0], pl.program_id(1) * bm, k * bk,
-        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+        img, pl.program_id(1) * bm, k * bk,
+        geom=geom, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad, row0=row0,
     )
     _fused_dequant_step(
         patch, idx_ref, cb_ref, b_ref, o_ref, acc_ref,
@@ -367,6 +476,7 @@ def pasm_conv_kernel_call(
     bk: int = 512,
     gather: str = "take",
     relu: bool = False,
+    slab: "SlabPlan | None" = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Implicit-GEMM conv pallas_call: the image IS the ``x`` operand.
@@ -374,14 +484,20 @@ def pasm_conv_kernel_call(
     ``x (B, img...)`` spatially padded per ``geom`` · ``idx (Kp or Kp//2, Np)``
     · ``codebook (G, B)`` → ``(B, Pp, Np) f32`` where ``Pp`` rounds
     ``geom.P_out`` up to the per-block *output* rows (real rows sliced off by
-    the caller).  One whole padded image is the per-grid-step ``x`` block —
-    resident in VMEM across the entire ``(i, j, k)`` tile loop of its batch
-    element, so HBM streams the image once per reuse window instead of
-    ``ky·kx/stride²``× as patch rows.  With ``geom.pool > 1`` the grid walks
-    window-major pre-pool rows (``bm`` per block) but stores only the pooled
-    ``bm/pool²`` rows — the fused conv/ReLU/max-pool stage.  Preconditions
-    (enforced by ops.py): ``gs_pad % bk == 0``, ``Np % bn == 0``,
-    ``bm % pool² == 0``, bias ``(1, Np)``.
+    the caller).  Default (``slab`` None or single-slab): one whole padded
+    image is the per-grid-step ``x`` block — resident in VMEM across the
+    entire ``(i, j, k)`` tile loop of its batch element, so HBM streams the
+    image once per reuse window instead of ``ky·kx/stride²``× as patch rows.
+    With a multi-slab :class:`SlabPlan` the image streams as double-buffered
+    row bands instead (x pre-sliced/padded to ``slab.rows_total`` rows by
+    ops.py), so images past the VMEM budget run implicit too — the k-tile
+    sequence is untouched, so slab output stays bit-exact.  With
+    ``geom.pool > 1`` the grid walks window-major pre-pool rows (``bm`` per
+    block) but stores only the pooled ``bm/pool²`` rows — the fused
+    conv/ReLU/max-pool stage (slabs cover whole pooled rows, so windows
+    never straddle a seam).  Preconditions (enforced by ops.py):
+    ``gs_pad % bk == 0``, ``Np % bn == 0``, ``bm % pool² == 0``, bias
+    ``(1, Np)``.
     """
     B_img = x.shape[0]
     G, B = codebook.shape
@@ -395,15 +511,16 @@ def pasm_conv_kernel_call(
     n_k = Kp // bk
     Pp = (geom.P_out + bmp - 1) // bmp * bmp
     blocks_per_group = gs_pad // bk
+    if slab is not None and slab.n_slabs == 1:
+        slab = None  # single slab ≡ the legacy whole-image schedule
 
-    img_block = (1,) + x.shape[1:]
     idx_block = (bk // 2, bn) if packed else (bk, bn)
-    in_specs = [
-        pl.BlockSpec(img_block, lambda b, i, j, k: (b, 0, 0, 0)),
+    img_specs, operands = _image_specs(x, geom, slab)
+    in_specs = img_specs + [
         pl.BlockSpec(idx_block, lambda b, i, j, k: (k, j)),
         pl.BlockSpec((1, B), lambda b, i, j, k: (k // blocks_per_group, 0)),
     ]
-    operands = [x, idx, codebook]
+    operands = operands + [idx, codebook]
     if bias is not None:
         assert bias.shape == (1, Np), bias.shape
         in_specs.append(pl.BlockSpec((1, bn), lambda b, i, j, k: (0, j)))
@@ -412,7 +529,7 @@ def pasm_conv_kernel_call(
     return pl.pallas_call(
         functools.partial(
             _conv_kernel, geom=geom, packed=packed, gather=gather, n_k=n_k,
-            relu=relu, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad,
+            relu=relu, bm=bm, bk=bk, gs=gs, gs_pad=gs_pad, slab=slab,
         ),
         grid=(B_img, Pp // bmp, Np // bn, n_k),
         in_specs=in_specs,

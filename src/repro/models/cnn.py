@@ -201,9 +201,15 @@ def forward(
 
     ``mesh=`` runs every conv layer sharded (``conv2d(mesh=)``: batch over
     ``data``, output channels over ``model``); the fused pool shards with
-    the images (windows live inside one image), the fallback and the dense
-    head ride the sharded activations under XLA's sharding propagation.
-    ``cfg.vmem_budget`` tunes the ``auto`` engine's implicit-GEMM budget.
+    the images on every Pallas engine (implicit windows live inside one
+    image; explicit window-major patch rows split per image in whole
+    windows), and each sharded conv all-gathers its ``model``-sharded
+    output channels inside the kernel's shard_map body (the epilogue-fused
+    collective) — consecutive conv layers hand over model-replicated
+    activations, so XLA inserts no resharding between their pallas_calls.
+    ``cfg.vmem_budget`` bounds the implicit engines' per-image VMEM
+    footprint: larger images stream through the kernel as row-band slabs,
+    bit-exact (DESIGN.md §3.3).
     """
     if cfg.impl not in _IMPLS:
         raise ValueError(

@@ -229,6 +229,12 @@ def conv_param_pspecs(params: Any, axis_sizes: dict) -> Any:
     ``c_out`` that does not divide ``model`` falls back to replicating that
     leaf, exactly the sharded dispatch's N-replicated rule, so placement
     never disagrees with compute.
+
+    Activations are NOT in this table: each sharded conv all-gathers its
+    ``model``-sharded output channels inside the kernel's shard_map body
+    (``gather_output=True``, the epilogue-fused collective), so conv
+    activations leave every layer model-replicated and ``data``-sharded on
+    the batch — the next layer's image operand needs no resharding.
     """
 
     def one(path, leaf):

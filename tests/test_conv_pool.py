@@ -172,11 +172,16 @@ def test_pool_dispatch_rules():
     assert not cv._pool_fusible("kernel_implicit", conv, 9, 9, 16, None)
     # no pool-aligned block plan (lcm(49, 8) = 392 > 256) falls back
     assert not cv._pool_fusible("kernel_implicit", conv, 60, 60, 7, None)
-    # a mesh keeps the fused pool implicit-only (patch-row shards could
-    # split windows on the explicit engines)
+    # a mesh blocks no engine any more: conv2d pads the batch to divide
+    # ``data`` and each image contributes P_rows (a pool² multiple) of
+    # window-major rows, so explicit patch-row shards land on whole windows
+    # too (PR-5 carve-out closed).  The predicate must not dereference the
+    # mesh — dispatch rules are shape-only.
     mesh = object()
     assert cv._pool_fusible("kernel_implicit", conv, 9, 9, 2, mesh)
-    assert not cv._pool_fusible("kernel", conv, 9, 9, 2, mesh)
+    assert cv._pool_fusible("kernel", conv, 9, 9, 2, mesh)
+    assert cv._pool_fusible("pas_kernel", conv, 9, 9, 2, mesh)
+    assert not cv._pool_fusible("einsum", conv, 9, 9, 2, mesh)
     # pool_impl validation + demanding the impossible raises
     imgs, kern, _ = _mk(conv, hw=(9, 9))
     shared = cv.ConvParams.quantize(kern, 16)

@@ -21,9 +21,16 @@ Covers the multi_layer_refactor acceptance criteria:
 * the AlexNet-style stack forward runs end-to-end under shard_map with the
   models/sharding.py pspecs (idx/bias really sharded — no replicated
   fallback), bit-exact vs the single-device stack.
-* the fused conv/ReLU/max-pool stage (PR 5) under a mesh: implicit engines
-  fuse and stay bit-exact (pool windows live inside ``data``-sharded
-  images), the explicit engine's ``auto`` falls back to ``reduce_window``.
+* the fused conv/ReLU/max-pool stage under a mesh: every Pallas engine
+  fuses now — implicit pool windows live inside ``data``-sharded images,
+  and explicit window-major patch rows split per image in whole pool
+  windows (the PR-5 explicit carve-out is closed).
+* slab streaming under a mesh: a per-shard image past ``vmem_budget``
+  streams as row-band slabs inside the shard_map body, bit-exact.
+* the epilogue-fused collective: with ``gather_output=True`` (the
+  default) the inter-layer all-gather rides inside the sharded kernel
+  body, so consecutive model-sharded conv layers show NO XLA
+  all-gather/resharding between their pallas_calls in the jaxpr.
 * ``models/sharding.py`` CNN pspec rules and ``ops.conv_hbm_bytes(shards=)``
   per-device traffic accounting.
 """
@@ -115,40 +122,127 @@ def test_sharded_bitexact_nhwc_stride():
 
 
 def test_sharded_fused_pool_bitexact():
-    """The fused conv/ReLU/max-pool stage under a mesh (PR 5): the implicit
-    engines fuse — pool windows live inside ``data``-sharded images — and
-    stay bit-exact vs the single-device fused call on (4, 1) and (2, 2)
-    meshes, uneven batch included; the explicit engine's ``auto`` dispatch
-    falls back to reduce_window (shard boundaries could split its patch
-    rows) and still matches, while demanding fusion there raises."""
+    """The fused conv/ReLU/max-pool stage under a mesh: EVERY Pallas engine
+    fuses now — implicit pool windows live inside ``data``-sharded images,
+    and the explicit engines' window-major patch rows split per image
+    (``(B/n_data)·P_rows``, always whole ``pool²`` windows — the PR-5
+    carve-out is closed) — all bit-exact vs the single-device fused call on
+    (4, 1) and (2, 2) meshes, uneven batch included."""
     conv = cv.Conv2D(k=3, c_in=5, c_out=8, stride=1, padding="same", relu=True)
     imgs, kern, bias = _mk(conv)
     p = cv.ConvParams.quantize(kern, 16, bias=bias)
-    want = cv.conv2d(imgs, p, conv, engine="kernel_implicit", interpret=True,
-                     pool=2, pool_impl="fused")
-    for mesh_shape in ((4, 1), (2, 2)):
-        mesh = _mesh(mesh_shape)
-        got = cv.conv2d(imgs, p, conv, engine="kernel_implicit",
-                        interpret=True, pool=2, mesh=mesh)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
-                                      err_msg=str(mesh_shape))
+    for engine in ("kernel_implicit", "kernel", "pas_kernel",
+                   "pas_kernel_implicit"):
+        want = cv.conv2d(imgs, p, conv, engine=engine, interpret=True,
+                         pool=2, pool_impl="fused")
+        for mesh_shape in ((4, 1), (2, 2)):
+            mesh = _mesh(mesh_shape)
+            got = cv.conv2d(imgs, p, conv, engine=engine, interpret=True,
+                            pool=2, pool_impl="fused", mesh=mesh)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"{engine}/{mesh_shape}",
+            )
     mesh = _mesh((4, 1))
     # uneven batch: compare against the padded single-device fused run (the
-    # sharded semantic, as in test_uneven_batch_remainder)
+    # sharded semantic, as in test_uneven_batch_remainder) — the padded
+    # batch divides data, so even the explicit engine's shard rows stay on
+    # whole pool windows
     imgs6 = imgs[:6]
-    got6 = cv.conv2d(imgs6, p, conv, engine="kernel_implicit", interpret=True,
-                     pool=2, mesh=mesh)
     padded = jnp.pad(imgs6, ((0, 2),) + ((0, 0),) * 3)
-    want6 = cv.conv2d(padded, p, conv, engine="kernel_implicit",
-                      interpret=True, pool=2)[:6]
-    np.testing.assert_array_equal(np.asarray(got6), np.asarray(want6))
-    # explicit engine under a mesh: auto falls back, bit-exact either way
-    got_e = cv.conv2d(imgs, p, conv, engine="kernel", interpret=True, pool=2,
-                      mesh=mesh)
-    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want))
-    with pytest.raises(ValueError, match="fused"):
-        cv.conv2d(imgs, p, conv, engine="kernel", interpret=True, pool=2,
-                  pool_impl="fused", mesh=mesh)
+    for engine in ("kernel_implicit", "kernel"):
+        got6 = cv.conv2d(imgs6, p, conv, engine=engine, interpret=True,
+                         pool=2, mesh=mesh)
+        want6 = cv.conv2d(padded, p, conv, engine=engine,
+                          interpret=True, pool=2)[:6]
+        np.testing.assert_array_equal(np.asarray(got6), np.asarray(want6),
+                                      err_msg=engine)
+
+
+# ---------------------------------------------------------------------------
+# slab streaming + the epilogue-fused collective under a mesh
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_slab_bitexact():
+    """A tight ``vmem_budget`` splits each shard's image into row-band
+    slabs INSIDE the shard_map body — bit-exact vs the un-slabbed
+    single-device call on both implicit engines and both mesh shapes
+    (slab planning sees per-shard operands, so sharding must not move
+    the k-tile sequence either)."""
+    conv = cv.Conv2D(k=3, c_in=4, c_out=8, stride=1, padding="same",
+                     relu=True)
+    imgs, kern, bias = _mk(conv, hw=(24, 16))
+    p = cv.ConvParams.quantize(kern, 16, bias=bias)
+    budget = 60_000  # n_slabs=3 at 24×16 (test_slab_bitexact_all_engines)
+    assert not cv._implicit_fits(conv, 24, 16, budget, params=p)
+    for engine in ("kernel_implicit", "pas_kernel_implicit"):
+        want = cv.conv2d(imgs, p, conv, engine=engine, interpret=True)
+        for mesh_shape in ((4, 1), (2, 2)):
+            got = cv.conv2d(imgs, p, conv, engine=engine, interpret=True,
+                            mesh=_mesh(mesh_shape), vmem_budget=budget)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"{engine}/{mesh_shape}",
+            )
+
+
+def _deep_names(jaxpr):
+    out = []
+    for e in jaxpr.eqns:
+        out.append(e.primitive.name)
+        for v in e.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(sub, "eqns"):
+                    out += _deep_names(sub)
+                elif hasattr(sub, "jaxpr"):
+                    out += _deep_names(sub.jaxpr)
+    return out
+
+
+def test_fused_collective_no_resharding_between_layers():
+    """Acceptance: with model-sharded c_out, the inter-layer all-gather
+    rides INSIDE each conv's shard_map body (the kernel epilogue), so the
+    stack jaxpr shows zero collectives between consecutive conv
+    pallas_calls — activations leave every layer model-replicated and XLA
+    has nothing to reshard."""
+    import dataclasses as dc
+
+    from repro.configs import get_cnn_config
+    from repro.models import cnn
+
+    mesh = _mesh((4, 2))
+    cfg = dc.replace(get_cnn_config("alexnet", smoke=True),
+                     mesh_shape=(4, 2), impl="kernel_implicit")
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    qpm = cnn.quantize(params, cfg, mesh=mesh)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (8, *cfg.in_chw))
+    jx = jax.make_jaxpr(
+        lambda x: cnn.forward(qpm, x, cfg, interpret=True, mesh=mesh))(imgs)
+
+    top, bodies = [], []
+
+    def walk(jaxpr):
+        for e in jaxpr.eqns:
+            if e.primitive.name == "shard_map":
+                bodies.append(_deep_names(e.params["jaxpr"]))
+                continue
+            top.append(e.primitive.name)
+            for v in e.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(sub, "eqns"):
+                        walk(sub)
+                    elif hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr)
+
+    walk(jx.jaxpr)
+    conv_bodies = [b for b in bodies if "pallas_call" in b]
+    assert len(conv_bodies) == len(cfg.layers)
+    for b in conv_bodies:  # ONE kernel + ONE epilogue gather per layer
+        assert b.count("pallas_call") == 1 and b.count("all_gather") == 1
+    collectives = {"all_gather", "psum", "all_to_all", "ppermute",
+                   "reduce_scatter"}
+    assert not [n for n in top if n in collectives]  # nothing between layers
 
 
 # ---------------------------------------------------------------------------
