@@ -1,0 +1,316 @@
+"""Measured QAT training trajectory + chaos drill (BENCH_train.json).
+
+The training-side counterpart of serve_bench's fault rows (DESIGN.md §4):
+the AlexNet-smoke QAT loop (STE through per-layer conv dictionaries,
+train/step.py::make_cnn_train_step) runs on the step-addressed synthetic
+image stream and emits:
+
+- ``train.qat.alexnet_smoke`` — the fault-free reference: median step wall
+  time plus the held-out eval loss before/after training (``loss_drop`` —
+  scored on one fixed batch, since per-step training losses are too noisy
+  to compare), the row CI tracks across PRs;
+- ``train.fault.resume_bitexact`` — an injected ``crash`` (post-update,
+  pre-checkpoint — the worst kill point) under ``ft.Supervisor`` with the
+  CRC-verified checkpoint manager: the merged per-step losses and the final
+  params of the crashed-and-resumed run are compared **bit-exactly**
+  (``np.array_equal``) against the uninterrupted reference — the row stamps
+  ``resume_bitexact`` and ci.sh gates on it;
+- ``train.fault.ckpt_fallback`` — the newest checkpoint's shard is
+  byte-flipped on disk; ``restore_latest`` must *fall back* to the previous
+  step that passes CRC (stamps ``fallback_ok``/``from_step``/``to_step`` —
+  the second ci.sh gate);
+- ``train.qat.faults`` (``--faults``) — the full seeded
+  ``TrainFaultPlan.sample`` chaos drill (nan/spike/ckpt-io/data-io/crash/
+  slow) under the supervisor: counts guard skips, checkpoint-save failures,
+  absorbed data retries and restarts, asserting the run still completes.
+
+``--devices N`` reruns everything on N host-platform fake devices with the
+conv stack sharded over a ``("data", "model")`` mesh (``(N//2, 2)``) — the
+flag is peeked off ``sys.argv`` before jax initializes.  All faults are
+virtual (seeded, step-keyed, zero wall clock), so rows are reproducible.
+
+    PYTHONPATH=src python benchmarks/train_bench.py [--smoke] [--json [PATH]]
+                                                    [--faults] [--devices N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))
+
+
+def _peek_devices(argv):
+    """--devices N / --devices=N, read before argparse (and before jax)."""
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+_dev_arg = _peek_devices(sys.argv)
+if _dev_arg is not None:
+    try:
+        _n = int(_dev_arg)
+    except ValueError:
+        _n = 0
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}"
+        )
+
+import jax  # noqa: E402  (after the XLA_FLAGS pin)
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import bench_row  # noqa: E402
+from repro import ft  # noqa: E402
+from repro.ckpt import checkpoint as ckpt  # noqa: E402
+from repro.configs.alexnet_conv import smoke_config  # noqa: E402
+from repro.data.pipeline import DataConfig, synthetic_image_batch  # noqa: E402
+from repro.launch.mesh import make_conv_mesh  # noqa: E402
+from repro.models import cnn  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train import step as step_mod  # noqa: E402
+from repro.train.faults import TrainFaultPlan, TrainFaultSpec  # noqa: E402
+from repro.train.loop import run_loop  # noqa: E402
+
+_RECORDS: list = []
+
+
+def record(row: dict) -> None:
+    _RECORDS.append(row)
+    extras = {k: v for k, v in row.items()
+              if k not in ("name", "us_per_call", "hbm_bytes", "derived",
+                           "devices", "mesh_shape", "engine", "pool")}
+    print(f"{row['name']},{row['us_per_call']:.2f},,{extras}")
+
+
+def _init(cfg, ocfg, seed: int, mesh):
+    params = cnn.init_params(cfg, jax.random.PRNGKey(seed))
+    tree = {"params": params, "codebooks": cnn.qat_codebooks(params, cfg)}
+    opt_state = opt.init_opt_state(tree)
+    train_step = jax.jit(
+        step_mod.make_cnn_train_step(cfg, ocfg, mesh=mesh)
+    )
+    return tree, opt_state, train_step
+
+
+def _batch_fn(dcfg, cfg):
+    return lambda s: synthetic_image_batch(
+        dcfg, s, chw=cfg.in_chw, classes=cfg.classes, noise=0.1
+    )
+
+
+def _median_us(step_times: dict) -> float:
+    ts = sorted(step_times.values())
+    return ts[len(ts) // 2] * 1e6 if ts else 0.0
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="fewer steps (CI)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=None)
+    ap.add_argument("--faults", action="store_true",
+                    help="also run the full sampled chaos drill")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fake host devices; >1 shards the conv stack")
+    ap.add_argument("--json", nargs="?", const="BENCH_train.json", default=None,
+                    metavar="PATH", help="write rows (default BENCH_train.json)")
+    args = ap.parse_args(argv)
+
+    steps = args.steps or (12 if args.smoke else 24)
+    ckpt_every = args.ckpt_every or max(steps // 4, 1)
+    cfg = smoke_config()
+    # lr/noise picked so the held-out eval loss FALLS within a smoke run
+    # (weight decay off: this tiny stack is under- not over-parameterised)
+    ocfg = opt.AdamWConfig(lr=3e-4, weight_decay=0.0, total_steps=steps,
+                           warmup_steps=2)
+    dcfg = DataConfig(seed=args.seed, vocab=2, seq_len=1, global_batch=args.batch)
+    mesh = None
+    mesh_shape = None
+    if args.devices > 1:
+        if args.devices != len(jax.devices()):
+            raise SystemExit(
+                f"--devices {args.devices} but {len(jax.devices())} visible "
+                f"(the flag must be first on the command line? it is peeked "
+                f"pre-import — check XLA_FLAGS)"
+            )
+        mesh_shape = (args.devices // 2, 2) if args.devices % 2 == 0 else (args.devices, 1)
+        mesh = make_conv_mesh(mesh_shape)
+    batch_fn = _batch_fn(dcfg, cfg)
+    tag_mesh = dict(mesh_shape=mesh_shape)
+
+    # ---- fault-free reference trajectory --------------------------------
+    # progress is scored on a FIXED held-out batch (per-step training losses
+    # are one-noisy-batch-each — too high-variance to compare across runs)
+    eval_batch = batch_fn(10**6)
+    eval_loss = jax.jit(
+        lambda t: step_mod.cnn_qat_loss(t, eval_batch, cfg, mesh=mesh)
+    )
+    tree, opt_state, train_step = _init(cfg, ocfg, args.seed, mesh)
+    loss_first = float(eval_loss(tree))
+    ref = run_loop(train_step, (tree, opt_state), batch_fn, steps=steps)
+    loss_last = float(eval_loss(ref.state[0]))
+    record(bench_row(
+        "train.qat.alexnet_smoke", _median_us(ref.step_times), **tag_mesh,
+        steps=steps, batch=args.batch, loss_first=loss_first,
+        loss_last=loss_last, loss_drop=loss_first - loss_last,
+    ))
+    print(f"[train_bench] fault-free: eval loss {loss_first:.4f} -> "
+          f"{loss_last:.4f} over {steps} steps", file=sys.stderr)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # ---- crash + restore: bit-exact resume --------------------------
+        crash_step = steps - max(steps // 3, 2)  # past the first checkpoint
+        plan = TrainFaultPlan([TrainFaultSpec("crash", step=crash_step)])
+        mgr = ckpt.CheckpointManager(Path(tmp) / "resume", keep=3)
+        tree, opt_state, train_step = _init(cfg, ocfg, args.seed, mesh)
+        losses: dict = {}
+        times: dict = {}
+        state_box = {"state": (tree, opt_state), "restarts_resumed_at": []}
+        sup = ft.Supervisor(ft.RestartPolicy(max_restarts=2, backoff_s=0.0),
+                            sleep=lambda _d: None)
+
+        def loop(resume_step):
+            t, o = state_box["state"]
+            start = 0
+            if ckpt.latest_step(mgr.dir) is not None:
+                (t, o), man = mgr.restore_latest((t, o))
+                start = man["step"]
+                state_box["restarts_resumed_at"].append(start)
+            res = run_loop(
+                train_step, (t, o), batch_fn, steps=steps, start_step=start,
+                mgr=mgr, ckpt_every=ckpt_every, faults=plan,
+                losses=losses, step_times=times,
+            )
+            state_box["state"] = res.state
+            return res.last_step
+
+        sup.run(loop)
+        bitexact = (
+            set(losses) == set(ref.losses)
+            and all(losses[s] == ref.losses[s] for s in ref.losses)
+            and _trees_equal(state_box["state"][0], ref.state[0])
+        )
+        record(bench_row(
+            "train.fault.resume_bitexact", _median_us(times), **tag_mesh,
+            steps=steps, crash_step=crash_step, restarts=sup.restarts,
+            resumed_at=state_box["restarts_resumed_at"],
+            resume_bitexact=bool(bitexact),
+        ))
+        print(f"[train_bench] crash@{crash_step}: restarts={sup.restarts} "
+              f"resumed_at={state_box['restarts_resumed_at']} "
+              f"bitexact={bitexact}", file=sys.stderr)
+
+        # ---- corrupt-latest checkpoint: CRC fallback --------------------
+        fb_steps = ckpt.complete_steps(mgr.dir)
+        from_step = fb_steps[-1]
+        shard = Path(mgr.dir) / f"step_{from_step}" / "shard_0.npz"
+        raw = bytearray(shard.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        shard.write_bytes(bytes(raw))
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")
+            try:
+                (_t, _o), man = mgr.restore_latest((tree, opt_state))
+                to_step = man["step"]
+                fallback_ok = to_step == fb_steps[-2] if len(fb_steps) > 1 else False
+            except ckpt.CheckpointCorruptError:
+                to_step, fallback_ok = None, False
+        record(bench_row(
+            "train.fault.ckpt_fallback", 0.0, **tag_mesh,
+            from_step=from_step, to_step=to_step, fallback_ok=bool(fallback_ok),
+            on_disk_steps=fb_steps,
+        ))
+        print(f"[train_bench] corrupt step_{from_step}: fell back to "
+              f"step_{to_step} ok={fallback_ok}", file=sys.stderr)
+
+        # ---- full sampled chaos drill -----------------------------------
+        if args.faults:
+            plan = TrainFaultPlan.sample(
+                args.seed, n_steps=steps, n_slow=1, slow_delay_s=0.05,
+            )
+            mgr = ckpt.CheckpointManager(Path(tmp) / "chaos", keep=3)
+            tree, opt_state, train_step = _init(cfg, ocfg, args.seed, mesh)
+            losses, times = {}, {}
+            state_box = {"state": (tree, opt_state)}
+            counters = {"skipped": 0, "ckpt_failures": 0}
+            sup = ft.Supervisor(ft.RestartPolicy(max_restarts=3, backoff_s=0.0),
+                                sleep=lambda _d: None)
+
+            def chaos_loop(resume_step):
+                t, o = state_box["state"]
+                start = 0
+                if ckpt.latest_step(mgr.dir) is not None:
+                    (t, o), man = mgr.restore_latest((t, o))
+                    start = man["step"]
+                res = run_loop(
+                    train_step, (t, o), batch_fn, steps=steps,
+                    start_step=start, mgr=mgr, ckpt_every=ckpt_every,
+                    faults=plan, losses=losses, step_times=times,
+                )
+                state_box["state"] = res.state
+                counters["skipped"] += res.n_skipped
+                counters["ckpt_failures"] += res.n_ckpt_failures
+                return res.last_step
+
+            import warnings as _w2
+            with _w2.catch_warnings():
+                _w2.simplefilter("ignore")
+                last = sup.run(chaos_loop)
+            assert last == steps, (last, steps)
+            record(bench_row(
+                "train.qat.faults", _median_us(times), **tag_mesh,
+                steps=steps, n_injections=len(plan.fired),
+                fired=[f[0] for f in plan.fired],
+                n_skipped=counters["skipped"],
+                n_ckpt_failures=counters["ckpt_failures"],
+                restarts=sup.restarts,
+                loss_last=losses[steps - 1],
+            ))
+            print(f"[train_bench] chaos: {len(plan.fired)} injections "
+                  f"({[f[0] for f in plan.fired]}), {counters['skipped']} "
+                  f"guard skips, {counters['ckpt_failures']} ckpt failures, "
+                  f"{sup.restarts} restarts — completed", file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "benchmark": "train",
+            "smoke": bool(args.smoke),
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "devices": len(jax.devices()) if mesh is not None else 1,
+            "seed": args.seed,
+            "steps": steps,
+            "faults": bool(args.faults),
+            "records": _RECORDS,
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {len(_RECORDS)} records to {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

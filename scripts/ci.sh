@@ -26,7 +26,14 @@
 # deadlines, backpressure, numeric quarantine, retry/degradation) on one
 # device AND on 8 fake devices, the fault-replay gate (serve_bench --faults:
 # the chaos replay must drain with zero stuck requests and >= 95% of
-# non-faulted SLO'd requests meeting their SLO), and the sharding gate:
+# non-faulted SLO'd requests meeting their SLO), the TRAINING chaos suite
+# (seeded TrainFaultPlan: fused non-finite guard, CRC/fsync checkpoint
+# integrity, bit-exact crash-resume, supervisor failure classification,
+# plus the checkpoint-roundtrip property suite) on one device AND on 8 fake
+# devices, the train_bench smoke + gates (BENCH_train.json: the crash-resume
+# row must stamp resume_bitexact=true, the corrupt-latest row
+# fallback_ok=true, and both the fault-free trajectory and the full
+# chaos-drill rows must exist with finite losses), and the sharding gate:
 # --devices 8 per-device modeled
 # HBM bytes on AlexNet conv1 strictly below the single-device figure for
 # the same global batch.
@@ -198,6 +205,46 @@ assert slo["slo_frac"] >= 0.95, (
 print(f"fault replay drained (0 stuck), SLO {slo['slo_met']}/"
       f"{slo['slo_met'] + slo['slo_missed']} met "
       f"({100 * slo['slo_frac']:.0f}% >= 95%) OK")
+PY
+
+echo "== train: fault-tolerance chaos suite (single device) =="
+python -m pytest -q tests/test_train_faults.py tests/test_ckpt_prop.py
+
+echo "== train: fault-tolerance chaos suite (8 fake devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -q tests/test_train_faults.py
+
+echo "== smoke: QAT train loop + chaos drill (BENCH_train.json gates) =="
+python benchmarks/train_bench.py --smoke --faults --json
+test -s BENCH_train.json && echo "BENCH_train.json written"
+python - <<'PY'
+import json, math
+
+rows = {r["name"]: r for r in json.load(open("BENCH_train.json"))["records"]}
+# the fault-free trajectory row exists with a real step time and eval losses
+ref = rows["train.qat.alexnet_smoke"]
+assert ref["us_per_call"] > 0, ref
+assert math.isfinite(ref["loss_first"]) and math.isfinite(ref["loss_last"]), ref
+# crash-resume gate: the merged per-step losses and final params of the
+# crashed-and-restored run must be BIT-exact vs the uninterrupted reference
+res = rows["train.fault.resume_bitexact"]
+assert res["resume_bitexact"] is True, res
+assert res["restarts"] >= 1 and res["resumed_at"], res
+# corrupt-latest gate: a byte-flipped newest checkpoint must fall back to
+# the newest older step that passes CRC
+fb = rows["train.fault.ckpt_fallback"]
+assert fb["fallback_ok"] is True and fb["to_step"] is not None, fb
+assert fb["to_step"] < fb["from_step"], fb
+# the full chaos drill fired its injections, the guard skipped the poisoned
+# steps, and the run still reached the final step with a finite loss
+chaos = rows["train.qat.faults"]
+assert chaos["n_injections"] >= 4 and chaos["n_skipped"] >= 1, chaos
+assert math.isfinite(chaos["loss_last"]), chaos
+print(f"train gates OK: eval loss {ref['loss_first']:.3f}->{ref['loss_last']:.3f}, "
+      f"resume bit-exact after crash@{res['crash_step']} "
+      f"({res['restarts']} restart), ckpt fallback step_{fb['from_step']}"
+      f"->step_{fb['to_step']}, chaos drill {chaos['n_injections']} injections/"
+      f"{chaos['n_skipped']} guard skips/{chaos['restarts']} restarts")
 PY
 
 echo "== smoke: per-device HBM bytes under --devices 8 (AlexNet conv1) =="

@@ -1,9 +1,18 @@
-"""Sharded, atomic, resumable checkpoints (no external deps).
+"""Sharded, atomic, resumable checkpoints with integrity (no external deps).
 
 Layout:  <dir>/step_<N>/shard_<i>.npz + manifest.json
-* **atomic**: shards + manifest land in a tmp dir, renamed into place last —
-  a crash mid-write never corrupts the latest checkpoint (restore scans for
-  the newest *complete* manifest).
+* **atomic**: shards + manifest land in a tmp dir, **fsync'd before the
+  rename** (file contents, then the tmp dir, then the parent dir after the
+  rename) so a crash — or a power cut — mid-write never corrupts the latest
+  checkpoint (restore scans for the newest *complete* manifest).
+* **integrity**: the manifest records a CRC32 per array; restore re-hashes
+  every array it loads (``verify=True``) and raises
+  :class:`CheckpointCorruptError` on any mismatch, unreadable shard, or
+  truncated npz.  ``restore(..., fallback=True)`` (what
+  :meth:`CheckpointManager.restore_latest` uses) then scans *backwards* to
+  the newest checkpoint that verifies — a byte-flipped or torn latest
+  checkpoint costs ``ckpt_every`` steps of recompute, never the run
+  (DESIGN.md §4).
 * **elastic**: arrays are saved logically (de-sharded per host in this
   single-process container; on a fleet each host saves its addressable
   shards and the manifest records the mesh) and restored onto any mesh —
@@ -13,23 +22,43 @@ Layout:  <dir>/step_<N>/shard_<i>.npz + manifest.json
   any exception instead of letting it vanish in the daemon thread; it is
   re-raised from :meth:`CheckpointManager.wait` (and therefore from the
   next ``save()``, which waits first) — a failed background write is a
-  loud failure, never a silently missing checkpoint.
+  loud failure, never a silently missing checkpoint.  The manager's GC
+  never touches the directory an in-flight background write is about to
+  rename into place (``_pending_step``).
 """
 from __future__ import annotations
 
 import json
+import os
 import shutil
 import threading
 import time
+import warnings
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager", "BackgroundWriter"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "complete_steps",
+    "CheckpointCorruptError",
+    "CheckpointManager",
+    "BackgroundWriter",
+]
 
 _SEP = "||"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory exists and looks complete but fails integrity:
+    CRC mismatch, unreadable/truncated shard, or a key the manifest promised
+    is missing.  Distinct from ``FileNotFoundError`` (nothing to restore)
+    and ``ValueError`` (template/shape disagreement)."""
 
 
 class BackgroundWriter(threading.Thread):
@@ -71,6 +100,31 @@ def _flatten(tree: Any) -> dict:
     return out
 
 
+def _crc(a: np.ndarray) -> int:
+    """CRC32 over the array's raw bytes (C-order) — the manifest integrity
+    record; cheap (~GB/s) next to the npz deflate that follows it."""
+    return int(zlib.crc32(np.ascontiguousarray(a).tobytes()))
+
+
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: Path) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # platforms without O_RDONLY dir opens — best effort
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(
     directory: str | Path,
     step: int,
@@ -93,14 +147,22 @@ def save(
             "step": step,
             "n_shards": 1,
             "keys": sorted(arrays.keys()),
+            "crc32": {k: _crc(a) for k, a in arrays.items()},
             "time": time.time(),
             "extra": extra or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # durability before visibility: flush shard + manifest + the tmp dir
+        # entries to stable storage, THEN rename, THEN flush the parent dir —
+        # a crash at any point leaves either no step_<N> or a complete one
+        _fsync_file(tmp / "shard_0.npz")
+        _fsync_file(tmp / "manifest.json")
+        _fsync_dir(tmp)
         final = directory / f"step_{step}"
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)
+        _fsync_dir(directory)
 
     if background:
         t = BackgroundWriter(_write)
@@ -110,11 +172,12 @@ def save(
     return None
 
 
-def latest_step(directory: str | Path) -> Optional[int]:
-    """Newest step with a *complete* manifest (crash-safe restore point)."""
+def complete_steps(directory: str | Path) -> list:
+    """All steps with a *complete* manifest, ascending (crash-safe restore
+    candidates; validity is checked at restore time — see ``fallback``)."""
     directory = Path(directory)
     if not directory.exists():
-        return None
+        return []
     steps = []
     for p in directory.glob("step_*"):
         if (p / "manifest.json").exists():
@@ -122,26 +185,51 @@ def latest_step(directory: str | Path) -> Optional[int]:
                 steps.append(int(p.name.split("_")[1]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore(directory: str | Path, template: Any, step: Optional[int] = None) -> tuple[Any, dict]:
-    """Restore into the structure of ``template`` (shapes/dtypes validated).
+def latest_step(directory: str | Path) -> Optional[int]:
+    """Newest step with a *complete* manifest (crash-safe restore point)."""
+    steps = complete_steps(directory)
+    return steps[-1] if steps else None
 
-    Elastic: the on-disk arrays are logical (unsharded); putting them back
-    on a different mesh/host count is the caller's in_shardings' job.
-    """
-    directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint under {directory}")
-    d = directory / f"step_{step}"
-    manifest = json.loads((d / "manifest.json").read_text())
+
+def _load_arrays(d: Path, manifest: dict, *, verify: bool) -> dict:
     arrays = {}
     for i in range(manifest["n_shards"]):
-        with np.load(d / f"shard_{i}.npz") as z:
-            arrays.update({k: z[k] for k in z.files})
+        shard = d / f"shard_{i}.npz"
+        try:
+            with np.load(shard) as z:
+                arrays.update({k: z[k] for k in z.files})
+        except FileNotFoundError as e:
+            raise CheckpointCorruptError(f"{d.name}: missing {shard.name}") from e
+        except Exception as e:  # zipfile.BadZipFile, truncated deflate, ...
+            raise CheckpointCorruptError(
+                f"{d.name}: unreadable {shard.name} ({type(e).__name__}: {e})"
+            ) from e
+    crcs = manifest.get("crc32")
+    if verify and crcs is not None:
+        for key, want in crcs.items():
+            if key not in arrays:
+                raise CheckpointCorruptError(f"{d.name}: manifest key {key} not in shards")
+            got = _crc(arrays[key])
+            if got != int(want):
+                raise CheckpointCorruptError(
+                    f"{d.name}: CRC mismatch on {key} "
+                    f"(manifest {int(want)}, shard {got})"
+                )
+    return arrays
+
+
+def _restore_one(directory: Path, template: Any, step: int, *, verify: bool):
+    d = directory / f"step_{step}"
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except FileNotFoundError:
+        raise FileNotFoundError(f"no checkpoint at {d}")
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(f"{d.name}: unreadable manifest ({e})") from e
+    arrays = _load_arrays(d, manifest, verify=verify)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
@@ -156,16 +244,64 @@ def restore(directory: str | Path, template: Any, step: Optional[int] = None) ->
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 
+def restore(
+    directory: str | Path,
+    template: Any,
+    step: Optional[int] = None,
+    *,
+    verify: bool = True,
+    fallback: bool = False,
+) -> tuple[Any, dict]:
+    """Restore into the structure of ``template`` (shapes/dtypes validated).
+
+    ``verify=True`` re-hashes every array against the manifest CRC32s and
+    raises :class:`CheckpointCorruptError` on mismatch or unreadable shards
+    (manifests predating the CRC field skip verification).  With
+    ``fallback=True`` and no explicit ``step``, a corrupt newest checkpoint
+    is *warned about and skipped*: the scan walks backwards to the newest
+    step that verifies, raising only when none does.
+
+    Elastic: the on-disk arrays are logical (unsharded); putting them back
+    on a different mesh/host count is the caller's in_shardings' job.
+    """
+    directory = Path(directory)
+    if step is not None:
+        return _restore_one(directory, template, step, verify=verify)
+    steps = complete_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    last_err: Optional[CheckpointCorruptError] = None
+    for s in reversed(steps):
+        try:
+            return _restore_one(directory, template, s, verify=verify)
+        except CheckpointCorruptError as e:
+            if not fallback:
+                raise
+            warnings.warn(
+                f"checkpoint step_{s} failed integrity, falling back to the "
+                f"previous checkpoint: {e}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            last_err = e
+    raise CheckpointCorruptError(
+        f"no checkpoint under {directory} passes integrity "
+        f"(tried steps {list(reversed(steps))})"
+    ) from last_err
+
+
 class CheckpointManager:
-    """Keep-last-k rotation + background writes + auto-resume."""
+    """Keep-last-k rotation + background writes + auto-resume with fallback."""
 
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
         self.keep = keep
         self._pending: Optional[BackgroundWriter] = None
+        self._pending_step: Optional[int] = None
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
         self.wait()  # surfaces the PREVIOUS write's failure before starting
+        self._pending_step = step
         self._pending = save(self.dir, step, tree, extra=extra, background=True)
         self._gc()
 
@@ -175,17 +311,22 @@ class CheckpointManager:
         if self._pending is not None:
             t, self._pending = self._pending, None
             t.join()
+            self._pending_step = None
             t.check()
 
     def _gc(self):
-        steps = sorted(
-            int(p.name.split("_")[1])
-            for p in self.dir.glob("step_*")
-            if (p / "manifest.json").exists()
-        )
-        for s in steps[: -self.keep]:
+        """Delete all but the newest ``keep`` complete checkpoints — but
+        NEVER the directory the in-flight background write is about to
+        rename into place (after a fallback-restore the loop re-saves an
+        *older* step than stale on-disk ones, which the keep-last-k sort
+        would otherwise select for deletion mid-write — a silently lost
+        checkpoint; regression in tests/test_infra.py)."""
+        steps = complete_steps(self.dir)
+        for s in steps[: -self.keep] if self.keep > 0 else steps:
+            if s == self._pending_step:
+                continue
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
 
-    def restore_latest(self, template: Any):
+    def restore_latest(self, template: Any, *, fallback: bool = True):
         self.wait()
-        return restore(self.dir, template)
+        return restore(self.dir, template, fallback=fallback)

@@ -5,13 +5,22 @@ so restarts resume mid-epoch without replay logs, and elastic re-sharding
 (N → M hosts) re-partitions the same global stream (fault tolerance,
 DESIGN.md §4).  The synthetic stream is a Zipf-ish token model with enough
 sequential structure that a ~100M model's loss visibly falls within a few
-hundred steps (examples/train_lm.py).
+hundred steps (examples/train_lm.py); :func:`synthetic_image_batch` is the
+same contract for the CNN QAT loop (images + labels keyed to the step).
+
+Input validation is typed (:class:`DataValidationError`): an indivisible
+``global_batch % n_shards`` or an empty/truncated token file fails loudly at
+construction, not as a silent shape surprise mid-run; transient ``OSError``
+during a file-backed batch read retries with capped exponential backoff
+(:func:`retry_io`) before surfacing.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from pathlib import Path
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +28,49 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeSpec
 
-__all__ = ["DataConfig", "synthetic_batch", "batch_iterator", "TokenFileDataset", "write_token_file"]
+__all__ = [
+    "DataConfig",
+    "DataValidationError",
+    "retry_io",
+    "synthetic_batch",
+    "synthetic_image_batch",
+    "batch_iterator",
+    "TokenFileDataset",
+    "write_token_file",
+]
+
+
+class DataValidationError(ValueError):
+    """Typed rejection of an invalid data configuration or source: an
+    indivisible shard split, or an empty/truncated token file."""
+
+
+def retry_io(
+    fn: Callable,
+    *,
+    retries: int = 3,
+    backoff_s: float = 0.05,
+    cap_s: float = 1.0,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Run ``fn()`` retrying transient ``OSError`` s with capped exponential
+    backoff (``backoff_s · 2^(attempt-1)``, capped at ``cap_s``).  The final
+    attempt's exception surfaces unwrapped.  ``sleep`` is injectable so
+    tests (and the chaos suite) pin the schedule with zero wall clock."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except OSError as e:
+            if attempt >= retries:
+                raise
+            delay = min(backoff_s * (2 ** attempt), cap_s)
+            warnings.warn(
+                f"transient I/O error (attempt {attempt + 1}/{retries + 1}), "
+                f"retrying in {delay:.3g}s: {e}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            sleep(delay)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +82,23 @@ class DataConfig:
     shard_index: int = 0
     n_shards: int = 1
     path: Optional[str] = None  # file-backed when set
+
+    def __post_init__(self):
+        if self.n_shards < 1 or self.global_batch < 1:
+            raise DataValidationError(
+                f"need n_shards >= 1 and global_batch >= 1, got "
+                f"n_shards={self.n_shards} global_batch={self.global_batch}"
+            )
+        if self.global_batch % self.n_shards:
+            raise DataValidationError(
+                f"global_batch={self.global_batch} must divide evenly over "
+                f"n_shards={self.n_shards} (per-shard batch would be ragged)"
+            )
+        if not (0 <= self.shard_index < self.n_shards):
+            raise DataValidationError(
+                f"shard_index={self.shard_index} out of range for "
+                f"n_shards={self.n_shards}"
+            )
 
 
 def _markov_tokens(key, batch, seq_len, vocab):
@@ -47,33 +115,97 @@ def _markov_tokens(key, batch, seq_len, vocab):
     return jnp.where(follow, mapped, zipf).astype(jnp.int32)
 
 
+def _step_key(cfg: DataConfig, step: int):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), cfg.shard_index
+    )
+
+
 def synthetic_batch(cfg: DataConfig, step: int) -> dict:
     """Pure function of (seed, step, shard) → {tokens, labels}."""
     per_shard = cfg.global_batch // cfg.n_shards
-    key = jax.random.fold_in(
-        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), cfg.shard_index
-    )
-    toks = _markov_tokens(key, per_shard, cfg.seq_len + 1, cfg.vocab)
+    toks = _markov_tokens(_step_key(cfg, step), per_shard, cfg.seq_len + 1, cfg.vocab)
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
-class TokenFileDataset:
-    """Flat binary uint32 token file, memory-mapped, sharded by host."""
+def synthetic_image_batch(
+    cfg: DataConfig, step: int, *, chw: tuple, classes: int, noise: float = 0.25
+) -> dict:
+    """Step-addressed image classification batch for the CNN QAT loop:
+    pure function of (seed, step, shard) → {images (B, C, H, W) f32,
+    labels (B,) int32}.  Labels carry a learnable planted signal — the
+    class whose fixed random template correlates best with the image —
+    flipped to a uniform class with probability ``noise``, so the QAT loss
+    trajectory falls, not just wiggles."""
+    per_shard = cfg.global_batch // cfg.n_shards
+    k1, k2 = jax.random.split(_step_key(cfg, step))
+    images = jax.random.normal(k1, (per_shard,) + tuple(chw), jnp.float32)
+    # class = mixture of a planted linear signal and label noise
+    c, h, w = chw
+    probe = jax.random.normal(jax.random.PRNGKey(cfg.seed + 1), (classes, c, h, w))
+    scores = jnp.einsum("bchw,kchw->bk", images, probe)
+    planted = jnp.argmax(scores, axis=-1)
+    rand = jax.random.randint(k2, (per_shard,), 0, classes)
+    take_noise = jax.random.bernoulli(k2, noise, (per_shard,))
+    labels = jnp.where(take_noise, rand, planted).astype(jnp.int32)
+    return {"images": images, "labels": labels}
 
-    def __init__(self, cfg: DataConfig):
-        assert cfg.path, "TokenFileDataset needs cfg.path"
+
+class TokenFileDataset:
+    """Flat binary uint32 token file, memory-mapped, sharded by host.
+
+    Construction validates the source (typed :class:`DataValidationError`
+    on an empty/truncated file — fewer tokens than one ``seq_len + 1``
+    sequence); :meth:`batch` retries transient ``OSError`` s (a flaky NFS
+    mount, an injected ``data_io`` fault) with capped backoff before
+    surfacing them."""
+
+    def __init__(
+        self,
+        cfg: DataConfig,
+        *,
+        retries: int = 3,
+        backoff_s: float = 0.05,
+        cap_s: float = 1.0,
+        sleep: Callable[[float], None] = time.sleep,
+        fault_hook: Optional[Callable[[int], None]] = None,
+    ):
+        if not cfg.path:
+            raise DataValidationError("TokenFileDataset needs cfg.path")
         self.cfg = cfg
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.cap_s = cap_s
+        self.sleep = sleep
+        self.fault_hook = fault_hook  # chaos: train.faults plan.on_data
         self.tokens = np.memmap(cfg.path, dtype=np.uint32, mode="r")
         self.n_seqs = len(self.tokens) // (cfg.seq_len + 1)
+        if self.n_seqs == 0:
+            raise DataValidationError(
+                f"empty/truncated token file {cfg.path}: {len(self.tokens)} "
+                f"tokens < one sequence of seq_len+1={cfg.seq_len + 1}"
+            )
 
-    def batch(self, step: int) -> dict:
+    def _read_rows(self, step: int) -> np.ndarray:
+        """One attempt at the step's row gather (the retried I/O unit)."""
+        if self.fault_hook is not None:
+            self.fault_hook(step)
         cfg = self.cfg
         per_shard = cfg.global_batch // cfg.n_shards
         rng = np.random.default_rng((cfg.seed, step, cfg.shard_index))
         idx = rng.integers(0, self.n_seqs, size=per_shard)
-        rows = np.stack(
+        return np.stack(
             [self.tokens[i * (cfg.seq_len + 1) : (i + 1) * (cfg.seq_len + 1)] for i in idx]
         ).astype(np.int32)
+
+    def batch(self, step: int) -> dict:
+        rows = retry_io(
+            lambda: self._read_rows(step),
+            retries=self.retries,
+            backoff_s=self.backoff_s,
+            cap_s=self.cap_s,
+            sleep=self.sleep,
+        )
         return {"tokens": jnp.asarray(rows[:, :-1]), "labels": jnp.asarray(rows[:, 1:])}
 
 

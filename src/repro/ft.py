@@ -6,12 +6,24 @@ host-side policies.  In this single-process container the same code runs
 with n_hosts=1 and is unit-tested with synthetic timing traces.
 
 * **Heartbeat / straggler detection**: per-step wall-times are all-gathered
-  (here: recorded); hosts slower than ``k × median`` over a sliding window
-  are flagged.  The launcher's response is configurable: log, re-shard
-  around the straggler (elastic restart), or abort-and-restore.
-* **Restart policy**: exponential-backoff supervisor around the train loop;
-  any exception triggers restore-from-latest-checkpoint, preserving the
-  deterministic data stream (data pipeline is a pure function of step).
+  (here: recorded — EVERY step, so medians are real, not log-step samples);
+  hosts slower than ``k × median`` over a sliding window are flagged.  The
+  launcher's response is configurable: log, re-shard around the straggler
+  (elastic restart), or abort-and-restore.
+* **Restart policy with failure classification**: the supervisor around the
+  train loop restores from the latest *valid* checkpoint on failure, but
+  first CLASSIFIES the failure (DESIGN.md §4).  Exceptions that identify
+  the failing step (a ``.step`` attribute — ``train.faults.SimulatedCrash``,
+  ``train.loop.NonFiniteEscalation``, or a :class:`StepFailure` wrapper)
+  build a failure signature ``(type, step)``: the SAME signature twice in a
+  row means restore-and-retry already ran the step again and it failed the
+  same way — the failure is *deterministic* (bad data, a bug, a poisoned
+  batch that survives the guard) and the supervisor **fails fast** with
+  :class:`DeterministicFailure` instead of burning the restart budget.
+  Everything else is treated as transient: exponential-backoff restart,
+  threading the exception's ``resume_step`` hint (when it carries one)
+  into the next ``loop_fn(resume_step)`` call so the loop re-enters at the
+  right checkpoint without re-resolving.
 """
 from __future__ import annotations
 
@@ -20,7 +32,39 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
-__all__ = ["StragglerDetector", "RestartPolicy", "Supervisor"]
+__all__ = [
+    "StragglerDetector",
+    "RestartPolicy",
+    "Supervisor",
+    "RestorableError",
+    "DeterministicFailure",
+    "StepFailure",
+]
+
+
+class RestorableError(RuntimeError):
+    """An error for which restore-from-checkpoint-and-continue is a
+    meaningful response (e.g. the non-finite guard's escalation after K
+    consecutive skipped steps: a transient numeric storm clears; a
+    deterministic one repeats at the same step and is then failed fast)."""
+
+
+class DeterministicFailure(RuntimeError):
+    """The same step failed the same way twice across a restore — restarting
+    again cannot help.  Raised by :class:`Supervisor` instead of burning the
+    remaining restart budget; chains the underlying exception."""
+
+
+class StepFailure(RuntimeError):
+    """Wrapper a train loop may raise to attach step/resume info to an
+    exception that has none: ``step`` is the failing step (classification
+    key), ``resume_step`` the checkpoint hint for the next attempt."""
+
+    def __init__(self, step: int, cause: BaseException, resume_step: Optional[int] = None):
+        super().__init__(f"step {step} failed: {cause!r}")
+        self.step = step
+        self.cause = cause
+        self.resume_step = resume_step
 
 
 @dataclasses.dataclass
@@ -69,11 +113,30 @@ class RestartPolicy:
             d *= self.backoff_mult
 
 
+def failure_signature(exc: BaseException) -> Optional[tuple]:
+    """``(type_name, step)`` when the exception identifies its failing step
+    (a ``.step`` attribute, including :class:`StepFailure` — which keys on
+    its *cause*'s type); None for stepless exceptions, which cannot be
+    distinguished across attempts and stay on the legacy transient path."""
+    step = getattr(exc, "step", None)
+    if step is None:
+        return None
+    cause = getattr(exc, "cause", None)
+    name = type(cause).__name__ if cause is not None else type(exc).__name__
+    return (name, int(step))
+
+
 class Supervisor:
     """Run ``loop_fn(resume_step) -> last_step`` under the restart policy.
 
     ``loop_fn`` must be restartable from a checkpoint (launch/train.py is:
-    it restores the latest manifest and the data stream is step-addressed).
+    it restores the latest *valid* manifest and the data stream is
+    step-addressed).  Failures are classified per :func:`failure_signature`:
+    a repeated same-step failure raises :class:`DeterministicFailure`
+    immediately; transient ones restart with backoff, threading the
+    exception's ``resume_step`` hint into the next attempt (None when the
+    exception carries none — the loop then re-resolves the newest valid
+    checkpoint itself).
     """
 
     def __init__(self, policy: RestartPolicy, *, sleep: Callable[[float], None] = time.sleep):
@@ -81,9 +144,11 @@ class Supervisor:
         self.sleep = sleep
         self.restarts = 0
         self.failures: list[str] = []
+        self.classified: list[tuple] = []  # (signature-or-None, verdict)
 
     def run(self, loop_fn: Callable[[Optional[int]], int], resume_step: Optional[int] = None) -> int:
         delays = self.policy.delays()
+        last_sig: Optional[tuple] = None
         while True:
             try:
                 return loop_fn(resume_step)
@@ -91,6 +156,16 @@ class Supervisor:
                 raise
             except Exception as e:  # noqa: BLE001 — supervisor boundary
                 self.failures.append(repr(e))
+                sig = failure_signature(e)
+                if sig is not None and sig == last_sig:
+                    self.classified.append((sig, "deterministic"))
+                    raise DeterministicFailure(
+                        f"step {sig[1]} failed twice with {sig[0]} across a "
+                        f"restore — deterministic, not restarting "
+                        f"(restarts so far: {self.restarts})"
+                    ) from e
+                self.classified.append((sig, "transient"))
+                last_sig = sig
                 try:
                     delay = next(delays)
                 except StopIteration:
@@ -100,4 +175,6 @@ class Supervisor:
                     ) from e
                 self.restarts += 1
                 self.sleep(delay)
-                resume_step = None  # loop_fn re-resolves latest checkpoint
+                # thread the failure's checkpoint hint through; loop_fn
+                # re-resolves the newest valid checkpoint when None
+                resume_step = getattr(e, "resume_step", None)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update", "cosine_lr",
-           "global_norm", "compress_grads"]
+           "global_norm", "compress_grads", "nonfinite_probe", "tree_select"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +71,32 @@ def global_norm(tree: Any) -> jax.Array:
         if jnp.issubdtype(x.dtype, jnp.floating)
     ]
     return jnp.sqrt(sum(leaves))
+
+
+def nonfinite_probe(loss: jax.Array, grads: Any) -> jax.Array:
+    """ONE fused finiteness check over loss + every floating grad leaf.
+
+    Returns a scalar bool: True iff the loss and *all* gradient elements are
+    finite.  The reduction is a single ``isfinite`` on one accumulated
+    scalar: each leaf contributes ``sum(g * 0)``, which is exactly ``0.0``
+    when the leaf is all-finite and NaN otherwise (``inf * 0`` and
+    ``nan * 0`` are both NaN in IEEE-754, and XLA does not strength-reduce
+    float ``x * 0``), so the whole tree folds into one probe scalar inside
+    the jitted step — no per-leaf host loop, no N boolean reductions
+    (mirrors the serve engine's fused per-tick guard, DESIGN.md §2.4/§4).
+    """
+    z = loss.astype(jnp.float32)
+    for g in jax.tree.leaves(grads):
+        if jnp.issubdtype(g.dtype, jnp.floating):
+            z = z + jnp.sum(g.astype(jnp.float32) * 0.0)
+    return jnp.isfinite(z)
+
+
+def tree_select(pred: jax.Array, on_true: Any, on_false: Any) -> Any:
+    """Per-leaf ``where(pred, a, b)`` — the skip path of the non-finite
+    guard: selecting the OLD leaves keeps params/opt_state bit-identical
+    (no arithmetic touches them, ``where`` copies the operand bits)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
 
 
 def adamw_update(

@@ -1,4 +1,17 @@
-"""train_step / eval_step factories: loss, grads, microbatching, QAT hook."""
+"""train_step / eval_step factories: loss, grads, microbatching, QAT hook.
+
+Every train step built here carries the **fused non-finite guard**
+(DESIGN.md §4): one ``isfinite`` reduction over loss + all grads folded into
+the jitted step (``optimizer.nonfinite_probe``).  A non-finite step *skips*
+the update — params and opt_state come back bit-identical (``tree_select``
+copies the old leaves; the optimizer's garbage outputs are discarded and the
+step counter does not advance) — and reports ``metrics["skipped"] == 1`` so
+the host loop (train/loop.py) can count skips and escalate after K
+consecutive ones.  ``batch["loss_scale"]`` (optional scalar) multiplies the
+loss *inside* the differentiated function — the mixed-precision loss-scaling
+hook, and the injection point train/faults.py uses to poison a step
+(NaN / overflow) without touching model code.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,10 +25,11 @@ from repro.models import api
 from repro.models.common import ShardCtx
 from repro.train import optimizer as opt
 
-__all__ = ["make_train_step", "make_eval_step"]
+__all__ = ["make_train_step", "make_eval_step", "make_cnn_train_step",
+           "cnn_qat_loss"]
 
 
-def _loss_fn(params, batch, cfg: ArchConfig, sctx: ShardCtx, model):
+def _loss_fn(params, batch, cfg: ArchConfig, sctx: ShardCtx, model, scale=None):
     kw = {}
     if "frontend_embeds" in batch:
         kw["frontend_embeds"] = batch["frontend_embeds"]
@@ -23,7 +37,30 @@ def _loss_fn(params, batch, cfg: ArchConfig, sctx: ShardCtx, model):
     loss = api.lm_loss(logits, batch["labels"], batch.get("loss_mask"))
     if aux.get("moe_load_balance") is not None and cfg.moe:
         loss = loss + 0.01 * aux["moe_load_balance"] / max(cfg.n_layers, 1)
+    if scale is not None:
+        loss = loss * scale  # inside the grad: a poisoned scale poisons grads
     return loss, aux
+
+
+def _guarded_update(params, opt_state, loss, grads, ocfg, *, guard: bool):
+    """AdamW + the fused non-finite guard: ONE probe scalar decides between
+    the updated tree and the bit-identical old one."""
+    new_p, new_s, metrics = opt.adamw_update(params, grads, opt_state, ocfg)
+    if not guard:
+        return new_p, new_s, dict(metrics, skipped=jnp.zeros((), jnp.int32))
+    ok = opt.nonfinite_probe(loss, grads)
+    params = opt.tree_select(ok, new_p, params)
+    opt_state = opt.tree_select(ok, new_s, opt_state)
+    metrics = dict(metrics, skipped=jnp.where(ok, 0, 1).astype(jnp.int32))
+    return params, opt_state, metrics
+
+
+def _split_scale(batch):
+    """Pop the optional scalar ``loss_scale`` out of the batch (it must not
+    ride the microbatch axis-0 slicing)."""
+    if "loss_scale" not in batch:
+        return batch, None
+    return {k: v for k, v in batch.items() if k != "loss_scale"}, batch["loss_scale"]
 
 
 def make_train_step(
@@ -33,20 +70,25 @@ def make_train_step(
     *,
     microbatches: int = 1,
     compress_grads_bins: int = 0,
+    guard_nonfinite: bool = True,
 ):
     """Returns train_step(params, opt_state, batch) → (params, opt_state, metrics).
 
     ``microbatches > 1`` accumulates gradients over sequential micro-batches
     (activation-memory relief at fixed global batch).  ``compress_grads_bins``
     applies the PASM-style dictionary compression to the gradient payload
-    before the optimizer (beyond-paper, DESIGN.md §4).
+    before the optimizer (beyond-paper, DESIGN.md §4).  ``guard_nonfinite``
+    (default on) folds the fused non-finite guard into the step: a NaN/inf
+    loss or gradient skips the update bit-exactly and sets
+    ``metrics["skipped"]``.
     """
     model = api.get_model(cfg)
 
     def train_step(params, opt_state, batch):
+        batch, scale = _split_scale(batch)
         if microbatches == 1:
             (loss, aux), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
-                params, batch, cfg, sctx, model
+                params, batch, cfg, sctx, model, scale
             )
         else:
             # python-unrolled accumulation: keeps every microbatch visible to
@@ -63,7 +105,7 @@ def make_train_step(
                     batch,
                 )
                 (l, _), g = jax.value_and_grad(_loss_fn, has_aux=True)(
-                    params, mb, cfg, sctx, model
+                    params, mb, cfg, sctx, model, scale
                 )
                 grads = jax.tree.map(jnp.add, grads, g)
                 loss = loss + l
@@ -72,7 +114,9 @@ def make_train_step(
             aux = {}
         if compress_grads_bins:
             grads = opt.compress_grads(grads, compress_grads_bins)
-        params, opt_state, metrics = opt.adamw_update(params, grads, opt_state, ocfg)
+        params, opt_state, metrics = _guarded_update(
+            params, opt_state, loss, grads, ocfg, guard=guard_nonfinite
+        )
         metrics = dict(metrics, loss=loss, **{k: v for k, v in aux.items()})
         return params, opt_state, metrics
 
@@ -87,3 +131,60 @@ def make_eval_step(cfg: ArchConfig, sctx: ShardCtx = ShardCtx()):
         return {"loss": loss, **aux}
 
     return eval_step
+
+
+# ---------------------------------------------------------------------------
+# CNN QAT: the AlexNet-family weight-shared training step (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def cnn_qat_loss(tree: dict, batch: dict, cfg, *, mesh=None, scale=None):
+    """Softmax cross-entropy through the STE-snapped conv stack.
+
+    ``tree = {"params": cnn dense masters, "codebooks": [per-layer dicts]}``
+    — both differentiable (``cnn.qat_forward``: masters get straight-through
+    grads, codebook entries the bin-summed grads of their assigned weights).
+    """
+    from repro.models import cnn
+
+    logits = cnn.qat_forward(
+        tree["params"], tree["codebooks"], batch["images"], cfg, mesh=mesh
+    )
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    loss = jnp.mean(nll)
+    if scale is not None:
+        loss = loss * scale
+    return loss
+
+
+def make_cnn_train_step(
+    cfg,
+    ocfg: opt.AdamWConfig,
+    *,
+    mesh=None,
+    guard_nonfinite: bool = True,
+) -> Callable:
+    """QAT train step for the conv stack: ``(tree, opt_state, batch) →
+    (tree, opt_state, metrics)`` where ``tree`` holds the dense masters AND
+    the per-layer codebooks (the trained dictionary — freeze with
+    ``cnn.qat_requantize`` for serving).
+
+    ``mesh=`` runs the forward sharded on the ``("data", "model")`` mesh
+    (``cnn.qat_forward(mesh=)`` — the conv layers and head run under
+    shard_map; the backward is jax's transpose of the same shard_map, the
+    explicit col2im path).  The fused non-finite guard and
+    ``batch["loss_scale"]`` behave exactly as in :func:`make_train_step`.
+    """
+
+    def train_step(tree, opt_state, batch):
+        batch, scale = _split_scale(batch)
+        loss, grads = jax.value_and_grad(cnn_qat_loss)(
+            tree, batch, cfg, mesh=mesh, scale=scale
+        )
+        tree, opt_state, metrics = _guarded_update(
+            tree, opt_state, loss, grads, ocfg, guard=guard_nonfinite
+        )
+        return tree, opt_state, dict(metrics, loss=loss)
+
+    return train_step

@@ -219,3 +219,90 @@ def test_file_dataset(tmp_path):
     assert b["tokens"].shape == (2, 16)
     b2 = ds.batch(0)
     np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(b2["tokens"]))
+
+
+# --------------------------------------------------------------------------
+# data validation + transient-I/O retry (DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+
+def test_data_config_rejects_indivisible_shards():
+    from repro.data.pipeline import DataValidationError
+
+    with pytest.raises(DataValidationError, match="divide evenly"):
+        DataConfig(global_batch=7, n_shards=2)
+    with pytest.raises(DataValidationError, match="shard_index"):
+        DataConfig(global_batch=8, n_shards=2, shard_index=2)
+    with pytest.raises(DataValidationError):
+        DataConfig(global_batch=0)
+
+
+def test_empty_token_file_rejected(tmp_path):
+    from repro.data.pipeline import DataValidationError
+
+    path = tmp_path / "tiny.bin"
+    write_token_file(str(path), np.arange(10, dtype=np.uint32))  # < seq_len+1
+    cfg = DataConfig(seed=0, vocab=200, seq_len=16, global_batch=2, path=str(path))
+    with pytest.raises(DataValidationError, match="empty/truncated"):
+        TokenFileDataset(cfg)
+    with pytest.raises(DataValidationError, match="cfg.path"):
+        TokenFileDataset(DataConfig(seq_len=16, global_batch=2))
+
+
+def test_token_file_batch_retries_transient_oserror(tmp_path):
+    toks = np.arange(17 * 4, dtype=np.uint32)
+    path = tmp_path / "tokens.bin"
+    write_token_file(str(path), toks)
+    cfg = DataConfig(seed=0, vocab=200, seq_len=16, global_batch=2, path=str(path))
+    fails = {"n": 2}
+
+    def hook(step):
+        if fails["n"]:
+            fails["n"] -= 1
+            raise OSError("flaky mount")
+
+    delays = []
+    ds = TokenFileDataset(cfg, backoff_s=0.05, cap_s=0.08, sleep=delays.append,
+                          fault_hook=hook)
+    with pytest.warns(RuntimeWarning, match="transient I/O"):
+        b = ds.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert delays == [0.05, 0.08]  # doubled then capped, zero wall clock
+    # reference content: identical to an unfaulted read of the same step
+    clean = TokenFileDataset(cfg).batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(clean["tokens"]))
+
+
+# --------------------------------------------------------------------------
+# gc vs in-flight background write (regression)
+# --------------------------------------------------------------------------
+
+
+def test_gc_never_deletes_pending_inflight_write(tmp_path, monkeypatch):
+    """After a fallback-restore the loop re-saves an OLDER step than stale
+    on-disk checkpoints; keep-last-k would sort the pending step into the
+    delete set.  Pin the worst interleaving — the background rename lands
+    before ``_gc`` scans — and assert the pending target survives."""
+    mgr = ck.CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):  # stale checkpoints newer than the resume point
+        ck.save(tmp_path, s, _tree())
+
+    orig_save = ck.save
+
+    def landed_before_gc(directory, step, tree, *, extra=None, background=False):
+        orig_save(directory, step, tree, extra=extra, background=False)
+        done = ck.BackgroundWriter(lambda: None)
+        done.start()
+        return done
+
+    monkeypatch.setattr(ck, "save", landed_before_gc)
+    mgr.save(4, _tree())  # the post-fallback re-save: older than 10/20/30
+    mgr.wait()
+    assert (tmp_path / "step_4").exists(), "gc deleted the in-flight checkpoint"
+    steps = ck.complete_steps(tmp_path)
+    assert 4 in steps and 30 in steps
+    # once the write is no longer pending, normal rotation applies again
+    mgr.save(40, _tree())
+    mgr.wait()
+    mgr._gc()
+    assert 4 not in ck.complete_steps(tmp_path)

@@ -1,0 +1,492 @@
+"""Training chaos suite (DESIGN.md §4): seeded faults, bit-exact invariants.
+
+The training counterpart of tests/test_serve_faults.py.  Everything here is
+driven by :class:`repro.train.faults.TrainFaultPlan` — seeded, step-keyed,
+zero wall clock — through the shared crash-safe loop
+(:func:`repro.train.loop.run_loop`), and the two §4 training invariants are
+asserted **bit-exactly** (``np.testing.assert_array_equal``, never allclose):
+
+* resume-after-crash reproduces the uninterrupted run's loss trajectory and
+  final params (step-addressed data + deterministic jitted step);
+* a poisoned step (NaN loss / overflow spike) leaves params and opt_state
+  bit-identical (the fused guard's ``where``-select skip path).
+
+Runs on 1 device normally; ci.sh reruns the whole file on 8 fake devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) where the
+mesh-gated tests additionally shard the conv stack over ``("data","model")``.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.alexnet_conv import CNNConfig
+from repro.core.conv import Conv2D
+from repro.data.pipeline import DataConfig, retry_io, synthetic_image_batch
+from repro.models import cnn
+from repro.train import optimizer as opt
+from repro.train import step as step_mod
+from repro.train.faults import SimulatedCrash, TrainFaultPlan, TrainFaultSpec
+from repro.train.loop import NonFiniteEscalation, run_loop
+
+# ---------------------------------------------------------------------------
+# tiny QAT stack: one conv layer, 8×8 images — real STE path, fast jit
+# ---------------------------------------------------------------------------
+
+TINY = CNNConfig(
+    name="tiny-qat",
+    in_chw=(1, 8, 8),
+    layers=(Conv2D(k=3, c_in=1, c_out=4, stride=1, relu=True),),
+    pools=(2,),
+    classes=4,
+    bins=4,
+)
+OCFG = opt.AdamWConfig(lr=1e-2, total_steps=64, warmup_steps=1)
+DCFG = DataConfig(seed=0, vocab=2, seq_len=1, global_batch=4)
+
+
+def batch_fn(step: int) -> dict:
+    return synthetic_image_batch(DCFG, step, chw=TINY.in_chw, classes=TINY.classes)
+
+
+def fresh_state():
+    params = cnn.init_params(TINY, jax.random.PRNGKey(0))
+    tree = {"params": params, "codebooks": cnn.qat_codebooks(params, TINY)}
+    return tree, opt.init_opt_state(tree)
+
+
+@pytest.fixture(scope="module")
+def tiny_step():
+    return jax.jit(step_mod.make_cnn_train_step(TINY, OCFG))
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# the fused guard: skip is bit-identical, escalation after K
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("poison", ["nan", "spike"])
+def test_guard_skips_poisoned_step_bit_identical(tiny_step, poison):
+    tree, opt_state = fresh_state()
+    scale = float("nan") if poison == "nan" else TrainFaultSpec("grad_spike").scale
+    batch = dict(batch_fn(0), loss_scale=jnp.float32(scale))
+    new_tree, new_opt, metrics = tiny_step(tree, opt_state, batch)
+    assert int(metrics["skipped"]) == 1
+    assert not np.isfinite(float(metrics["loss"]))
+    assert_trees_equal(new_tree, tree)
+    assert_trees_equal(new_opt, opt_state)
+    assert int(new_opt.step) == int(opt_state.step)  # counter did not advance
+
+
+def test_clean_step_updates_and_reports_not_skipped(tiny_step):
+    tree, opt_state = fresh_state()
+    new_tree, new_opt, metrics = tiny_step(tree, opt_state, batch_fn(0))
+    assert int(metrics["skipped"]) == 0
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt.step) == 1
+    before = jax.tree.leaves(tree)
+    after = jax.tree.leaves(new_tree)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(before, after))
+
+
+def test_guard_off_applies_poisoned_update():
+    step_fn = jax.jit(
+        step_mod.make_cnn_train_step(TINY, OCFG, guard_nonfinite=False)
+    )
+    tree, opt_state = fresh_state()
+    batch = dict(batch_fn(0), loss_scale=jnp.float32(float("nan")))
+    new_tree, _, metrics = step_fn(tree, opt_state, batch)
+    assert int(metrics["skipped"]) == 0
+    # without the guard the NaN propagates into the masters
+    leaves = jax.tree.leaves(new_tree["params"])
+    assert any(np.isnan(np.asarray(x)).any() for x in leaves)
+
+
+def test_lm_train_step_guard_skips_nan():
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.models.common import ShardCtx
+
+    cfg = get_config("qwen3-32b", smoke=True)
+    params = api.get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init_opt_state(params)
+    step_fn = jax.jit(step_mod.make_train_step(cfg, OCFG, ShardCtx()))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "loss_scale": jnp.float32(float("nan"))}
+    new_p, new_s, metrics = step_fn(params, opt_state, batch)
+    assert int(metrics["skipped"]) == 1
+    assert_trees_equal(new_p, params)
+    assert_trees_equal(new_s, opt_state)
+
+
+def test_escalates_after_k_consecutive_nonfinite(tiny_step):
+    plan = TrainFaultPlan([TrainFaultSpec("nan_loss", step=s) for s in (2, 3, 4)])
+    with pytest.raises(NonFiniteEscalation) as ei:
+        run_loop(tiny_step, fresh_state(), batch_fn, steps=10, faults=plan,
+                 max_consecutive_nonfinite=3)
+    assert ei.value.step == 4
+    assert ei.value.n_consecutive == 3
+    assert isinstance(ei.value, ft.RestorableError)
+
+
+def test_nonconsecutive_skips_do_not_escalate(tiny_step):
+    plan = TrainFaultPlan([TrainFaultSpec("nan_loss", step=s) for s in (1, 3, 5)])
+    res = run_loop(tiny_step, fresh_state(), batch_fn, steps=7, faults=plan,
+                   max_consecutive_nonfinite=3)
+    assert res.n_skipped == 3
+    assert res.last_step == 7
+
+
+def test_poisoned_step_loop_level_bit_identity(tiny_step):
+    """N steps with the last poisoned ≡ N-1 clean steps, bit-for-bit."""
+    n = 5
+    clean = run_loop(tiny_step, fresh_state(), batch_fn, steps=n - 1)
+    plan = TrainFaultPlan([TrainFaultSpec("nan_loss", step=n - 1)])
+    poisoned = run_loop(tiny_step, fresh_state(), batch_fn, steps=n, faults=plan)
+    assert poisoned.n_skipped == 1
+    assert not np.isfinite(poisoned.losses[n - 1])
+    assert_trees_equal(poisoned.state, clean.state)
+
+
+# ---------------------------------------------------------------------------
+# crash + restore: bit-exact resume under the supervisor
+# ---------------------------------------------------------------------------
+
+
+def _supervised_run(step_fn, plan, tmp, *, steps, ckpt_every, max_restarts=3):
+    """launch/train.py's loop shape in miniature; returns merged history."""
+    mgr = ckpt.CheckpointManager(tmp, keep=3)
+    losses: dict = {}
+    times: dict = {}
+    box = {"state": fresh_state(), "resumed_at": []}
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=max_restarts, backoff_s=0.0),
+                        sleep=lambda _d: None)
+
+    def loop(resume_step):
+        t, o = box["state"]
+        start = 0
+        if ckpt.latest_step(mgr.dir) is not None:
+            (t, o), man = mgr.restore_latest((t, o))
+            start = man["step"]
+            box["resumed_at"].append(start)
+        res = run_loop(step_fn, (t, o), batch_fn, steps=steps, start_step=start,
+                       mgr=mgr, ckpt_every=ckpt_every, faults=plan,
+                       losses=losses, step_times=times)
+        box["state"] = res.state
+        return res.last_step
+
+    last = sup.run(loop)
+    return last, box, losses, sup, mgr
+
+
+@pytest.mark.parametrize("seed", [1, 7])
+def test_resume_after_crash_bit_exact(tiny_step, tmp_path, seed):
+    steps = 8
+    ref = run_loop(tiny_step, fresh_state(), batch_fn, steps=steps)
+    # crash-only sampled plan: trajectory-preserving by construction
+    plan = TrainFaultPlan.sample(seed, n_steps=steps, n_nan=0, n_spike=0,
+                                 n_ckpt_io=0, n_data_io=0, n_crash=1)
+    assert plan.trajectory_preserving
+    last, box, losses, sup, _ = _supervised_run(
+        tiny_step, plan, tmp_path, steps=steps, ckpt_every=2
+    )
+    assert last == steps
+    assert sup.restarts == 1
+    assert [f[0] for f in plan.fired] == ["crash"]
+    assert set(losses) == set(ref.losses)
+    np.testing.assert_array_equal(
+        np.asarray([losses[s] for s in range(steps)]),
+        np.asarray([ref.losses[s] for s in range(steps)]),
+    )
+    assert_trees_equal(box["state"], ref.state)
+
+
+def test_resume_restores_older_checkpoint_and_recomputes(tiny_step, tmp_path):
+    # crash at 5: newest checkpoint is step 4 — steps 4 must be recomputed
+    plan = TrainFaultPlan([TrainFaultSpec("crash", step=5)])
+    last, box, losses, sup, _ = _supervised_run(
+        tiny_step, plan, tmp_path, steps=8, ckpt_every=2
+    )
+    assert last == 8
+    assert box["resumed_at"] == [4]
+
+
+def test_sampled_chaos_plan_completes_under_supervisor(tiny_step, tmp_path):
+    """The full fault menu at once: the run must still reach the last step."""
+    plan = TrainFaultPlan.sample(3, n_steps=10, n_slow=1, slow_delay_s=0.5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        last, box, losses, sup, _ = _supervised_run(
+            tiny_step, plan, tmp_path, steps=10, ckpt_every=2
+        )
+    assert last == 10
+    # crash/data_io/slow key on steps that are always visited; ckpt_io only
+    # fires when its sampled step is a save boundary, nan+spike can merge
+    assert {"crash", "data_io", "slow"} <= {f[0] for f in plan.fired}
+    assert set(losses) == set(range(10))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: CRC detection, fallback, gc-vs-inflight
+# ---------------------------------------------------------------------------
+
+
+def _flip_byte(path, offset_frac=0.5):
+    raw = bytearray(path.read_bytes())
+    raw[int(len(raw) * offset_frac)] ^= 0xFF
+    path.write_bytes(bytes(raw))
+
+
+def test_crc_verify_detects_byte_flip(tmp_path):
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(tmp_path, 1, tree)
+    _flip_byte(tmp_path / "step_1" / "shard_0.npz")
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(tmp_path, tree, step=1)
+
+
+@pytest.mark.parametrize("corruption", ["byte_flip", "truncate"])
+def test_fallback_to_newest_valid_checkpoint(tmp_path, corruption):
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(tmp_path, 1, jax.tree.map(lambda x: x + 1, tree))
+    ckpt.save(tmp_path, 2, jax.tree.map(lambda x: x + 2, tree))
+    shard = tmp_path / "step_2" / "shard_0.npz"
+    if corruption == "byte_flip":
+        _flip_byte(shard)
+    else:
+        shard.write_bytes(shard.read_bytes()[: len(shard.read_bytes()) // 2])
+    with pytest.warns(RuntimeWarning, match="failed integrity"):
+        restored, man = ckpt.restore(tmp_path, tree, fallback=True)
+    assert man["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]) + 1)
+    # without fallback the corruption surfaces
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(tmp_path, tree)
+
+
+def test_fallback_scans_past_multiple_corrupt_steps(tmp_path):
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    for s in (1, 2, 3):
+        ckpt.save(tmp_path, s, jax.tree.map(lambda x, s=s: x + s, tree))
+    _flip_byte(tmp_path / "step_3" / "shard_0.npz")
+    _flip_byte(tmp_path / "step_2" / "shard_0.npz")
+    with pytest.warns(RuntimeWarning):
+        restored, man = ckpt.restore(tmp_path, tree, fallback=True)
+    assert man["step"] == 1
+
+
+def test_all_corrupt_raises_corrupt_error(tmp_path):
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    for s in (1, 2):
+        ckpt.save(tmp_path, s, tree)
+        _flip_byte(tmp_path / f"step_{s}" / "shard_0.npz")
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore(tmp_path, tree, fallback=True)
+
+
+def test_manager_restore_latest_falls_back(tmp_path):
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    mgr = ckpt.CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, tree)
+    mgr.save(2, jax.tree.map(lambda x: x * 2, tree))
+    mgr.wait()
+    _flip_byte(tmp_path / "step_2" / "shard_0.npz")
+    with pytest.warns(RuntimeWarning):
+        restored, man = mgr.restore_latest(tree)
+    assert man["step"] == 1
+
+
+def test_ckpt_io_fault_warns_counts_and_training_continues(tiny_step, tmp_path):
+    plan = TrainFaultPlan([TrainFaultSpec("ckpt_io", step=2)])
+    with pytest.warns(RuntimeWarning, match="checkpoint save"):
+        res = run_loop(tiny_step, fresh_state(), batch_fn, steps=6,
+                       faults=plan, mgr=ckpt.CheckpointManager(tmp_path, keep=3),
+                       ckpt_every=2)
+    assert res.last_step == 6
+    assert res.n_ckpt_failures == 1
+    # the failed interval's save is missing; later intervals landed
+    assert ckpt.complete_steps(tmp_path) == [4, 6]
+
+
+# ---------------------------------------------------------------------------
+# data faults: retry absorption, exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_data_io_fault_absorbed_by_retry(tiny_step):
+    plan = TrainFaultPlan([TrainFaultSpec("data_io", step=1)])
+    with pytest.warns(RuntimeWarning, match="transient I/O"):
+        res = run_loop(tiny_step, fresh_state(), batch_fn, steps=3,
+                       faults=plan, io_sleep=lambda _d: None)
+    assert res.last_step == 3
+    assert plan.fired == [("data_io", 1, 1)]
+
+
+def test_data_io_fault_exhausts_retries(tiny_step):
+    # every attempt at step 1 fails (nth 1..5 > retries+1 attempts)
+    plan = TrainFaultPlan(
+        [TrainFaultSpec("data_io", step=1, nth=n) for n in range(1, 6)]
+    )
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(OSError):
+            run_loop(tiny_step, fresh_state(), batch_fn, steps=3,
+                     faults=plan, data_retries=2, io_sleep=lambda _d: None)
+
+
+def test_retry_io_backoff_schedule_capped():
+    delays = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 5:
+            raise OSError("flake")
+        return "ok"
+
+    with pytest.warns(RuntimeWarning):
+        out = retry_io(flaky, retries=4, backoff_s=0.1, cap_s=0.25,
+                       sleep=delays.append)
+    assert out == "ok"
+    assert delays == [0.1, 0.2, 0.25, 0.25]  # doubling, then capped
+
+
+# ---------------------------------------------------------------------------
+# slow faults + straggler detector; supervisor classification
+# ---------------------------------------------------------------------------
+
+
+def test_slow_fault_inflates_recorded_step_time_every_step(tiny_step):
+    plan = TrainFaultPlan([TrainFaultSpec("slow", step=2, delay_s=100.0)])
+    det = ft.StragglerDetector(n_hosts=1, window=8)
+    res = run_loop(tiny_step, fresh_state(), batch_fn, steps=4,
+                   faults=plan, detector=det)
+    assert res.step_times[2] > 100.0  # virtual stall, zero wall clock
+    assert len(det._times[0]) == 4  # recorded EVERY step, not just log steps
+
+
+def test_supervisor_deterministic_same_step_fails_fast():
+    calls = {"n": 0}
+
+    def loop(resume_step):
+        calls["n"] += 1
+        raise SimulatedCrash(7)  # same step, same type, every attempt
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=5, backoff_s=0.0),
+                        sleep=lambda _d: None)
+    with pytest.raises(ft.DeterministicFailure):
+        sup.run(loop)
+    assert calls["n"] == 2  # one restart burned, then fail-fast
+    assert sup.classified[-1] == (("SimulatedCrash", 7), "deterministic")
+
+
+def test_supervisor_transient_different_steps_keep_restarting():
+    calls = {"n": 0}
+
+    def loop(resume_step):
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise SimulatedCrash(calls["n"])  # a different step each time
+        return 42
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=5, backoff_s=0.0),
+                        sleep=lambda _d: None)
+    assert sup.run(loop) == 42
+    assert sup.restarts == 3
+
+
+def test_supervisor_threads_resume_step():
+    seen = []
+
+    def loop(resume_step):
+        seen.append(resume_step)
+        if len(seen) == 1:
+            raise NonFiniteEscalation(9, 3, resume_step=6)
+        return 10
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=2, backoff_s=0.0),
+                        sleep=lambda _d: None)
+    assert sup.run(loop) == 10
+    assert seen == [None, 6]
+
+
+def test_escalation_repeating_at_same_step_is_deterministic():
+    def loop(resume_step):
+        raise NonFiniteEscalation(9, 3, resume_step=6)
+
+    sup = ft.Supervisor(ft.RestartPolicy(max_restarts=5, backoff_s=0.0),
+                        sleep=lambda _d: None)
+    with pytest.raises(ft.DeterministicFailure):
+        sup.run(loop)
+    assert sup.restarts == 1
+
+
+# ---------------------------------------------------------------------------
+# plan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_sample_is_seed_deterministic():
+    a = TrainFaultPlan.sample(11, n_steps=50, n_slow=2, slow_delay_s=1.0)
+    b = TrainFaultPlan.sample(11, n_steps=50, n_slow=2, slow_delay_s=1.0)
+    assert a.faults == b.faults
+    c = TrainFaultPlan.sample(12, n_steps=50, n_slow=2, slow_delay_s=1.0)
+    assert a.faults != c.faults
+    assert all(1 <= f.step < 50 for f in a.faults)
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        TrainFaultSpec("segfault", step=1)
+
+
+# ---------------------------------------------------------------------------
+# sharded: the same invariants on the ("data", "model") mesh
+# ---------------------------------------------------------------------------
+
+needs_8 = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 (fake) devices"
+)
+
+
+@needs_8
+def test_sharded_guard_and_resume_bit_exact(tmp_path):
+    from repro.launch.mesh import make_conv_mesh
+
+    mesh = make_conv_mesh((4, 2))
+    step_fn = jax.jit(step_mod.make_cnn_train_step(TINY, OCFG, mesh=mesh))
+    steps = 6
+    ref = run_loop(step_fn, fresh_state(), batch_fn, steps=steps)
+    # poisoned step skips bit-identically under shard_map too
+    tree, opt_state = fresh_state()
+    batch = dict(batch_fn(0), loss_scale=jnp.float32(float("nan")))
+    new_tree, new_opt, metrics = step_fn(tree, opt_state, batch)
+    assert int(metrics["skipped"]) == 1
+    assert_trees_equal(new_tree, tree)
+    # crash + restore reproduces the sharded trajectory bit-exactly
+    plan = TrainFaultPlan([TrainFaultSpec("crash", step=4)])
+    last, box, losses, sup, _ = _supervised_run(
+        step_fn, plan, tmp_path, steps=steps, ckpt_every=2
+    )
+    assert last == steps
+    np.testing.assert_array_equal(
+        np.asarray([losses[s] for s in range(steps)]),
+        np.asarray([ref.losses[s] for s in range(steps)]),
+    )
+    assert_trees_equal(box["state"], ref.state)
